@@ -1,0 +1,119 @@
+"""§Perf hillclimbing driver: named experiment variants for the three
+chosen (arch x shape) pairs, each recording the full dry-run analysis to
+results/hillclimb.json.  EXPERIMENTS.md §Perf narrates the
+hypothesis -> change -> before/after -> confirmed/refuted chain over these
+entries.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair arctic_train --variant v1_chunked_ce
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair arctic_train --all
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+from repro.launch.dryrun import Profile, run_combo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.config import INPUT_SHAPES  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# The three hillclimb pairs (chosen from the 40-combo baseline table):
+#   arctic_train : worst roofline fraction (HBM 17.7x over budget,
+#                  memory term 87.8 s) — memory-dominant
+#   vlm_decode   : most collective-bound (coll 1.37 s vs mem 0.44 s,
+#                  involuntary resharding of the KV cache every step)
+#   jamba_train  : gradient all-reduce pathology (138.8 GB/chip payload) —
+#                  the communication-contention cost the paper itself
+#                  schedules around
+# ---------------------------------------------------------------------------
+
+PAIRS = {
+    "arctic_train": ("arctic_480b", "train_4k"),
+    "vlm_decode": ("llama32_vision_11b", "decode_32k"),
+    "jamba_train": ("jamba_v01_52b", "train_4k"),
+}
+
+# Variants: name -> Profile fields (the Profile carries every §Perf knob).
+VARIANTS = {
+    # naive starting point (paper has no sharding opinion; this is the
+    # "first thing one would write"): tensor-parallel, f32 moments, no remat
+    "v0_baseline": dict(strategy="tp", moment_dtype="float32", remat="none"),
+    # tuned profile as used in the 40-combo table
+    "v0_tuned": None,  # filled from dryrun.TUNED_PROFILES
+    # memory ladder
+    "v1_chunked_ce": dict(loss_impl="chunked"),
+    "v2_dots_remat": dict(remat="dots"),
+    "v3_capacity_1_0": dict(capacity_factor=1.0),
+    "v4_q_chunk_256": dict(q_chunk=256),
+    "v5_constrain_acts": dict(constrain_acts=True),
+    "v6_acts_plus_chunked_ce": dict(constrain_acts=True, loss_impl="chunked"),
+    # collective ladder
+    "c1_no_zero1": dict(strategy="tp"),
+    "c2_moments_bf16": dict(moment_dtype="bfloat16"),
+    "c3_fsdp": dict(strategy="fsdp"),
+    # decode ladder
+    "d1_seq_major_cache": dict(decode_cache_mode="seq"),
+    "d2_batch_only_cache": dict(decode_cache_mode="batch"),
+    "d3_constrained_attn": dict(decode_constrain=True),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--variant", nargs="+", default=None)
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import TUNED_PROFILES
+
+    arch, shape_name = PAIRS[args.pair]
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    tuned = TUNED_PROFILES[arch]
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for name in args.variant:
+        overrides = VARIANTS[name]
+        profile = tuned if overrides is None else dataclasses.replace(tuned, **overrides)
+        key = f"{args.pair}|{name}"
+        print(f"[hillclimb] {key}: profile={profile}", flush=True)
+        t0 = time.time()
+        try:
+            res = run_combo(arch, shape, mesh, profile, correct_scan=True)
+        except Exception as e:
+            res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-1500:]}
+        res["wall_s"] = round(time.time() - t0, 1)
+        results[key] = res
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        if res["status"] == "ok":
+            r = res["roofline"]
+            m = res["memory"]
+            print(
+                f"[hillclimb] {key}: compute={r['compute_s']:.3f}s "
+                f"mem={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+                f"dominant={r['dominant']} hbm={r['hbm_peak_frac']:.2f} "
+                f"temp={m['temp_bytes']/2**30:.1f}GiB useful={r['useful_flops_ratio']:.3f}",
+                flush=True,
+            )
+        else:
+            print(f"[hillclimb] {key}: {res['status']} {res.get('error','')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

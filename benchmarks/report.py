@@ -1,0 +1,117 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifact.
+
+    PYTHONPATH=src python -m benchmarks.report [--json results/dryrun.json]
+
+Prints the §Dry-run and §Roofline markdown tables; EXPERIMENTS.md embeds
+the output (regenerate after re-running the dry-run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024 or unit == "TB":
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TB"
+
+
+def recompute_rooflines(data: Dict, mesh: str = "single") -> Dict:
+    """Re-derive the roofline block from stored cost_corrected (keeps the
+    table consistent when the analytic MODEL_FLOPS model is refined after a
+    sweep)."""
+    from repro.launch.roofline import config_for_shape, roofline_terms
+    from repro.models.config import INPUT_SHAPES
+
+    chips = 256 if mesh == "single" else 512
+    for key, res in data.items():
+        if res.get("status") != "ok" or f"|{mesh}|" not in key:
+            continue
+        arch, shape_name, _, _ = key.split("|")
+        cfg = config_for_shape(arch, INPUT_SHAPES[shape_name])
+        res["roofline"] = roofline_terms(cfg, INPUT_SHAPES[shape_name], chips, res)
+    return data
+
+
+def render(data: Dict, mesh: str = "single", profile: str = "tuned") -> str:
+    data = recompute_rooflines(data, mesh)
+    rows = []
+    for key in sorted(data):
+        arch, shape, m, p = key.split("|")
+        if m != mesh or p != profile:
+            continue
+        res = data[key]
+        if res.get("status") == "skipped":
+            rows.append((arch, shape, "skipped", res.get("note", "")))
+        elif res.get("status") == "ok":
+            rows.append((arch, shape, "ok", res))
+        else:
+            rows.append((arch, shape, "ERROR", res.get("error", "")[:80]))
+
+    out = []
+    out.append(f"### Dry-run ({mesh}-pod mesh, profile={profile})\n")
+    out.append(
+        "| arch | shape | status | per-chip args | per-chip temp | HBM frac "
+        "| collectives (per-chip payload) | compile |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|")
+    for arch, shape, status, res in rows:
+        if status != "ok":
+            out.append(f"| {arch} | {shape} | {status} | — | — | — | {res} | — |")
+            continue
+        mem = res["memory"]
+        coll = res["collectives"]
+        kinds = ", ".join(
+            f"{k}:{fmt_bytes(v)}"
+            for k, v in coll.items()
+            if k not in ("total", "op_counts") and v > 0
+        ) or "none"
+        out.append(
+            f"| {arch} | {shape} | ok | {fmt_bytes(mem['argument_bytes'])} "
+            f"| {fmt_bytes(mem['temp_bytes'])} "
+            f"| {res['roofline']['hbm_peak_frac']:.2f} "
+            f"| {kinds} | {res.get('compile_s', '?')}s |"
+        )
+
+    out.append(f"\n### Roofline ({mesh}-pod, 256 chips, per step)\n")
+    out.append(
+        "| arch | shape | compute [s] | memory [s] | collective [s] | dominant "
+        "| MODEL_FLOPS | useful ratio | next move |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    moves = {
+        "compute": "raise arithmetic intensity / bigger per-chip batch",
+        "memory": "remat policy + fused attention (cut bytes accessed)",
+        "collective": "reshard (cut all-gathers), overlap collectives",
+    }
+    for arch, shape, status, res in rows:
+        if status != "ok":
+            continue
+        r = res["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['model_flops']:.3e} | {r['useful_flops_ratio']:.3f} "
+            f"| {moves[r['dominant']]} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--profile", default="tuned")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        data = json.load(f)
+    print(render(data, args.mesh, args.profile))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default scale is reduced so
+``python -m benchmarks.run`` completes in minutes on one CPU; pass
+``--full`` for the paper-scale 160-job/64-GPU configuration used in
+EXPERIMENTS.md (the headline numbers there come from --full runs).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table5 ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+from repro.core import (
+    ContentionParams,
+    PAPER_A,
+    PAPER_B,
+    allreduce_cost_terms,
+    fit_linear_cost,
+    paper_trace,
+    simulate,
+)
+from repro.core.contention import fit_contention_penalty, simulate_contention_sweep
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def trace_for(full: bool, seed: int = 0):
+    if full:
+        return paper_trace(seed=seed)
+    return paper_trace(seed=seed, n_jobs=64, min_iters=200, max_iters=1200)
+
+
+# ---------------------------------------------------------------------------
+# Table I — All-Reduce algorithm costs
+# ---------------------------------------------------------------------------
+
+
+def bench_table1(full: bool) -> None:
+    alpha, beta, gamma = 5e-5, 8e-10, 1e-10  # 10GbE-flavoured
+    m = 100e6
+    for alg in ("binary_tree", "recursive_doubling", "recursive_halving_doubling", "ring"):
+        a, b = allreduce_cost_terms(alg, 16, alpha, beta, gamma)
+        t = (a + b * m) * 1e6
+        emit(f"table1/{alg}", t, f"a={a:.3e};b={b:.3e}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2(a) — single All-Reduce cost model fit
+# ---------------------------------------------------------------------------
+
+
+def bench_fig2a(full: bool) -> None:
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    ms = np.linspace(1e6, 500e6, 60)
+    ts = PAPER_A + PAPER_B * ms
+    ts = ts * (1 + rng.normal(0, 0.02, ts.shape))  # 2% measurement noise
+    t0 = time.time()
+    a, b = fit_linear_cost(ms, ts)
+    dt = (time.time() - t0) * 1e6
+    emit(
+        "fig2a/fit",
+        dt,
+        f"a={a:.3e}(paper {PAPER_A:.3e});b={b:.3e}(paper {PAPER_B:.3e})",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2(b) — k-way contention sweep
+# ---------------------------------------------------------------------------
+
+
+def bench_fig2b(full: bool) -> None:
+    p = ContentionParams()
+    m = 100e6
+    times = simulate_contention_sweep(p, m, 8)
+    ideal_share = [(p.a + k * p.b * m) for k in range(1, 9)]
+    for k, (t, ideal) in enumerate(zip(times, ideal_share), start=1):
+        eff = ideal / t
+        emit(f"fig2b/k={k}", t * 1e6, f"bandwidth_efficiency={eff:.3f}")
+    import numpy as np
+
+    eta = fit_contention_penalty(np.arange(1, 9), times, m, p.a, p.b)
+    emit("fig2b/eta_refit", 0.0, f"eta={eta:.3e}(truth {p.eta:.3e})")
+
+
+# ---------------------------------------------------------------------------
+# Table IV / Fig. 4 — placement comparison under Ada-SRSF
+# ---------------------------------------------------------------------------
+
+
+def bench_table4(full: bool) -> None:
+    jobs = trace_for(full)
+    for placement in ("rand", "ff", "ls", "lwf"):
+        t0 = time.time()
+        res = simulate(jobs, placement=placement, kappa=1, comm="ada")
+        dt = (time.time() - t0) * 1e6
+        emit(
+            f"table4/{placement}",
+            dt,
+            f"avg_jct={res.avg_jct():.1f};median={res.median_jct():.1f};"
+            f"p95={res.p95_jct():.1f};util={res.gpu_util:.4f};finished={len(res.jct)}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — kappa sweep for LWF
+# ---------------------------------------------------------------------------
+
+
+def bench_fig5(full: bool) -> None:
+    jobs = trace_for(full)
+    for kappa in (1, 2, 4, 8):
+        t0 = time.time()
+        res = simulate(jobs, placement="lwf", kappa=kappa, comm="ada")
+        dt = (time.time() - t0) * 1e6
+        emit(
+            f"fig5/kappa={kappa}",
+            dt,
+            f"avg_jct={res.avg_jct():.1f};util={res.gpu_util:.4f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Table V / Fig. 6 — communication scheduling comparison under LWF-1
+# ---------------------------------------------------------------------------
+
+
+def bench_table5(full: bool) -> None:
+    jobs = trace_for(full)
+    for comm in ("srsf1", "srsf2", "srsf3", "ada", "kway3"):
+        t0 = time.time()
+        res = simulate(jobs, placement="lwf", kappa=1, comm=comm)
+        dt = (time.time() - t0) * 1e6
+        tag = "table5" if comm != "kway3" else "beyond/kway"
+        emit(
+            f"{tag}/{comm}",
+            dt,
+            f"avg_jct={res.avg_jct():.1f};median={res.median_jct():.1f};"
+            f"p95={res.p95_jct():.1f};util={res.gpu_util:.4f};"
+            f"contended={res.comm_started_contended};finished={len(res.jct)}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: chunked / preemptible communication (future-work #3 adjacent)
+# ---------------------------------------------------------------------------
+
+
+def bench_chunked(full: bool) -> None:
+    """Contention-heavy scenario: many multi-server jobs share few servers;
+    chunking lets short messages preempt long in-flight transfers."""
+    from repro.core.cluster import TABLE_III, JobSpec
+
+    jobs = []
+    jid = 0
+    for wave in range(6 if full else 3):
+        for model, iters in (("vgg16", 400), ("resnet50", 400), ("resnet50", 400)):
+            jobs.append(JobSpec(jid, wave * 5.0, 8, iters, TABLE_III[model]))
+            jid += 1
+    for chunks in (1, 4, 8):
+        for comm in ("srsf1", "ada"):
+            t0 = time.time()
+            res = simulate(jobs, placement="lwf", comm=comm, comm_chunks=chunks,
+                           n_servers=4, gpus_per_server=4)
+            dt = (time.time() - t0) * 1e6
+            emit(
+                f"beyond/chunked{chunks}/{comm}",
+                dt,
+                f"avg_jct={res.avg_jct():.1f};p95={res.p95_jct():.1f};"
+                f"util={res.gpu_util:.4f};finished={len(res.jct)}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Roofline table (from the dry-run artifact)
+# ---------------------------------------------------------------------------
+
+
+def bench_roofline(full: bool) -> None:
+    path = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run repro.launch.dryrun first ({path})")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    for key, res in sorted(data.items()):
+        if res.get("status") != "ok" or "|single|" not in key:
+            continue
+        arch, shape, _, _ = key.split("|")
+        r = res["roofline"]
+        dom_t = r[f"{r['dominant']}_s"]
+        emit(
+            f"roofline/{arch}/{shape}",
+            dom_t * 1e6,
+            f"dominant={r['dominant']};compute={r['compute_s']:.4f};"
+            f"memory={r['memory_s']:.4f};collective={r['collective_s']:.4f};"
+            f"useful_ratio={r['useful_flops_ratio']:.3f};hbm_frac={r['hbm_peak_frac']:.2f}",
+        )
+
+
+BENCHES: Dict[str, Callable[[bool], None]] = {
+    "table1": bench_table1,
+    "fig2a": bench_fig2a,
+    "fig2b": bench_fig2b,
+    "table4": bench_table4,
+    "fig5": bench_fig5,
+    "table5": bench_table5,
+    "chunked": bench_chunked,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale 160-job trace")
+    ap.add_argument("--only", nargs="+", choices=list(BENCHES), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    names = args.only or list(BENCHES)
+    for name in names:
+        BENCHES[name](args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Reproduce the paper's evaluation (Tables IV & V) on the simulated
+16-server x 4-V100 / 10GbE cluster.
+
+    PYTHONPATH=src python examples/schedule_cluster.py [--full] [--seed 0]
+
+--full uses the exact paper workload (160 jobs over 20 min); the default
+is a scaled trace that finishes in ~1 min on CPU.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import paper_trace, simulate
+
+
+def fmt(res):
+    return (
+        f"util={res.gpu_util:6.1%}  avgJCT={res.avg_jct():8.1f}s  "
+        f"median={res.median_jct():7.1f}s  p95={res.p95_jct():8.1f}s"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    jobs = (
+        paper_trace(seed=args.seed)
+        if args.full
+        else paper_trace(seed=args.seed, n_jobs=64, min_iters=200, max_iters=1200)
+    )
+    print(f"workload: {len(jobs)} jobs "
+          f"({sum(j.n_gpus for j in jobs)} GPU-slots demanded, 64 GPUs)")
+
+    print("\n== Table IV: placement algorithms (with Ada-SRSF) ==")
+    for placement in ("rand", "ff", "ls", "lwf"):
+        t0 = time.time()
+        res = simulate(jobs, placement=placement, comm="ada")
+        name = "LWF-1" if placement == "lwf" else placement.upper()
+        print(f"  {name:6s} {fmt(res)}   [{time.time()-t0:.0f}s sim]")
+
+    print("\n== Table V: communication scheduling (with LWF-1) ==")
+    for comm in ("srsf1", "srsf2", "srsf3", "ada", "kway3"):
+        t0 = time.time()
+        res = simulate(jobs, placement="lwf", comm=comm)
+        name = {"ada": "Ada-SRSF", "kway3": "KWay-3 (ours)"}.get(comm, comm.upper())
+        print(f"  {name:14s} {fmt(res)}   [{time.time()-t0:.0f}s sim]")
+
+
+if __name__ == "__main__":
+    main()

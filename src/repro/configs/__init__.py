@@ -1,0 +1,52 @@
+"""Assigned architecture configs (public pool) + the paper's own workload.
+
+Each ``<id>.py`` exports ``CONFIG`` (the exact assigned hyper-parameters,
+with the source citation) and ``REDUCED`` (a <=512-d, 2-layer, <=4-expert
+variant of the same family for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "mamba2_130m",
+    "jamba_v01_52b",
+    "olmoe_1b_7b",
+    "seamless_m4t_large_v2",
+    "arctic_480b",
+    "llama32_vision_11b",
+    "phi4_mini_3_8b",
+    "gemma_7b",
+    "yi_9b",
+    "llama32_1b",
+)
+
+_ALIASES = {
+    "mamba2-130m": "mamba2_130m",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "arctic-480b": "arctic_480b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma-7b": "gemma_7b",
+    "yi-9b": "yi_9b",
+    "llama3.2-1b": "llama32_1b",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

@@ -1,0 +1,52 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168, 56 q-heads (GQA kv=8), MoE d_ff=4864 x 128 experts top-2,
+dense-residual FFN in parallel with the MoE (Arctic's dense-MoE hybrid),
+vocab=32000.
+
+Sharding note: 56 q-heads don't divide the 16-way model axis, so q-heads
+are padded to 64 (zero-init extra heads; their output-projection rows are
+zero so they contribute nothing).  Documented FLOP inflation 64/56 on the
+attention part only.  long_500k: SKIPPED — full-attention 4k-context model
+card (DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    vocab_size=32000,
+    n_heads=56,
+    padded_heads=64,
+    n_kv_heads=8,
+    d_ff=4864,       # dense-residual FFN width
+    moe_d_ff=4864,   # per-expert FFN width
+    act="swiglu",
+    n_experts=128,
+    experts_per_token=2,
+    dense_residual=True,
+    rope_theta=10000.0,
+    source="hf:Snowflake/snowflake-arctic-base (dense-MoE hybrid)",
+)
+
+REDUCED = ModelConfig(
+    name="arctic-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=128,
+    vocab_size=512,
+    n_heads=7,
+    padded_heads=8,
+    n_kv_heads=1,
+    d_ff=128,
+    moe_d_ff=128,
+    act="swiglu",
+    n_experts=4,
+    experts_per_token=2,
+    dense_residual=True,
+    source="reduced smoke variant",
+)

@@ -1,0 +1,64 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave + MoE
+[arXiv:2403.19887].
+
+32L d_model=4096, 32 q-heads (GQA kv=8), d_ff=14336, vocab=65536,
+MoE 16 experts top-2 on every other layer.  Layer pattern: one attention
+layer per 8-layer block (index 4 in the Jamba paper's figure; we use the
+same 1:7 ratio), MoE replaces the MLP on odd layer indices (16 MoE layers
+of 32).  SSM sub-layers are Mamba(-1 style in the paper; we use the SSD
+mixer shared with mamba2, state 16 -> we keep the assigned ssm_state=128
+hyper-parameterization of our SSD mixer).
+
+long_500k: runs — SSM state is O(1) and the 4 attention layers' 500k KV
+cache shards over the model axis.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    vocab_size=65536,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    act="swiglu",
+    n_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    block_len=8,
+    attn_index_in_block=4,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk=64,
+    rope_theta=10000.0,
+    source="arXiv:2403.19887 (Jamba), ai21labs/Jamba-v0.1",
+)
+
+REDUCED = ModelConfig(
+    name="jamba-reduced",
+    family="hybrid",
+    n_layers=8,  # one pattern block
+    d_model=128,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    act="swiglu",
+    n_experts=4,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    block_len=8,
+    attn_index_in_block=4,
+    ssm_state=32,
+    ssm_head_dim=32,
+    ssm_expand=2,
+    ssm_chunk=16,
+    source="reduced smoke variant",
+)

@@ -1,0 +1,42 @@
+"""llama3.2-1b [dense] — small llama3 [hf:meta-llama/Llama-3.2-1B].
+
+16L d_model=2048, 32 heads (GQA kv=8, head_dim=64), d_ff=8192,
+vocab=128256.  long_500k: runs via the sliding-window variant (window
+8192) (DESIGN.md §Arch-applicability).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    vocab_size=128256,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    act="swiglu",
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-3.2-1B (+ arXiv:2407.21783)",
+)
+
+LONG_CONTEXT_VARIANT = dataclasses.replace(
+    CONFIG, name=CONFIG.name + "-swa8k", sliding_window=8192
+)
+
+REDUCED = ModelConfig(
+    name="llama32-1b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    vocab_size=512,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    act="swiglu",
+    rope_theta=500000.0,
+    source="reduced smoke variant",
+)

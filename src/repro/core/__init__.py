@@ -1,0 +1,55 @@
+"""Core of the paper's contribution: communication-contention-aware
+scheduling of multiple DDL training jobs (LWF-kappa, AdaDUAL, Ada-SRSF)."""
+
+from repro.core.adadual import (
+    adadual_should_start,
+    kway_adadual_should_start,
+    simulate_task_set,
+    simulate_two_tasks,
+)
+from repro.core.cluster import TABLE_III, Cluster, JobSpec, ModelProfile
+from repro.core.contention import (
+    DEFAULT_ETA,
+    PAPER_A,
+    PAPER_B,
+    ContentionParams,
+    allreduce_cost_terms,
+    fit_linear_cost,
+)
+from repro.core.placement import PlacementPolicy
+from repro.core.simulator import (
+    AdaDual,
+    ClusterSimulator,
+    CommPolicy,
+    KWayAdaDual,
+    SimResult,
+    SrsfN,
+    simulate,
+)
+from repro.core.trace import paper_trace
+
+__all__ = [
+    "adadual_should_start",
+    "kway_adadual_should_start",
+    "simulate_task_set",
+    "simulate_two_tasks",
+    "TABLE_III",
+    "Cluster",
+    "JobSpec",
+    "ModelProfile",
+    "DEFAULT_ETA",
+    "PAPER_A",
+    "PAPER_B",
+    "ContentionParams",
+    "allreduce_cost_terms",
+    "fit_linear_cost",
+    "PlacementPolicy",
+    "AdaDual",
+    "ClusterSimulator",
+    "CommPolicy",
+    "KWayAdaDual",
+    "SimResult",
+    "SrsfN",
+    "simulate",
+    "paper_trace",
+]

@@ -1,0 +1,116 @@
+"""DAG representation of DDL training jobs (paper Section III, Fig. 3).
+
+A job running ``I_k`` iterations on ``n`` workers is the chain of ``I_k``
+child DAGs; child DAG ``i`` contains, per worker ``w``:
+
+    f(i, w)  ->  b(i, w)  ->  c(i)          (c only if the job spans servers)
+
+with ``c(i)`` a synchronization barrier over all workers' ``b(i, w)`` and
+``c(i) -> f(i+1, w)`` for every worker.  A virtual global entry precedes all
+jobs' first forwards and a virtual global exit follows all last all-reduces
+(Fig. 3(b)).
+
+The event-driven simulator does not literally walk this graph (it exploits
+the chain structure for speed); this module provides the *formal* object so
+tests can assert that any simulated execution trace is a valid linear
+extension of the DAG — i.e. the fast simulator and the formal model agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+
+class TaskKind(enum.Enum):
+    FORWARD = "f"
+    BACKWARD = "b"
+    ALLREDUCE = "c"
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskRef:
+    """tau^k_{l,m}: task of job ``job_id``, iteration ``iteration``; compute
+    tasks carry the worker index, the all-reduce carries worker=-1."""
+
+    job_id: int
+    iteration: int
+    kind: TaskKind
+    worker: int = -1
+
+    def __str__(self) -> str:
+        w = "" if self.worker < 0 else f"w{self.worker}"
+        return f"J{self.job_id}.i{self.iteration}.{self.kind.value}{w}"
+
+
+@dataclasses.dataclass(frozen=True)
+class JobDag:
+    job_id: int
+    n_workers: int
+    iterations: int
+    has_comm: bool
+
+    def tasks(self) -> Iterator[TaskRef]:
+        for i in range(self.iterations):
+            for w in range(self.n_workers):
+                yield TaskRef(self.job_id, i, TaskKind.FORWARD, w)
+                yield TaskRef(self.job_id, i, TaskKind.BACKWARD, w)
+            if self.has_comm:
+                yield TaskRef(self.job_id, i, TaskKind.ALLREDUCE)
+
+    def predecessors(self, task: TaskRef) -> List[TaskRef]:
+        """Direct predecessors of ``task`` within this job's DAG."""
+        i, w = task.iteration, task.worker
+        if task.kind is TaskKind.FORWARD:
+            if i == 0:
+                return []
+            if self.has_comm:
+                return [TaskRef(self.job_id, i - 1, TaskKind.ALLREDUCE)]
+            # without a comm task, the barrier degenerates to: next forward
+            # of worker w follows its own backward (workers run free).
+            return [TaskRef(self.job_id, i - 1, TaskKind.BACKWARD, w)]
+        if task.kind is TaskKind.BACKWARD:
+            return [TaskRef(self.job_id, i, TaskKind.FORWARD, w)]
+        # ALLREDUCE: barrier over all workers' backwards of this iteration.
+        return [
+            TaskRef(self.job_id, i, TaskKind.BACKWARD, ww)
+            for ww in range(self.n_workers)
+        ]
+
+    def n_tasks(self) -> int:
+        per_iter = 2 * self.n_workers + (1 if self.has_comm else 0)
+        return per_iter * self.iterations
+
+
+def build_job_dag(job_id: int, n_workers: int, iterations: int, spans_servers: bool) -> JobDag:
+    return JobDag(job_id, n_workers, iterations, has_comm=spans_servers)
+
+
+def validate_schedule(
+    dag: JobDag, intervals: Dict[TaskRef, Tuple[float, float]], eps: float = 1e-9
+) -> Tuple[bool, str]:
+    """Check a simulated schedule against the formal DAG: every task of the
+    DAG must appear exactly once with ``start <= end``, and each task may
+    start only after *all* its predecessors have ended (precedence edges of
+    Fig. 3, including the all-reduce barrier).
+
+    Used by the property tests to certify that the fast chain-structured
+    simulator executes a valid schedule of the formal DAG.
+    """
+    expected = set(dag.tasks())
+    got = set(intervals)
+    if got != expected:
+        missing = expected - got
+        extra = got - expected
+        return False, (
+            f"task set mismatch: missing={[str(t) for t in list(missing)[:3]]} "
+            f"extra={[str(t) for t in list(extra)[:3]]}"
+        )
+    for t, (start, end) in intervals.items():
+        if end < start - eps:
+            return False, f"task {t} ends before it starts"
+        for p in dag.predecessors(t):
+            if intervals[p][1] > start + eps:
+                return False, f"edge violated: {p} (end {intervals[p][1]}) !<= {t} (start {start})"
+    return True, "ok"

@@ -1,0 +1,268 @@
+"""Vectorized JAX cluster simulator — Monte-Carlo over traces in one jit.
+
+Beyond-paper extension #3 (DESIGN.md §7): a fixed-timestep, fully-batched
+("fluid") approximation of the Ada-SRSF dynamics in pure ``jax.lax``
+control flow, ``vmap``-able over seeds, so JCT confidence intervals over
+dozens of sampled workloads cost one XLA compilation and one device launch.
+
+Approximations vs the exact event-driven simulator (``core/simulator.py``),
+all documented and tested for *qualitative* agreement:
+
+* gang placement — a job occupies whole GPUs exclusively (no task-level
+  time-sharing of one GPU between resident jobs);
+* placement is consolidation-greedy (LWF-kappa with kappa=1 semantics):
+  a job takes GPUs from the least-loaded servers, whole servers first;
+* time advances in fixed dt steps; compute/comm remainders drain linearly
+  (the Eq. 5 rate model is exact within a step as long as the active comm
+  set is unchanged, so dt only quantizes *transition* times);
+* at most one queued job is admitted per step (admission is rare relative
+  to dt, so this rarely binds).
+
+State is a struct-of-arrays over jobs plus per-server occupancy; policies
+(SRSF(n) / AdaDUAL threshold) are branchless masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cluster import TABLE_III
+from repro.core.contention import ContentionParams
+from repro.core.trace import PAPER_GPU_DISTRIBUTION
+
+# job phases
+QUEUED, COMPUTE, COMM, DONE = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxSimConfig:
+    n_servers: int = 16
+    gpus_per_server: int = 4
+    dt: float = 0.05          # [s]
+    max_steps: int = 400_000  # dt * max_steps = simulated horizon cap
+    policy: str = "ada"       # ada | srsf1 | srsf2 | srsf3
+    a: float = ContentionParams().a
+    b: float = ContentionParams().b
+    eta: float = ContentionParams().eta
+    dual_threshold: float = ContentionParams().dual_threshold
+
+
+def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
+                 min_iters: int = 1000, max_iters: int = 6000) -> Dict[str, jnp.ndarray]:
+    """Paper-distribution workload as arrays (vmap-able over keys)."""
+    models = list(TABLE_III.values())
+    t_iter = jnp.asarray([m.t_iter_compute for m in models])
+    sizes = jnp.asarray([m.size_bytes for m in models])
+
+    gpu_choices, probs = [], []
+    total = sum(c for _, c in PAPER_GPU_DISTRIBUTION)
+    for g, c in PAPER_GPU_DISTRIBUTION:
+        gpu_choices.append(g)
+        probs.append(c / total)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    arrival = jnp.floor(jax.random.uniform(k1, (n_jobs,), minval=1.0, maxval=horizon))
+    iters = jax.random.randint(k2, (n_jobs,), min_iters, max_iters + 1)
+    midx = jax.random.randint(k3, (n_jobs,), 0, len(models))
+    gidx = jax.random.choice(
+        k4, jnp.asarray(gpu_choices), (n_jobs,), p=jnp.asarray(probs)
+    )
+    return {
+        "arrival": arrival,
+        "iters": iters.astype(jnp.float32),
+        "t_iter": t_iter[midx],
+        "msg_bytes": sizes[midx],
+        "n_gpus": gidx.astype(jnp.int32),
+    }
+
+
+def _place(free: jnp.ndarray, n_gpus: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Consolidation-greedy placement: take GPUs from servers sorted by
+    free count (desc).  Returns (per-server takes, feasible flag)."""
+    order = jnp.argsort(-free)
+    sorted_free = free[order]
+    cum = jnp.cumsum(sorted_free)
+    want = n_gpus.astype(free.dtype)
+    take_sorted = jnp.clip(want - (cum - sorted_free), 0, sorted_free)
+    feasible = cum[-1] >= want
+    take = jnp.zeros_like(free).at[order].set(take_sorted)
+    return jnp.where(feasible, take, 0), feasible
+
+
+def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
+    n_jobs = trace["arrival"].shape[0]
+    ns = cfg.n_servers
+    policy_maxk = {"srsf1": 1, "srsf2": 2, "srsf3": 3}.get(cfg.policy, 2)
+    use_ada = cfg.policy == "ada"
+
+    comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free seconds
+    has_comm0 = trace["n_gpus"] > cfg.gpus_per_server  # spans servers iff > per-server
+
+    state = {
+        "phase": jnp.full((n_jobs,), QUEUED, jnp.int32),
+        "iters_left": trace["iters"],
+        "rem": jnp.zeros((n_jobs,), jnp.float32),       # remaining sec/bytes-time in phase
+        "servers": jnp.zeros((n_jobs, ns), jnp.int32),  # GPUs taken per server
+        "finish": jnp.full((n_jobs,), jnp.inf, jnp.float32),
+        "free": jnp.full((ns,), float(cfg.gpus_per_server), jnp.float32),
+        "t": jnp.asarray(0.0, jnp.float32),
+        "n_done": jnp.asarray(0, jnp.int32),
+    }
+
+    def srsf_key(st):
+        rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
+        return jnp.where(st["phase"] == QUEUED, rem_service, jnp.inf)
+
+    def step(st, _):
+        t = st["t"] + cfg.dt
+        phase, rem = st["phase"], st["rem"]
+
+        # ---- admission: smallest-SRSF arrived job that FITS (no head-of-
+        # line blocking: infeasible jobs don't stall smaller ones) ---------
+        fits = trace["n_gpus"].astype(jnp.float32) <= st["free"].sum()
+        arrived = (phase == QUEUED) & (trace["arrival"] <= t) & fits
+        pick = jnp.argmin(jnp.where(arrived, srsf_key(st), jnp.inf))
+        can_pick = arrived[pick]
+        take, feasible = _place(st["free"], trace["n_gpus"][pick])
+        admit = can_pick & feasible
+        free = st["free"] - jnp.where(admit, take, 0)
+        servers = st["servers"].at[pick].set(
+            jnp.where(admit, take.astype(jnp.int32), st["servers"][pick])
+        )
+        phase = phase.at[pick].set(jnp.where(admit, COMPUTE, phase[pick]))
+        rem = rem.at[pick].set(jnp.where(admit, trace["t_iter"][pick], rem[pick]))
+
+        spans = (servers > 0).sum(axis=1) > 1
+
+        # ---- communication contention state --------------------------------
+        in_comm = phase == COMM
+        active = in_comm & (rem > 0)
+        comm_on_server = ((servers > 0) & active[:, None]).astype(jnp.int32).sum(0)  # (ns,)
+        k_per_job = jnp.max(
+            jnp.where(servers > 0, comm_on_server[None, :], 0), axis=1
+        )
+        k_per_job = jnp.maximum(k_per_job, 1)
+
+        # ---- drain compute ---------------------------------------------------
+        is_comp = phase == COMPUTE
+        rem = jnp.where(is_comp, rem - cfg.dt, rem)
+        comp_done = is_comp & (rem <= 0)
+        # -> job with comm enters COMM (waiting: rem = full message time);
+        #    single-server job completes the iteration directly.
+        to_comm = comp_done & spans
+        iter_done_direct = comp_done & ~spans
+
+        # ---- comm gating (on jobs in COMM with rem == full, i.e. waiting) ---
+        # We mark "waiting" with rem > 0 and a parallel flag: started jobs
+        # carry negative sign-free bookkeeping via started mask array.
+        started = st["started"]
+        waiting = in_comm & ~started
+        # contention the job would see if it started now
+        k_would = jnp.max(
+            jnp.where(servers > 0, comm_on_server[None, :] + 1, 0), axis=1
+        )
+        if use_ada:
+            # AdaDUAL: start if no contention, or 2-way against one old task
+            # whose remaining bytes pass the threshold test.  Remaining bytes
+            # of the single most-contended overlapping old task ~ min rem of
+            # overlapping started jobs (conservative).
+            overlap = (servers @ servers.T) > 0  # (jobs, jobs) share a server
+            old_rem = jnp.where(
+                overlap & active[None, :], rem[None, :], jnp.inf
+            ).min(axis=1)
+            my_bytes_time = comm_total  # proportional to M_new
+            ok2 = (k_would <= 2) & (my_bytes_time / jnp.maximum(old_rem, 1e-9)
+                                     < cfg.dual_threshold)
+            may_start = (k_would <= 1) | ok2
+        else:
+            may_start = k_would <= policy_maxk
+        start_now = waiting & may_start
+        started = started | start_now
+        # ---- drain comm (started only), at Eq.5 rate ------------------------
+        # rem for comm jobs is stored in contention-free seconds; a k-way
+        # contended job drains dt * rate_ratio where
+        # rate_ratio = b / (k*b + (k-1)*eta).
+        ratio = cfg.b / (k_per_job * cfg.b + (k_per_job - 1) * cfg.eta)
+        draining = in_comm & started
+        rem = jnp.where(draining, rem - cfg.dt * ratio, rem)
+        comm_done = draining & (rem <= 0)
+
+        # ---- iteration bookkeeping ------------------------------------------
+        iter_done = iter_done_direct | comm_done
+        iters_left = st["iters_left"] - iter_done.astype(jnp.float32)
+        job_done = iter_done & (iters_left <= 0)
+        next_compute = iter_done & ~job_done
+
+        phase = jnp.where(to_comm, COMM, phase)
+        rem = jnp.where(to_comm, comm_total, rem)
+        started = started & ~(to_comm | iter_done)
+        phase = jnp.where(next_compute, COMPUTE, phase)
+        rem = jnp.where(next_compute, trace["t_iter"], rem)
+        phase = jnp.where(job_done, DONE, phase)
+        finish = jnp.where(job_done, t, st["finish"])
+        free = free + (servers * job_done[:, None].astype(jnp.int32)).sum(0)
+        servers = jnp.where(job_done[:, None], 0, servers)
+
+        new_state = {
+            "phase": phase,
+            "iters_left": iters_left,
+            "rem": rem,
+            "servers": servers,
+            "finish": finish,
+            "free": free,
+            "t": t,
+            "n_done": (phase == DONE).sum().astype(jnp.int32),
+            "started": started,
+        }
+        return new_state, None
+
+    state["started"] = jnp.zeros((n_jobs,), bool)
+
+    def cond(carry):
+        st, i = carry
+        return (st["n_done"] < n_jobs) & (i < cfg.max_steps)
+
+    def body(carry):
+        st, i = carry
+        st, _ = step(st, None)
+        return (st, i + 1)
+
+    final, _ = jax.lax.while_loop(cond, body, (state, jnp.asarray(0)))
+    jct = final["finish"] - trace["arrival"]
+    return {"jct": jct, "finished": final["phase"] == DONE, "makespan": final["t"]}
+
+
+@functools.partial(jax.jit, static_argnames=("n_jobs", "cfg"))
+def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
+    trace = sample_trace(key, n_jobs)
+    return _simulate(trace, cfg)
+
+
+def monte_carlo_jct(
+    n_seeds: int = 16,
+    n_jobs: int = 64,
+    policy: str = "ada",
+    base_seed: int = 0,
+    **cfg_kw,
+) -> Dict[str, np.ndarray]:
+    """vmap over seeds; returns mean/std of avg-JCT across sampled traces."""
+    cfg = JaxSimConfig(policy=policy, **cfg_kw)
+    keys = jax.random.split(jax.random.PRNGKey(base_seed), n_seeds)
+    out = jax.jit(
+        jax.vmap(lambda k: simulate_one(k, n_jobs, cfg)),
+        static_argnames=(),
+    )(keys)
+    jct = np.asarray(out["jct"])
+    fin = np.asarray(out["finished"])
+    avg = np.array([jct[i][fin[i]].mean() for i in range(n_seeds)])
+    return {
+        "avg_jct_mean": float(avg.mean()),
+        "avg_jct_std": float(avg.std()),
+        "per_seed": avg,
+        "finished_frac": float(fin.mean()),
+    }

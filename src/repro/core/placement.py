@@ -1,0 +1,101 @@
+"""Job placement algorithms (paper Section IV-A, Algorithm 1).
+
+Given a job needing ``n`` GPUs and the current cluster state, pick the GPU
+set G(J):
+
+* ``RAND``  — uniformly random among memory-feasible GPUs (baseline).
+* ``FF``    — First-Fit: first ``n`` feasible GPUs in (server, gpu) order.
+* ``LS``    — List-Scheduling: top-``n`` feasible GPUs by least workload L_g.
+* ``LWF-k`` — the paper's algorithm:   n <= kappa  ->  same as LS;
+              n  > kappa  ->  sort *servers* by total workload L_S and take
+              feasible GPUs server-by-server (consolidation), Alg. 1 lines
+              10-21.
+
+All functions return a list of GpuIds (len == n) or ``None`` when the job
+cannot be admitted (Alg. 1 line 22 returns the empty set).  They never
+mutate the cluster — the simulator commits via ``Cluster.place``.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+from repro.core.cluster import Cluster, GpuId, GpuState, JobSpec
+
+
+def _feasible(cluster: Cluster, job: JobSpec) -> List[GpuState]:
+    return cluster.available_gpus(job.model.mem_mb)
+
+
+def place_random(cluster: Cluster, job: JobSpec, rng: random.Random) -> Optional[List[GpuId]]:
+    avail = _feasible(cluster, job)
+    if len(avail) < job.n_gpus:
+        return None
+    return [g.gpu_id for g in rng.sample(avail, job.n_gpus)]
+
+
+def place_first_fit(cluster: Cluster, job: JobSpec) -> Optional[List[GpuId]]:
+    avail = sorted(_feasible(cluster, job), key=lambda g: g.gpu_id)
+    if len(avail) < job.n_gpus:
+        return None
+    return [g.gpu_id for g in avail[: job.n_gpus]]
+
+
+def place_list_scheduling(cluster: Cluster, job: JobSpec) -> Optional[List[GpuId]]:
+    avail = _feasible(cluster, job)
+    if len(avail) < job.n_gpus:
+        return None
+    avail.sort(key=lambda g: (g.workload, g.gpu_id))
+    return [g.gpu_id for g in avail[: job.n_gpus]]
+
+
+def place_lwf(cluster: Cluster, job: JobSpec, kappa: int = 1) -> Optional[List[GpuId]]:
+    """Algorithm 1 (LWF-kappa)."""
+    n = job.n_gpus
+    if n <= kappa:
+        # Lines 2-9: global least-workload-first (identical to LS).
+        return place_list_scheduling(cluster, job)
+    # Lines 10-21: consolidate — least-loaded servers first, then their
+    # feasible GPUs sorted by workload, appended server by server.
+    servers = sorted(
+        range(cluster.n_servers), key=lambda s: (cluster.server_workload(s), s)
+    )
+    ordered: List[GpuState] = []
+    for s in servers:
+        gpus = [
+            g
+            for g in cluster.gpus_of_server(s)
+            if g.mem_free_mb() >= job.model.mem_mb
+        ]
+        gpus.sort(key=lambda g: (g.workload, g.gpu_id))
+        ordered.extend(gpus)
+    if len(ordered) < n:
+        return None
+    return [g.gpu_id for g in ordered[:n]]
+
+
+class PlacementPolicy:
+    """Callable wrapper so the simulator takes one pluggable object."""
+
+    def __init__(self, name: str, kappa: int = 1, seed: int = 0) -> None:
+        name = name.lower()
+        if name not in ("rand", "ff", "ls", "lwf"):
+            raise ValueError(f"unknown placement policy {name!r}")
+        self.name = name
+        self.kappa = kappa
+        self._rng = random.Random(seed)
+
+    def __call__(self, cluster: Cluster, job: JobSpec) -> Optional[List[GpuId]]:
+        if self.name == "rand":
+            return place_random(cluster, job, self._rng)
+        if self.name == "ff":
+            return place_first_fit(cluster, job)
+        if self.name == "ls":
+            return place_list_scheduling(cluster, job)
+        return place_lwf(cluster, job, self.kappa)
+
+    def __repr__(self) -> str:
+        if self.name == "lwf":
+            return f"LWF-{self.kappa}"
+        return self.name.upper()

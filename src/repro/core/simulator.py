@@ -1,0 +1,647 @@
+"""Event-driven cluster simulator for multi-job DDL training
+(paper Algorithm 3 and Section V, exact continuous-time variant).
+
+The paper presents Ada-SRSF as a time-discrete loop; because task durations
+are tens of milliseconds while the paper's slot is one second, we integrate
+the same dynamics exactly with an event queue instead (documented in
+DESIGN.md).  Semantics preserved:
+
+* jobs arrive online (1 s ticks from the trace generator), queue in Q and
+  are placed by a pluggable placement policy (Alg. 3 lines 6-13);
+* GPUs may host several resident jobs (memory admission) and execute one
+  non-preemptive ``f``/``b`` task at a time, picked by SRSF priority
+  (lines 22-30);
+* each multi-server job's All-Reduce is gated by a pluggable communication
+  policy — AdaDUAL (lines 14-21), SRSF(n), or the beyond-paper k-way
+  AdaDUAL — and drains under the Eq. (5) contention model with exact
+  piecewise-constant-rate integration;
+* job priority everywhere is SRSF: smallest remaining service
+  ``(remaining iters) x (t_f + t_b + comm) x n_gpus`` first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core import dag as dag_mod
+from repro.core.adadual import (
+    adadual_should_start,
+    kway_adadual_should_start,
+    srsf_n_should_start,
+)
+from repro.core.cluster import Cluster, GpuId, JobSpec
+from repro.core.contention import ContentionParams
+from repro.core.placement import PlacementPolicy
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Communication gating policies
+# ---------------------------------------------------------------------------
+
+
+class CommPolicy:
+    """Decides whether a ready communication task may start now.
+
+    ``max_concurrent`` and ``old_remaining`` describe the in-flight
+    communication tasks on the servers the new task touches (Alg. 2 inputs).
+    """
+
+    name = "base"
+
+    def should_start(
+        self,
+        new_bytes: float,
+        old_remaining: Sequence[float],
+        max_concurrent: int,
+        params: ContentionParams,
+    ) -> bool:
+        raise NotImplementedError
+
+
+class SrsfN(CommPolicy):
+    """SRSF(n): accept at most n-way contention, blindly (paper baselines)."""
+
+    def __init__(self, n: int) -> None:
+        self.n = n
+        self.name = f"SRSF({n})"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return srsf_n_should_start(max_concurrent, self.n)
+
+
+class AdaDual(CommPolicy):
+    """The paper's AdaDUAL (Algorithm 2)."""
+
+    name = "Ada-SRSF"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return adadual_should_start(new_bytes, old_remaining, max_concurrent, params)
+
+
+class KWayAdaDual(CommPolicy):
+    """Beyond-paper: exact-lookahead k-way generalization (future work #2)."""
+
+    def __init__(self, max_ways: int = 3) -> None:
+        self.max_ways = max_ways
+        self.name = f"KWay({max_ways})-SRSF"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return kway_adadual_should_start(
+            new_bytes, old_remaining, params, max_ways=self.max_ways
+        )
+
+
+# ---------------------------------------------------------------------------
+# Runtime state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CommTask:
+    job_id: int
+    servers: Set[int]
+    remaining_bytes: float
+    latency_left: float  # the fixed 'a' consumed in wall time before draining
+    #: contention domains this task occupies: the servers themselves
+    #: (NIC-bottleneck model, default) or the ring links between them
+    #: (the paper's "each link between two nodes" wording)
+    domains: frozenset = frozenset()
+
+
+@dataclasses.dataclass
+class JobRun:
+    spec: JobSpec
+    gpus: List[GpuId]
+    servers: Set[int]
+    placed_at: float
+    iter_done: int = 0
+    # Per-worker progress within the current iteration:
+    f_done: Set[int] = dataclasses.field(default_factory=set)
+    b_done: Set[int] = dataclasses.field(default_factory=set)
+    comm_ready_at: Optional[float] = None  # all-reduce ready, not yet started
+    comm_active: bool = False
+    #: chunks of the current iteration's all-reduce still to send (beyond-
+    #: paper: tensor-fusion-style chunked, hence preemptible, communication)
+    comm_chunks_left: int = 0
+    finished_at: Optional[float] = None
+
+    @property
+    def has_comm(self) -> bool:
+        return len(self.servers) > 1
+
+    def per_iter_service(self, params: ContentionParams) -> float:
+        """Per-iteration service time: compute + contention-free comm."""
+        t = self.spec.model.t_iter_compute
+        if self.has_comm:
+            t += params.a + params.b * self.spec.model.size_bytes
+        return t
+
+    def remaining_service(self, params: ContentionParams) -> float:
+        """SRSF key: remaining time x allocated GPUs (Tiresias-style)."""
+        rem_iters = self.spec.iterations - self.iter_done
+        return rem_iters * self.per_iter_service(params) * self.spec.n_gpus
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy_name: str
+    placement_name: str
+    jct: Dict[int, float]  # job_id -> completion - arrival
+    finish: Dict[int, float]
+    makespan: float
+    gpu_busy: Dict[GpuId, float]
+    gpu_util: float  # mean busy fraction over makespan
+    queueing_delay: Dict[int, float]
+    events_processed: int
+    comm_started_contended: int
+    comm_started_clean: int
+    task_trace: Optional[List[Tuple]] = None  # (job, iter, kind, worker, t0, t1)
+
+    def avg_jct(self) -> float:
+        return sum(self.jct.values()) / len(self.jct)
+
+    def median_jct(self) -> float:
+        xs = sorted(self.jct.values())
+        n = len(xs)
+        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+    def p95_jct(self) -> float:
+        xs = sorted(self.jct.values())
+        idx = min(len(xs) - 1, int(math.ceil(0.95 * len(xs))) - 1)
+        return xs[idx]
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+
+class ClusterSimulator:
+    """Exact event-driven simulation of Algorithm 3's dynamics."""
+
+    def __init__(
+        self,
+        jobs: Sequence[JobSpec],
+        cluster: Optional[Cluster] = None,
+        placement: Optional[PlacementPolicy] = None,
+        comm_policy: Optional[CommPolicy] = None,
+        params: Optional[ContentionParams] = None,
+        fuse_fb: bool = True,
+        record_trace: bool = False,
+        comm_chunks: int = 1,
+        contention_domain: str = "server",  # server (NIC) | link (ring edges)
+        exclusive_gpus: bool = False,  # paper assumption 3 reading
+    ) -> None:
+        self.jobs = {j.job_id: j for j in jobs}
+        self.cluster = cluster or Cluster()
+        self.placement = placement or PlacementPolicy("lwf", kappa=1)
+        self.comm_policy = comm_policy or AdaDual()
+        self.params = params or ContentionParams()
+        # Fusing f+b into one GPU occupancy halves event count; a newly
+        # placed higher-priority job can then preempt only at (f+b)
+        # boundaries instead of f|b boundaries (distortion <= t_b ~ 50 ms).
+        # Fidelity tests set fuse_fb=False.
+        self.fuse_fb = fuse_fb and not record_trace
+        self.record_trace = record_trace
+        # Beyond-paper (future-work #3 adjacent): split each all-reduce into
+        # N chunks scheduled independently — a long transfer can lose the
+        # link to a shorter job's message at every chunk boundary, making
+        # communication effectively preemptible.  The per-message latency
+        # `a` is charged per chunk (that is the real cost of chunking).
+        self.comm_chunks = max(1, comm_chunks)
+        # "server": the server's NIC is the shared resource (conservative —
+        # all flows through one 10GbE port contend).  "link": the paper's
+        # wording — contention only between tasks sharing a ring edge
+        # (server pair), allowing disjoint transfers to proceed in parallel.
+        if contention_domain not in ("server", "link"):
+            raise ValueError(f"unknown contention domain {contention_domain!r}")
+        self.contention_domain = contention_domain
+        self.cluster.exclusive = exclusive_gpus
+
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self._queue: List[int] = []  # unplaced job ids
+        self._runs: Dict[int, JobRun] = {}
+        self._active_comm: Dict[int, CommTask] = {}
+        self._waiting_comm: List[int] = []  # job ids with gated all-reduce
+        self._comm_epoch = 0
+        self._last_comm_update = 0.0
+        self._dirty_gpus: Set[GpuId] = set()
+        self._events = 0
+        self._comm_contended = 0
+        self._comm_clean = 0
+        self._trace: List[Tuple] = []
+        self._unfinished = set(self.jobs)
+
+    # -- event helpers -------------------------------------------------------
+    def _push(self, t: float, kind: str, data: tuple) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    # -- SRSF priority ---------------------------------------------------------
+    def _srsf_key_queued(self, job_id: int):
+        spec = self.jobs[job_id]
+        # E_J = 0 before placement (paper Section IV-A "Job Priority").
+        rem = spec.compute_time * spec.n_gpus
+        return (rem, spec.arrival, job_id)
+
+    def _srsf_key_running(self, job_id: int):
+        run = self._runs[job_id]
+        return (run.remaining_service(self.params), run.spec.arrival, job_id)
+
+    # -- communication bookkeeping --------------------------------------------
+    def _domains_of(self, servers: Set[int]) -> frozenset:
+        if self.contention_domain == "server" or len(servers) < 2:
+            return frozenset(servers)
+        ring = sorted(servers)
+        return frozenset(
+            (ring[i], ring[(i + 1) % len(ring)]) for i in range(len(ring))
+        )
+
+    def _comm_k(self, task: CommTask) -> int:
+        """k of Eq. (5): max concurrent comm tasks over the task's
+        contention domains (servers or ring links)."""
+        k = 1
+        for d in task.domains:
+            c = sum(1 for t in self._active_comm.values() if d in t.domains)
+            k = max(k, c)
+        return k
+
+    def _advance_comm(self, now: float) -> List[int]:
+        """Drain all in-flight comm tasks from the last update to ``now``.
+        Returns job ids whose all-reduce completed in this window."""
+        dt = now - self._last_comm_update
+        self._last_comm_update = now
+        finished: List[int] = []
+        if dt <= 0 or not self._active_comm:
+            return finished
+        # Rates are piecewise constant between events because the active set
+        # only changes at events; use the rate as of the window start.
+        ks = {jid: self._comm_k(t) for jid, t in self._active_comm.items()}
+        for jid, task in list(self._active_comm.items()):
+            lat = min(task.latency_left, dt)
+            task.latency_left -= lat
+            drain_t = dt - lat
+            if drain_t > 0:
+                task.remaining_bytes -= drain_t * self.params.rate(ks[jid])
+            if task.latency_left <= _EPS and task.remaining_bytes <= 1.0:
+                # tolerance: 1 byte ~ 1e-9 s — absorbs float drift in the
+                # piecewise integration
+                finished.append(jid)
+        for jid in finished:
+            del self._active_comm[jid]
+        return finished
+
+    def _next_comm_finish(self) -> Optional[float]:
+        if not self._active_comm:
+            return None
+        t_min = math.inf
+        for task in self._active_comm.values():
+            k = self._comm_k(task)
+            t = self._last_comm_update + task.latency_left + task.remaining_bytes / self.params.rate(k)
+            t_min = min(t_min, t)
+        return t_min
+
+    def _reschedule_comm_check(self) -> None:
+        self._comm_epoch += 1
+        t = self._next_comm_finish()
+        if t is not None:
+            self._push(t, "comm_check", (self._comm_epoch,))
+
+    # -- placement --------------------------------------------------------------
+    def _refresh_workloads(self) -> None:
+        """Alg. 3 line 3: recompute every GPU's remaining workload L_g as the
+        sum of its resident jobs' remaining service (shared per GPU)."""
+        for g in self.cluster.gpus.values():
+            g.workload = 0.0
+        for jid, run in self._runs.items():
+            if run.finished_at is not None:
+                continue
+            share = run.remaining_service(self.params)
+            for gid in run.gpus:
+                self.cluster.gpus[gid].workload += share
+
+    def _try_place(self, now: float) -> None:
+        if not self._queue:
+            return
+        self._refresh_workloads()
+        self._queue.sort(key=self._srsf_key_queued)
+        placed: List[int] = []
+        for jid in self._queue:
+            spec = self.jobs[jid]
+            gpu_ids = self.placement(self.cluster, spec)
+            if gpu_ids is None:
+                continue  # no head-of-line blocking (Alg. 3 loops the queue)
+            servers = self.cluster.servers_of(gpu_ids)
+            run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
+            workload = run.remaining_service(self.params)
+            self.cluster.place(spec, gpu_ids, workload)
+            self._runs[jid] = run
+            self._dirty_gpus.update(gpu_ids)
+            placed.append(jid)
+        for jid in placed:
+            self._queue.remove(jid)
+
+    # -- communication gating -----------------------------------------------------
+    def _try_start_comms(self, now: float) -> bool:
+        if not self._waiting_comm:
+            return False
+        any_started = False
+        # Alg. 3 line 16: consider ready communication tasks in SRSF order.
+        self._waiting_comm.sort(key=self._srsf_key_running)
+        started_any = True
+        while started_any:
+            started_any = False
+            for jid in list(self._waiting_comm):
+                run = self._runs[jid]
+                if run.comm_active or jid in self._active_comm:
+                    self._waiting_comm.remove(jid)
+                    continue
+                servers = run.servers
+                domains = self._domains_of(servers)
+                olds = [
+                    t for t in self._active_comm.values() if t.domains & domains
+                ]
+                max_conc = 0
+                for d in domains:
+                    max_conc = max(
+                        max_conc,
+                        sum(1 for t in self._active_comm.values() if d in t.domains),
+                    )
+                ok = self.comm_policy.should_start(
+                    run.spec.model.size_bytes,
+                    [t.remaining_bytes for t in olds],
+                    max_conc,
+                    self.params,
+                )
+                if not ok:
+                    continue
+                self._waiting_comm.remove(jid)
+                self._active_comm[jid] = CommTask(
+                    job_id=jid,
+                    servers=set(servers),
+                    remaining_bytes=run.spec.model.size_bytes / self.comm_chunks,
+                    latency_left=self.params.a,
+                    domains=domains,
+                )
+                run.comm_chunks_left -= 1
+                run.comm_active = True
+                if max_conc > 0:
+                    self._comm_contended += 1
+                else:
+                    self._comm_clean += 1
+                if self.record_trace:
+                    self._trace.append(
+                        (jid, run.iter_done, "c", -1, now, None)
+                    )
+                started_any = True
+                any_started = True
+                break  # re-evaluate contention state after each start
+        return any_started
+
+    # -- iteration/worker state machine ---------------------------------------------
+    def _begin_iteration(self, run: JobRun, now: float) -> None:
+        run.f_done.clear()
+        run.b_done.clear()
+        run.comm_ready_at = None
+        run.comm_active = False
+        self._dirty_gpus.update(run.gpus)
+
+    def _complete_iteration(self, run: JobRun, now: float) -> None:
+        run.iter_done += 1
+        if run.iter_done >= run.spec.iterations:
+            self._finish_job(run, now)
+        else:
+            self._begin_iteration(run, now)
+
+    def _finish_job(self, run: JobRun, now: float) -> None:
+        run.finished_at = now
+        self.cluster.release(run.spec, run.gpus)
+        self._dirty_gpus.update(run.gpus)
+        self._unfinished.discard(run.spec.job_id)
+
+    def _on_backward_done(self, run: JobRun, now: float) -> None:
+        if len(run.b_done) < run.spec.n_gpus:
+            return
+        # Barrier reached (Fig. 3: all-reduce waits for all backprops).
+        if run.has_comm:
+            jid = run.spec.job_id
+            assert jid not in self._waiting_comm and not run.comm_active, (
+                f"duplicate barrier for job {jid}"
+            )
+            run.comm_ready_at = now
+            run.comm_chunks_left = self.comm_chunks
+            self._waiting_comm.append(jid)
+        else:
+            self._complete_iteration(run, now)
+
+    # -- GPU scheduling (Alg. 3 lines 22-30) -------------------------------------
+    def _ready_compute_tasks(self, gid: GpuId):
+        """Yield (job_id, worker, kind, duration) ready on this GPU."""
+        g = self.cluster.gpus[gid]
+        for jid in g.resident_jobs:
+            run = self._runs.get(jid)
+            if run is None or run.finished_at is not None:
+                continue
+            if run.comm_ready_at is not None or run.comm_active:
+                continue  # between barrier and next iteration
+            try:
+                w = run.gpus.index(gid)
+            except ValueError:
+                continue
+            if w not in run.f_done:
+                if self.fuse_fb:
+                    yield (jid, w, "fb", run.spec.model.t_iter_compute)
+                else:
+                    yield (jid, w, "f", run.spec.model.t_f)
+            elif w not in run.b_done:
+                yield (jid, w, "b", run.spec.model.t_b)
+
+    def _schedule_gpus(self, now: float) -> None:
+        for gid in list(self._dirty_gpus):
+            self._dirty_gpus.discard(gid)
+            g = self.cluster.gpus[gid]
+            # busy_job is cleared only by this GPU's own gpu_done event, so a
+            # task ending exactly at `now` (event still in the heap) cannot be
+            # double-scheduled by another same-timestamp event.
+            if g.busy_job is not None:
+                continue
+            candidates = list(self._ready_compute_tasks(gid))
+            if not candidates:
+                g.busy_until = None
+                g.busy_job = None
+                continue
+            # SRSF among resident jobs' ready tasks.
+            candidates.sort(key=lambda c: self._srsf_key_running(c[0]))
+            jid, w, kind, dur = candidates[0]
+            g.busy_until = now + dur
+            g.busy_job = jid
+            g.busy_accum += dur
+            self._push(now + dur, "gpu_done", (gid, jid, w, kind))
+            if self.record_trace:
+                if kind == "fb":
+                    run = self._runs[jid]
+                    self._trace.append((jid, run.iter_done, "f", w, now, now + run.spec.model.t_f))
+                    self._trace.append((jid, run.iter_done, "b", w, now + run.spec.model.t_f, now + dur))
+                else:
+                    self._trace.append((jid, self._runs[jid].iter_done, kind, w, now, now + dur))
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, max_time: float = math.inf) -> SimResult:
+        for spec in self.jobs.values():
+            self._push(spec.arrival, "arrival", (spec.job_id,))
+        now = 0.0
+        while self._heap and self._unfinished:
+            t, _, kind, data = heapq.heappop(self._heap)
+            if kind == "comm_check" and data[0] != self._comm_epoch:
+                continue
+            if t > max_time:
+                break
+            now = t
+            self._events += 1
+            comm_state_changed = False
+
+            finished_comms = self._advance_comm(now)
+            for jid in finished_comms:
+                run = self._runs[jid]
+                run.comm_active = False
+                comm_state_changed = True
+                if self.record_trace:
+                    # patch the open comm record
+                    for i in range(len(self._trace) - 1, -1, -1):
+                        r = self._trace[i]
+                        if r[0] == jid and r[2] == "c" and r[5] is None:
+                            self._trace[i] = (r[0], r[1], r[2], r[3], r[4], now)
+                            break
+                if run.comm_chunks_left > 0:
+                    # chunked comm: re-queue the next chunk (it competes for
+                    # the link like a fresh task — preemption point)
+                    self._waiting_comm.append(jid)
+                else:
+                    self._complete_iteration(run, now)
+
+            if kind == "arrival":
+                self._queue.append(data[0])
+                self._try_place(now)
+            elif kind == "gpu_done":
+                gid, jid, w, tkind = data
+                g = self.cluster.gpus[gid]
+                g.busy_until = None
+                g.busy_job = None
+                self._dirty_gpus.add(gid)
+                run = self._runs[jid]
+                if tkind == "fb":
+                    run.f_done.add(w)
+                    run.b_done.add(w)
+                    self._on_backward_done(run, now)
+                elif tkind == "f":
+                    run.f_done.add(w)
+                elif tkind == "b":
+                    run.b_done.add(w)
+                    self._on_backward_done(run, now)
+                if run.finished_at is not None:
+                    # memory freed -> queued jobs may fit now
+                    self._try_place(now)
+            elif kind == "comm_check":
+                comm_state_changed = comm_state_changed or bool(finished_comms)
+
+            if finished_comms:
+                # job finishing via comm also frees memory
+                if any(self._runs[j].finished_at is not None for j in finished_comms):
+                    self._try_place(now)
+
+            # Gating re-evaluated whenever comm state may have changed or new
+            # barriers were reached this event.
+            started = self._try_start_comms(now)
+            self._schedule_gpus(now)
+            # Rates only change when the active comm set changes, so the
+            # pending finish prediction stays valid otherwise.  A comm_check
+            # that finished nothing (float drift) must still reschedule, or
+            # the in-flight task would stall forever.
+            if started or finished_comms or kind == "comm_check":
+                self._reschedule_comm_check()
+
+        return self._collect(now)
+
+    # -- results ------------------------------------------------------------------
+    def _collect(self, now: float) -> SimResult:
+        jct, finish, qdelay = {}, {}, {}
+        for jid, run in self._runs.items():
+            if run.finished_at is not None:
+                finish[jid] = run.finished_at
+                jct[jid] = run.finished_at - run.spec.arrival
+                qdelay[jid] = run.placed_at - run.spec.arrival
+        makespan = max(finish.values()) if finish else now
+        busy = {gid: g.busy_accum for gid, g in self.cluster.gpus.items()}
+        util = (
+            sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
+        )
+        return SimResult(
+            policy_name=self.comm_policy.name,
+            placement_name=repr(self.placement),
+            jct=jct,
+            finish=finish,
+            makespan=makespan,
+            gpu_busy=busy,
+            gpu_util=util,
+            queueing_delay=qdelay,
+            events_processed=self._events,
+            comm_started_contended=self._comm_contended,
+            comm_started_clean=self._comm_clean,
+            task_trace=self._trace if self.record_trace else None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Convenience runner
+# ---------------------------------------------------------------------------
+
+
+def simulate(
+    jobs: Sequence[JobSpec],
+    placement: str = "lwf",
+    kappa: int = 1,
+    comm: str = "ada",
+    params: Optional[ContentionParams] = None,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+    seed: int = 0,
+    fuse_fb: bool = True,
+    record_trace: bool = False,
+    comm_chunks: int = 1,
+    contention_domain: str = "server",
+    exclusive_gpus: bool = False,
+) -> SimResult:
+    """One-call simulation with string-configured policies.
+
+    comm: 'ada' (AdaDUAL), 'srsf1'/'srsf2'/'srsf3', or 'kway2'/'kway3'/'kway4'.
+    placement: 'rand' | 'ff' | 'ls' | 'lwf'.
+    comm_chunks > 1 enables the beyond-paper chunked/preemptible all-reduce.
+    contention_domain: 'server' (NIC bottleneck) or 'link' (paper's wording).
+    """
+    if comm == "ada":
+        policy: CommPolicy = AdaDual()
+    elif comm.startswith("srsf"):
+        policy = SrsfN(int(comm[4:]))
+    elif comm.startswith("kway"):
+        policy = KWayAdaDual(int(comm[4:]))
+    else:
+        raise ValueError(f"unknown comm policy {comm!r}")
+    sim = ClusterSimulator(
+        jobs,
+        cluster=Cluster(n_servers=n_servers, gpus_per_server=gpus_per_server),
+        placement=PlacementPolicy(placement, kappa=kappa, seed=seed),
+        comm_policy=policy,
+        params=params,
+        fuse_fb=fuse_fb,
+        record_trace=record_trace,
+        comm_chunks=comm_chunks,
+        contention_domain=contention_domain,
+        exclusive_gpus=exclusive_gpus,
+    )
+    return sim.run()

@@ -1,0 +1,136 @@
+"""Blocked causal flash attention — Pallas TPU kernel.
+
+TPU adaptation of the flash-attention idea: the (S x S) score matrix is
+never materialized in HBM; each (query-block, kv-block) tile lives in VMEM,
+the MXU consumes (block_q x head_dim) @ (head_dim x block_k) tiles, and the
+online-softmax running max/denominator are carried in VMEM scratch across
+the kv grid dimension (the "arbitrary"-semantics innermost axis).
+
+Block sizes default to 128 — MXU-aligned (128x128 systolic array) and small
+enough that q/k/v/acc tiles fit VMEM: 4 tiles x 128 x head_dim(<=256) x 4 B
+~ 0.5 MB << 16 MB VMEM/core.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # VMEM tiles
+    o_ref,                # output tile
+    acc_ref, m_ref, l_ref,  # VMEM scratch carried over the kv grid dim
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Causal: skip kv blocks strictly above the diagonal band.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        # Zero OOB-padded kv rows: pad contents are undefined and
+        # 0 * NaN would poison the accumulator through the p @ v matmul.
+        valid_k = (k_start + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)) < kv_len
+        k = jnp.where(valid_k, k, 0.0)
+        v = jnp.where(valid_k, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len  # tail padding
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (block_q, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    nq = pl.cdiv(s, block_q)
+    nk = pl.cdiv(t, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=t,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On real TPU hardware pass ``interpret=False`` to run the compiled Pallas
+kernel; on CPU (this container) the kernel body executes in interpret mode
+for correctness validation, and production model code defaults to the
+fused-jnp reference path (``models/attention.py``), which XLA fuses well.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_reference
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "impl"),
+)
+def flash_attention(
+    q: jax.Array,  # (B*H, S, D) — callers fold batch and heads
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "interpret",  # interpret | tpu | ref
+) -> jax.Array:
+    if impl == "ref":
+        return attention_reference(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=(impl == "interpret"),
+    )

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Same signature/semantics as ``kernel.flash_attention_pallas``; tests
+assert_allclose the kernel (interpret=True) against this across a
+shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def attention_reference(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        logits = jnp.where(mask[None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

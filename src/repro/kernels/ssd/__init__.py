@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd_decode_step
+
+__all__ = ["ssd_decode_step"]

@@ -1,0 +1,84 @@
+"""Mamba-2 SSD decode-step state update — Pallas TPU kernel.
+
+The decode hot loop is memory-bound: it streams the (B, H, P, N) f32 state
+through VMEM once per token:
+
+    state' = state * exp(dt * A)[.., None, None] + dt * (B x^T)
+    y      = (state' . C) + D * x
+
+TPU adaptation: blocks tile (batch x heads) so each program holds one
+(1, bh, P, N) state tile in VMEM (bh*P*N*4 B; with bh=8, P=64, N=128 that is
+256 KB), the outer product and contraction feed the VPU/MXU with the N=128
+lane dimension aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_step_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, state_ref,
+    y_ref, new_state_ref,
+):
+    x = x_ref[...].astype(jnp.float32)        # (1, bh, P)
+    dt = dt_ref[...].astype(jnp.float32)      # (1, bh)
+    a = a_ref[...].astype(jnp.float32)        # (bh,)
+    b = b_ref[...].astype(jnp.float32)        # (1, N)
+    c = c_ref[...].astype(jnp.float32)        # (1, N)
+    dd = d_ref[...].astype(jnp.float32)       # (bh,)
+    state = state_ref[...].astype(jnp.float32)  # (1, bh, P, N)
+
+    decay = jnp.exp(dt * a[None, :])          # (1, bh)
+    upd = (dt[..., None] * x)[..., None] * b[:, None, None, :]  # (1,bh,P,N)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("zhpn,zn->zhp", new_state, c)
+    y = y + x * dd[None, :, None]
+
+    y_ref[...] = y.astype(y_ref.dtype)
+    new_state_ref[...] = new_state.astype(new_state_ref.dtype)
+
+
+def ssd_decode_step_pallas(
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    a: jax.Array,      # (H,)
+    b: jax.Array,      # (B, N)
+    c: jax.Array,      # (B, N)
+    d: jax.Array,      # (H,)
+    state: jax.Array,  # (B, H, P, N) f32
+    *,
+    block_h: int = 8,
+    interpret: bool = True,
+):
+    bsz, h, p = x.shape
+    n = b.shape[-1]
+    block_h = min(block_h, h)
+    nh = pl.cdiv(h, block_h)
+
+    return pl.pallas_call(
+        _ssd_step_kernel,
+        grid=(bsz, nh),
+        in_specs=[
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((block_h,), lambda i, j: (j,)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_h,), lambda i, j: (j,)),
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), state.dtype),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b, c, d, state)

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the SSD decode-step kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_decode_step_pallas
+from repro.kernels.ssd.ref import ssd_decode_step_reference
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "impl"))
+def ssd_decode_step(
+    x, dt, a, b, c, d, state, *, block_h: int = 8, impl: str = "interpret"
+):
+    if impl == "ref":
+        return ssd_decode_step_reference(x, dt, a, b, c, d, state)
+    return ssd_decode_step_pallas(
+        x, dt, a, b, c, d, state, block_h=block_h, interpret=(impl == "interpret")
+    )

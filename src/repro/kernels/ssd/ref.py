@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the SSD decode-step kernel — delegates to the model's
+own recurrence (`models/ssm.ssd_step`) plus the D skip term, so the kernel,
+the model and the tests share one semantic definition."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_step
+
+
+def ssd_decode_step_reference(x, dt, a, b, c, d, state):
+    y, new_state = ssd_step(x, dt, a, b, c, state)
+    y = y + x * d[None, :, None].astype(x.dtype)
+    return y, new_state

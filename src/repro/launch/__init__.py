@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, dry-run, training/serving drivers, and
+the multi-job Ada-SRSF launcher."""

@@ -1,0 +1,351 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory / cost / collective analysis.
+
+Usage (module must be the process entry point so the device-count flag is
+set before jax initializes):
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single multi \
+        --out results/dryrun.json [--profile tuned] [--resume]
+
+The very first lines force 512 host-platform devices — dry-run only; tests
+and benchmarks see the real single CPU device.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gc  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, canonical, get_config  # noqa: E402
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    HBM_BW,
+    HBM_BYTES,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    n_chips,
+)
+from repro.launch.specs import decode_specs, supports_shape, train_like_specs  # noqa: E402
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig  # noqa: E402
+from repro.models.lm import LM, RunFlags  # noqa: E402
+from repro.optim.adamw import AdamWConfig, abstract_opt_state  # noqa: E402
+from repro.sharding.rules import (  # noqa: E402
+    ShardingStrategy,
+    cache_shardings,
+    embeds_sharding,
+    moment_shardings,
+    param_shardings,
+    replicated,
+    token_sharding,
+)
+
+# ---------------------------------------------------------------------------
+# Per-arch runtime profiles.
+#
+# "baseline" is the naive first config (tensor-parallel everywhere, f32
+# moments, no remat): the starting point of the §Perf iteration log.
+# "tuned" is the post-iteration profile (see EXPERIMENTS.md §Perf for the
+# hypothesis -> change -> measurement chain that produced each entry).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    strategy: str = "tp"          # tp | fsdp | zero1 | dp
+    moment_dtype: str = "float32"  # float32 | bfloat16
+    remat: str = "none"            # none | block | dots
+    q_chunk: int = 512
+    include_model_in_dp: bool = False
+    # §Perf knobs (benchmarks/hillclimb.py)
+    loss_impl: str = "dense"       # dense | chunked
+    loss_chunk: int = 512
+    capacity_factor: float = 0.0   # 0 -> keep the config's value
+    decode_cache_mode: str = "auto"  # auto | seq | batch
+    decode_constrain: bool = False
+    constrain_acts: bool = False
+
+
+BASELINE_PROFILES: Dict[str, Profile] = {a: Profile() for a in ARCH_IDS}
+BASELINE_PROFILES["mamba2_130m"] = Profile(strategy="dp", include_model_in_dp=True)
+
+# decode_constrain (flash-decode sharding, §Perf pair 2) is set exactly on
+# the GQA archs whose kv-heads don't divide the 16-way model axis — their
+# caches are seq-sharded and would otherwise be all-gathered every step.
+# constrain_acts (§Perf pair 1) pins the residual stream batch-sharded.
+TUNED_PROFILES: Dict[str, Profile] = {
+    "mamba2_130m": Profile(strategy="dp", include_model_in_dp=True, remat="block"),
+    "llama32_1b": Profile(strategy="zero1", remat="block", decode_constrain=True),
+    "phi4_mini_3_8b": Profile(strategy="zero1", remat="block", decode_constrain=True),
+    "gemma_7b": Profile(strategy="zero1", remat="block"),
+    "yi_9b": Profile(strategy="zero1", remat="block", decode_constrain=True),
+    "olmoe_1b_7b": Profile(strategy="zero1", remat="block"),
+    "seamless_m4t_large_v2": Profile(strategy="zero1", remat="block"),
+    "llama32_vision_11b": Profile(strategy="zero1", remat="block", decode_constrain=True),
+    "jamba_v01_52b": Profile(strategy="zero1", remat="block", decode_constrain=True),
+    "arctic_480b": Profile(
+        strategy="fsdp", moment_dtype="bfloat16", remat="block",
+        decode_constrain=True, constrain_acts=True,
+    ),
+}
+
+
+from repro.launch.roofline import (  # noqa: E402
+    config_for_shape,
+    model_flops,
+    roofline_terms as _roofline_terms,
+)
+
+
+def with_n_blocks(cfg: ModelConfig, nb: int) -> ModelConfig:
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=nb * cfg.block_len)
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, n_layers=nb * cfg.cross_attn_every)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=nb, enc_layers=nb)
+    return dataclasses.replace(cfg, n_layers=nb)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one variant
+# ---------------------------------------------------------------------------
+
+
+def _build_and_lower(cfg, shape, mesh, profile: Profile, flags: RunFlags):
+    if profile.capacity_factor:
+        cfg = dataclasses.replace(cfg, capacity_factor=profile.capacity_factor)
+    lm = LM(cfg)
+    strategy = ShardingStrategy.from_name(profile.strategy)
+    ap = lm.abstract_params()
+    p_sh = param_shardings(lm.logical_axes(), ap, mesh, strategy)
+    inc = profile.include_model_in_dp
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(moment_dtype=jnp.dtype(profile.moment_dtype))
+            opt = abstract_opt_state(ap, opt_cfg)
+            m_sh = moment_shardings(p_sh, ap, mesh, strategy)
+            o_sh = {"m": m_sh, "v": m_sh, "step": replicated(mesh)}
+            batch = train_like_specs(cfg, shape)
+            b_sh = {
+                k: (
+                    token_sharding(mesh, shape.global_batch, include_model=inc)
+                    if v.ndim == 2
+                    else embeds_sharding(mesh, shape.global_batch, include_model=inc)
+                )
+                for k, v in batch.items()
+            }
+            step = make_train_step(lm, opt_cfg, flags)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            return jitted.lower(ap, opt, batch)
+        if shape.kind == "prefill":
+            batch = train_like_specs(cfg, shape)
+            b_sh = {
+                k: (
+                    token_sharding(mesh, shape.global_batch, include_model=inc)
+                    if v.ndim == 2
+                    else embeds_sharding(mesh, shape.global_batch, include_model=inc)
+                )
+                for k, v in batch.items()
+            }
+            step = make_prefill_step(lm, max_seq=shape.seq_len, flags=flags)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            return jitted.lower(ap, batch)
+        # decode
+        cache, token = decode_specs(lm, shape)
+        c_sh = cache_shardings(
+            cache, mesh, shape.global_batch, cfg, mode=profile.decode_cache_mode
+        )
+        t_sh = token_sharding(mesh, shape.global_batch, include_model=inc)
+        step = make_serve_step(lm, flags)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, t_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        return jitted.lower(ap, cache, token)
+
+
+def _compile_and_analyze(lowered) -> Dict[str, Any]:
+    compiled = lowered.compile()
+    cost = hlo_mod.normalize_cost(compiled.cost_analysis())
+    mem = hlo_mod.memory_stats(compiled)
+    coll = hlo_mod.collective_bytes(compiled.as_text())
+    del compiled
+    gc.collect()
+    return {"cost": cost, "memory": mem, "collectives": coll}
+
+
+def run_combo(
+    arch: str,
+    shape: InputShape,
+    mesh,
+    profile: Profile,
+    correct_scan: bool = True,
+) -> Dict[str, Any]:
+    """Full dry-run of one (arch, shape, mesh): compile the production model
+    plus (optionally) the two small-unroll variants for the scan-body cost
+    correction (DESIGN.md §4)."""
+    cfg = config_for_shape(arch, shape)
+    if cfg is None:
+        _, note = supports_shape(get_config(arch), shape)
+        return {"status": "skipped", "note": note}
+
+    from repro.sharding.rules import batch_spec_axes
+
+    decode_dp = batch_spec_axes(mesh, shape.global_batch) or ()
+    flags = RunFlags(
+        remat=profile.remat,
+        q_chunk=profile.q_chunk,
+        loss_impl=profile.loss_impl,
+        loss_chunk=profile.loss_chunk,
+        decode_constrain=profile.decode_constrain and shape.kind == "decode",
+        decode_dp=tuple(decode_dp),
+        constrain_acts=profile.constrain_acts and shape.kind != "decode",
+        act_dp=tuple(decode_dp),
+    )
+    t0 = time.time()
+    lowered = _build_and_lower(cfg, shape, mesh, profile, flags)
+    res = _compile_and_analyze(lowered)
+    del lowered
+    gc.collect()
+    res["compile_s"] = round(time.time() - t0, 1)
+
+    lm = LM(cfg)
+    nb_full = lm.n_blocks
+    if correct_scan and nb_full > 1:
+        nb_small = min(4, nb_full)
+        small = with_n_blocks(cfg, nb_small)
+        u1 = _compile_and_analyze(
+            _build_and_lower(small, shape, mesh, profile, dataclasses.replace(flags, scan_unroll=1))
+        )
+        u2 = _compile_and_analyze(
+            _build_and_lower(small, shape, mesh, profile, dataclasses.replace(flags, scan_unroll=2))
+        )
+        corr: Dict[str, Any] = {}
+        for key in ("flops", "bytes_accessed", "transcendentals"):
+            delta = u2["cost"][key] - u1["cost"][key]
+            corr[key] = res["cost"][key] + (nb_full - 1) * delta
+        coll_delta = u2["collectives"]["total"] - u1["collectives"]["total"]
+        corr["collective_total"] = res["collectives"]["total"] + (nb_full - 1) * coll_delta
+        res["cost_corrected"] = corr
+        res["correction_deltas"] = {
+            "per_layer_flops": u2["cost"]["flops"] - u1["cost"]["flops"],
+            "per_layer_bytes": u2["cost"]["bytes_accessed"] - u1["cost"]["bytes_accessed"],
+            "per_layer_collective": coll_delta,
+        }
+    else:
+        res["cost_corrected"] = {
+            "flops": res["cost"]["flops"],
+            "bytes_accessed": res["cost"]["bytes_accessed"],
+            "transcendentals": res["cost"]["transcendentals"],
+            "collective_total": res["collectives"]["total"],
+        }
+
+    res["roofline"] = _roofline_terms(cfg, shape, n_chips(mesh), res)
+    res["status"] = "ok"
+    res["config"] = cfg.name
+    res["profile"] = dataclasses.asdict(profile)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single"], choices=["single", "multi"])
+    ap.add_argument("--profile", default="tuned", choices=["baseline", "tuned"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-correction", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == ["all"] else [canonical(a) for a in args.arch]
+    shapes = (
+        list(INPUT_SHAPES) if args.shape == ["all"] else args.shape
+    )
+    profiles = BASELINE_PROFILES if args.profile == "baseline" else TUNED_PROFILES
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = {}
+    for m in args.mesh:
+        meshes[m] = make_production_mesh(multi_pod=(m == "multi"))
+
+    for mesh_name, mesh in meshes.items():
+        for arch in archs:
+            for shape_name in shapes:
+                shape = INPUT_SHAPES[shape_name]
+                key = f"{arch}|{shape_name}|{mesh_name}|{args.profile}"
+                if args.resume and key in results and results[key].get("status") in ("ok", "skipped"):
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    res = run_combo(
+                        arch, shape, mesh, profiles[arch],
+                        correct_scan=not args.no_correction,
+                    )
+                except Exception as e:  # record failures, keep going
+                    res = {
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                res["wall_s"] = round(time.time() - t0, 1)
+                results[key] = res
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (
+                        f" dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+                        f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                        f"hbm={r['hbm_peak_frac']:.2f} useful={r['useful_flops_ratio']:.2f}"
+                    )
+                elif status == "error":
+                    extra = " " + res["error"][:160]
+                print(f"[dryrun] {key}: {status}{extra} ({res['wall_s']}s)", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

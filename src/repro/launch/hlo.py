@@ -1,0 +1,101 @@
+"""HLO-text analysis: collective payload bytes per op kind.
+
+``compiled.cost_analysis()`` has no collective accounting, so the roofline's
+collective term is derived here by parsing the (SPMD-partitioned, per-device)
+HLO and summing the output payload bytes of every collective op.  Ops inside
+a ``while`` body (the layer scan) appear once in the text; the dry-run's
+two-point unroll correction scales them by trip count (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Tuple
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# e.g. "bf16[16,4096,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# LHS of an HLO instruction: "%name = <type> opcode(".  The opcode for
+# collectives may carry suffixes like "all-reduce-start".
+_INSTR_RE = re.compile(
+    r"=\s+(\(?[^()=]*?\)?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\("
+)
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device payload bytes by collective kind (+ op counts).
+
+    '-done' ops are skipped so async start/done pairs count once.
+    """
+    out: Counter = Counter()
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _bytes_of_type(type_str)
+        counts[kind] += 1
+    result = {k: float(v) for k, v in out.items()}
+    result["total"] = float(sum(out.values()))
+    result["op_counts"] = dict(counts)
+    return result
+
+
+def normalize_cost(ca) -> Dict[str, float]:
+    """cost_analysis() may be a dict or a 1-list of dicts depending on
+    version; normalize and keep the scalar keys we use."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        # peak per-device estimate: live args + temps (aliased outputs reuse
+        # argument space)
+        "peak_bytes": float(
+            ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + max(ma.output_size_in_bytes - ma.alias_size_in_bytes, 0)
+        ),
+    }

@@ -1,0 +1,81 @@
+"""Roofline-term derivation (side-effect-free; importable by benchmarks).
+
+    compute    = HLO_FLOPs  / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes  / (chips x 819 GB/s HBM)
+    collective = coll_bytes / (chips x 50 GB/s ICI)
+
+All three numerators come from the dry-run's compiled artifact
+(cost_analysis + HLO collective parse), scan-corrected per DESIGN.md §4.
+cost_analysis is per-device on the SPMD-partitioned module, so global =
+per-device x chips.  MODEL_FLOPS (6*N_active*D etc.) gives the
+useful-compute ratio that catches remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional
+
+from repro.configs import canonical, get_config
+from repro.launch.mesh import HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import supports_shape
+from repro.models.config import InputShape, ModelConfig
+
+
+def config_for_shape(arch: str, shape: InputShape) -> Optional[ModelConfig]:
+    """Resolve the config, switching dense archs to their sliding-window
+    variant for long_500k.  Returns None when the combo is skipped."""
+    cfg = get_config(arch)
+    ok, _ = supports_shape(cfg, shape)
+    if not ok:
+        return None
+    if shape.name == "long_500k" and cfg.family == "dense":
+        mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+        cfg = mod.LONG_CONTEXT_VARIANT
+    return cfg
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Useful FLOPs per step: 6*N_active*tokens (train), 2*N_active*tokens
+    (prefill), 2*N_active*batch (decode, one token per sequence).
+
+    Token counts are per-stack: the audio encoder sees ``audio_frames``
+    tokens (not the decoder's seq_len); the VLM's cross-attention params
+    fire once per decoder token and count with the decoder.
+    """
+    n_active = cfg.active_param_count()
+    mult = {"train": 6.0, "prefill": 2.0}.get(shape.kind)
+    dec_tokens = shape.tokens if mult else shape.global_batch
+    mult = mult or 2.0
+    if cfg.family != "audio":
+        return mult * n_active * dec_tokens
+    enc_params = cfg.enc_layers * cfg._enc_layer_params(False)
+    dec_params = n_active - enc_params
+    if shape.kind == "decode":
+        return mult * dec_params * dec_tokens  # encoder output is cached
+    enc_tokens = cfg.audio_frames * shape.global_batch
+    enc_mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * dec_params * dec_tokens + enc_mult * enc_params * enc_tokens
+
+
+def roofline_terms(cfg, shape, chips: int, res: Dict[str, Any]) -> Dict[str, Any]:
+    cc = res["cost_corrected"]
+    # cost_analysis is per-device (SPMD-partitioned module)
+    flops_global = cc["flops"] * chips
+    bytes_global = cc["bytes_accessed"] * chips
+    coll_global = cc["collective_total"] * chips
+    t_compute = flops_global / (chips * PEAK_FLOPS_BF16)
+    t_memory = bytes_global / (chips * HBM_BW)
+    t_collective = coll_global / (chips * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": flops_global,
+        "useful_flops_ratio": mf / flops_global if flops_global else 0.0,
+        "hbm_peak_frac": res["memory"]["peak_bytes"] / HBM_BYTES,
+        "chips": chips,
+    }

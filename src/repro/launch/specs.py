@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture x input shape).
+
+``input_specs`` returns exactly what the corresponding step function takes,
+weak-type-correct and shardable, with no device allocation — the dry-run
+lowers against these.  The audio/VLM modality frontends are stubbed here:
+``audio_embeds`` / ``image_embeds`` stand in for the frontend outputs
+(the one allowed stub; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import InputShape, ModelConfig
+from repro.models.lm import LM
+
+
+def train_like_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch specs for train/prefill step functions."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.audio_frames, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def decode_specs(
+    lm: LM, shape: InputShape
+) -> Tuple[Any, jax.ShapeDtypeStruct]:
+    """(abstract cache of seq_len slots, next-token spec) for serve_step."""
+    cache = lm.abstract_cache(shape.global_batch, shape.seq_len)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return cache, token
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """long_500k applicability (DESIGN.md §Arch-applicability)."""
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.family in ("ssm", "hybrid"):
+        return True, ""
+    if cfg.family == "dense":
+        return True, "requires sliding-window variant"
+    reasons = {
+        "moe": "full-attention MoE, 4k-context model card",
+        "audio": "enc-dec speech model; 500k-token decode meaningless",
+        "vlm": "full self-attn + image cross-attn; card max 128k",
+    }
+    return False, reasons.get(cfg.family, "full attention")

@@ -1,0 +1,49 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+All steps are pure pytree->pytree functions suitable for jax.jit with
+explicit shardings and donation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM, RunFlags
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(lm: LM, opt_cfg: AdamWConfig, flags: RunFlags = RunFlags()):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return lm.loss_fn(p, batch, flags)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        out = {"loss": loss, **metrics, **om}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(lm: LM, max_seq: int, flags: RunFlags = RunFlags()):
+    """(params, batch) -> (last-token logits, cache)."""
+
+    def prefill_step(params, batch):
+        return lm.prefill_fn(params, batch, max_seq=max_seq, flags=flags)
+
+    return prefill_step
+
+
+def make_serve_step(lm: LM, flags: RunFlags = RunFlags()):
+    """(params, cache, token) -> (logits, cache); cache donated by callers."""
+
+    def serve_step(params, cache, token):
+        return lm.decode_fn(params, cache, token, flags)
+
+    return serve_step

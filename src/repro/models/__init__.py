@@ -1,0 +1,6 @@
+"""Model substrate: configs, layers, and family-dispatched LMs."""
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.lm import LM, RunFlags
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "LM", "RunFlags"]

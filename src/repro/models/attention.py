@@ -1,0 +1,224 @@
+"""Grouped-query attention: training/prefill forward, decode step, cross-attn.
+
+The training path is a chunked (flash-style) implementation — a `lax.map`
+over query chunks so the S x S logits matrix is never materialized (required
+to fit prefill_32k / train_4k activations in HBM; see EXPERIMENTS.md §Perf).
+Semantically it matches ``kernels/flash_attention/ref.py``; on real TPU the
+Pallas kernel (``kernels/flash_attention``) is selected with
+``use_pallas=True``.
+
+Supports: causal, sliding-window (sub-quadratic long-context variant) and
+full (encoder / cross) masking; GQA head replication; arctic-style padded
+query heads (extra heads are dead weight, masked out by zero-init output
+rows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_rope
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0**30  # large-but-finite; avoids NaN from all-masked rows
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.q_heads_padded, cfg.n_kv_heads, cfg.head_dim_
+    del cross  # same shapes; kv inputs differ at apply time
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "q_heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("q_heads", "head_dim", "embed"), scale=0.5),
+    }
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    """Largest divisor of s that is <= target (q-chunk size)."""
+    if s <= target:
+        return s
+    for c in range(target, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd
+    )
+
+
+def attention_forward(
+    x: jax.Array,
+    params: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    mask_kind: str = "causal",  # causal | sliding | full
+    kv_input: Optional[jax.Array] = None,  # cross-attention source
+    use_rope: bool = True,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """(B, S, D) -> (B, S, D).  Chunked over queries."""
+    b, s, _ = x.shape
+    kv_x = x if kv_input is None else kv_input
+    t = kv_x.shape[1]
+    h, kvh, hd = cfg.q_heads_padded, cfg.n_kv_heads, cfg.head_dim_
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dgk->btgk", kv_x, params["wk"])
+    v = jnp.einsum("btd,dgk->btgk", kv_x, params["wv"])
+    if use_rope and kv_input is None:
+        pos = jnp.arange(s)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = _pick_chunk(s, q_chunk)
+    n_chunks = s // qc
+    q = q.reshape(b, n_chunks, qc, h, hd)
+    kv_pos = jnp.arange(t)
+
+    def one_chunk(args):
+        q_blk, chunk_idx = args  # (b, qc, h, hd), scalar
+        q_pos = chunk_idx * qc + jnp.arange(qc)
+        logits = jnp.einsum("bqhk,bthk->bhqt", q_blk, k).astype(jnp.float32) * scale
+        if mask_kind == "causal":
+            mask = kv_pos[None, :] <= q_pos[:, None]
+        elif mask_kind == "sliding":
+            w = cfg.sliding_window
+            mask = (kv_pos[None, :] <= q_pos[:, None]) & (
+                kv_pos[None, :] > q_pos[:, None] - w
+            )
+        else:
+            mask = jnp.ones((qc, t), dtype=bool)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqt,bthk->bqhk", probs, v)
+
+    out = jax.lax.map(one_chunk, (q.transpose(1, 0, 2, 3, 4), jnp.arange(n_chunks)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, window: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, window, kvh, hd), dtype),
+        "v": jnp.zeros((batch, window, kvh, hd), dtype),
+    }
+
+
+def abstract_kv_cache(cfg: ModelConfig, batch: int, window: int, dtype=jnp.bfloat16):
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    sds = jax.ShapeDtypeStruct((batch, window, kvh, hd), dtype)
+    return {"k": sds, "v": sds}
+
+
+def decode_attention(
+    x1: jax.Array,  # (B, 1, D)
+    params: Dict[str, jax.Array],
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,  # scalar int32: index of the token being generated
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+    constrain=None,  # None = off; tuple of mesh axes carrying the batch dim
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step of self-attention against a (ring-buffer) KV cache.
+
+    The cache holds ``window`` slots; with full attention window == max_seq
+    and slot j stores position j.  With sliding-window attention the buffer
+    wraps (slot = pos % window) — RoPE is applied to keys at *write* time
+    with absolute positions, so relative phases stay correct after wrap.
+    """
+    b = x1.shape[0]
+    h, kvh, hd = cfg.q_heads_padded, cfg.n_kv_heads, cfg.head_dim_
+    window = cache["k"].shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x1, params["wq"])
+    k1 = jnp.einsum("bsd,dgk->bsgk", x1, params["wk"])
+    v1 = jnp.einsum("bsd,dgk->bsgk", x1, params["wv"])
+    if use_rope:
+        p = pos[None] if pos.ndim == 0 else pos
+        q = apply_rope(q, p, cfg.rope_theta)
+        k1 = apply_rope(k1, p, cfg.rope_theta)
+    slot = jnp.mod(pos, window)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+    if constrain is not None:
+        # Flash-decode-style sharding: the cache stays seq-sharded over the
+        # model axis through the update, and the (tiny) query is replicated
+        # over "model" instead — so the attention contraction gathers ~1 MB
+        # of q rather than the multi-GB cache, and the softmax runs as
+        # partial reductions over the seq shards (§Perf, decode ladder).
+        from jax.sharding import PartitionSpec as P
+
+        bax = tuple(constrain) or None
+        spec = P(bax, "model", None, None)
+        ck = jax.lax.with_sharding_constraint(ck, spec)
+        cv = jax.lax.with_sharding_constraint(cv, spec)
+        q = jax.lax.with_sharding_constraint(q, P(bax, None, None, None))
+
+    kk = _repeat_kv(ck, h // kvh)  # (B, W, H, hd)
+    vv = _repeat_kv(cv, h // kvh)
+    logits = jnp.einsum("bshk,bthk->bhst", q, kk).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if constrain is not None:
+        from jax.sharding import PartitionSpec as P
+
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(tuple(constrain) or None, None, None, "model")
+        )
+    # slot j is valid iff it has been written: j <= pos (before wrap) or
+    # always (after wrap — every slot holds one of the last `window` keys).
+    valid = jnp.arange(window)[None, :] <= pos
+    valid = valid | (pos >= window)
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x1.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, vv)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def decode_cross_attention(
+    x1: jax.Array,
+    params: Dict[str, jax.Array],
+    cross_k: jax.Array,  # (B, T, KV, hd) precomputed from encoder/vision output
+    cross_v: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    h, kvh, hd = cfg.q_heads_padded, cfg.n_kv_heads, cfg.head_dim_
+    q = jnp.einsum("bsd,dhk->bshk", x1, params["wq"])
+    kk = _repeat_kv(cross_k, h // kvh)
+    vv = _repeat_kv(cross_v, h // kvh)
+    logits = jnp.einsum("bshk,bthk->bhst", q, kk).astype(jnp.float32) / math.sqrt(hd)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x1.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, vv)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def precompute_cross_kv(
+    enc_out: jax.Array, params: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dgk->btgk", enc_out, params["wk"])
+    v = jnp.einsum("btd,dgk->btgk", enc_out, params["wv"])
+    return k, v

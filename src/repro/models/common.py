@@ -1,0 +1,117 @@
+"""Shared model building blocks: parameter schema, norms, RoPE, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every leaf is
+declared once via :class:`ParamSpec` (shape + logical sharding axes + init),
+so abstract shapes (dry-run), real initialization (training) and sharding
+specs (pjit) all derive from the same schema and cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0    # stddev multiplier for "normal"
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+Schema = Dict[str, Any]  # nested dict of ParamSpec
+
+
+def tree_is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(schema: Schema, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct pytree for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        schema,
+        is_leaf=tree_is_spec,
+    )
+
+
+def logical_axes(schema: Schema) -> Params:
+    """Pytree of logical-axis tuples matching the param pytree."""
+    return jax.tree.map(lambda s: s.axes, schema, is_leaf=tree_is_spec)
+
+
+def init_params(schema: Schema, key: jax.Array, dtype=jnp.bfloat16) -> Params:
+    """Materialize real parameters (smoke tests / CPU training)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=tree_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(schema: Schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=tree_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim); positions: (seq,) or
+    broadcastable to x's seq dim."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    # insert heads axis
+    angles = angles[..., :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, vocab_size: int
+) -> jax.Array:
+    """Mean CE over valid labels; labels >= vocab_size or < 0 are masked
+    (covers the padded-vocab convention)."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

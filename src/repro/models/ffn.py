@@ -1,0 +1,137 @@
+"""Feed-forward layers: gated MLPs (SwiGLU / GeGLU / plain GELU) and the
+token-choice top-k Mixture-of-Experts layer with capacity-based dispatch.
+
+The MoE dispatch is scatter/gather-based (not one-hot einsum): positions
+within each expert are computed with a per-sequence cumulative sum, tokens
+are scattered into an (E, C, D) buffer (overflow beyond capacity C is
+dropped, standard GShard semantics), experts run as one batched matmul
+sharded over the ``experts`` logical axis (expert parallelism -> all-to-all
+under GSPMD), and results are gathered back weighted by the router gates.
+Dispatch FLOPs are O(tokens x D) instead of the O(tokens x E x C x D) of the
+one-hot-matmul formulation — that difference is what keeps the MoE archs
+near their roofline compute term (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_down": ParamSpec((d_ff, d), ("ffn", "embed"), scale=0.5),
+        }
+    return {
+        "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "w_down": ParamSpec((d_ff, d), ("ffn", "embed"), scale=0.5),
+    }
+
+
+def _act(h: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(h)
+    if kind == "geglu":
+        return jax.nn.gelu(h)
+    return jax.nn.gelu(h)
+
+
+def mlp(x: jax.Array, params: Dict[str, jax.Array], act: str) -> jax.Array:
+    if "w_gate" in params:
+        h = _act(x @ params["w_gate"], act) * (x @ params["w_up"])
+    else:
+        h = _act(x @ params["w_up"], act)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff_
+    schema: Dict[str, ParamSpec] = {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=0.1),
+        "w_down": ParamSpec((e, f, d), ("experts", "ffn", "embed"), scale=0.5),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "ffn")),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        schema["w_gate"] = ParamSpec((e, d, f), ("experts", "embed", "ffn"))
+    return schema
+
+
+def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    c = math.ceil(seq_len * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor)
+    return max(4, int(math.ceil(c / 4) * 4))
+
+
+def moe(
+    x: jax.Array, params: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE.  x: (B, S, D) -> (y, aux_loss).
+
+    aux_loss = load-balance (switch-style) + router z-loss, already weighted
+    by the config coefficients; the caller just adds it to the model loss.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    c = expert_capacity(cfg, s)
+
+    router_logits = (x @ params["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- position of each (token, k) within its expert, per sequence --------
+    sel = jax.nn.one_hot(expert_idx.reshape(b, s * k), e, dtype=jnp.int32)  # (B,SK,E)
+    cum = jnp.cumsum(sel, axis=1) - sel
+    pos = jnp.sum(sel * cum, axis=-1)  # (B, SK)
+    flat_expert = expert_idx.reshape(b, s * k)
+    overflow = pos >= c
+    dest = jnp.where(overflow, e * c, flat_expert * c + pos)  # drop row at e*c
+
+    # --- scatter tokens into (E, C) slots ------------------------------------
+    x_rep = jnp.repeat(x, k, axis=1)  # (B, S*K, D): token s occupies slots s*k..s*k+k-1
+    batch_ix = jnp.arange(b)[:, None]
+    disp = jnp.zeros((b, e * c + 1, d), x.dtype).at[batch_ix, dest].add(x_rep)
+    disp = disp[:, : e * c].reshape(b, e, c, d)
+
+    # --- expert computation (batched matmul, sharded over experts) ----------
+    if "w_gate" in params:
+        h = _act(jnp.einsum("becd,edf->becf", disp, params["w_gate"]), cfg.act)
+        h = h * jnp.einsum("becd,edf->becf", disp, params["w_up"])
+    else:
+        h = _act(jnp.einsum("becd,edf->becf", disp, params["w_up"]), cfg.act)
+    out = jnp.einsum("becf,efd->becd", h, params["w_down"])
+
+    # --- gather back, weighted by gates --------------------------------------
+    out_flat = out.reshape(b, e * c, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((b, 1, d), out.dtype)], axis=1)
+    y_tok = out_flat[batch_ix, dest]  # (B, S*K, D); dropped slots read zeros
+    w = jnp.where(overflow, 0.0, gate_vals.reshape(b, s * k)).astype(x.dtype)
+    y = (y_tok * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+
+    # --- aux losses -----------------------------------------------------------
+    # load-balance: E * sum_e mean_prob_e * frac_routed_e  (Switch, eq. 4)
+    frac = sel.astype(jnp.float32).reshape(b, s, k, e).sum(2).mean((0, 1)) / k
+    mean_p = probs.mean((0, 1))
+    balance = e * jnp.sum(frac * mean_p)
+    z = jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2)
+    aux = cfg.router_aux_weight * balance + cfg.router_z_weight * z
+    return y, aux

@@ -1,0 +1,758 @@
+"""Model assembly: family-dispatched transformer / SSM / hybrid LMs.
+
+One :class:`LM` object per config provides the five entry points the
+launchers need, all pure functions of pytrees:
+
+* ``schema()``        — parameter schema (shapes + logical sharding axes)
+* ``loss_fn``         — training loss (causal LM; enc-dec for audio)
+* ``prefill_fn``      — prompt pass producing last-token logits + KV/SSM cache
+* ``decode_fn``       — one-token serve step against the cache
+* ``abstract_cache`` / ``init_cache``
+
+Layer stacks are ``lax.scan``-ed over homogeneous *blocks*; heterogeneous
+families (jamba's 1-attn:7-mamba pattern, the VLM's every-5th-cross-attn
+pattern) scan over the repeating pattern block, with the sub-layers stacked
+inside the block and indexed statically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ParamSpec,
+    Schema,
+    abstract_params,
+    cross_entropy_loss,
+    init_params,
+    logical_axes,
+    rms_norm,
+    tree_is_spec,
+)
+from repro.models.config import ModelConfig
+
+
+def stack_schema(schema: Schema, n: int, axis: str = "layers") -> Schema:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis,) + s.axes, s.init, s.scale),
+        schema,
+        is_leaf=tree_is_spec,
+    )
+
+
+def _norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def _zeros_like_abstract(tree):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Perf knobs iterated in EXPERIMENTS.md §Perf (model code is identical;
+    these change scheduling/memory behaviour only)."""
+
+    remat: str = "block"  # none | block | dots
+    q_chunk: int = 512
+    #: lax.scan unroll over layer blocks — only used by the dry-run's
+    #: scan-body cost-correction (see DESIGN.md §4).
+    scan_unroll: int = 1
+    #: "dense" materializes (B, S, V) logits; "chunked" scans the loss over
+    #: seq chunks so only (B, loss_chunk, V) is ever live — the §Perf fix
+    #: for the 200k/256k-vocab architectures whose logits dominate HBM.
+    loss_impl: str = "dense"
+    loss_chunk: int = 512
+    #: pin the decode KV cache to its (batch, seq-over-model) layout and
+    #: replicate the (tiny) query over the model axis — flash-decode-style
+    #: sharding that removes the per-step cache all-gather (§Perf ladder).
+    decode_constrain: bool = False
+    #: mesh axes carrying the batch dim for decode constraints (set by the
+    #: launcher from the actual mesh/batch; () = batch replicated).
+    decode_dp: tuple = ("data",)
+    #: constrain the residual stream to batch-sharded P(dp, None, None) at
+    #: every block boundary (and after the embed gather).  Without this,
+    #: FSDP's embed-dim param sharding propagates into the activations and
+    #: GSPMD replicates the *global batch* through attention (observed:
+    #: 64 GiB f32 logits on arctic-480b — EXPERIMENTS.md §Perf iteration 2).
+    constrain_acts: bool = False
+    act_dp: tuple = ("data",)
+
+
+# ===========================================================================
+# Per-family block definitions
+# ===========================================================================
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        if fam == "hybrid":
+            assert cfg.n_layers % cfg.block_len == 0
+            self.n_blocks = cfg.n_layers // cfg.block_len
+        elif fam == "vlm":
+            assert cfg.cross_attn_every > 0
+            assert cfg.n_layers % cfg.cross_attn_every == 0
+            self.n_blocks = cfg.n_layers // cfg.cross_attn_every
+        else:
+            self.n_blocks = cfg.n_layers
+
+    # -- schema ---------------------------------------------------------------
+    def _block_schema(self) -> Schema:
+        cfg = self.cfg
+        d = cfg.d_model
+        fam = cfg.family
+        if fam == "dense":
+            return {
+                "attn_norm": _norm_spec(d),
+                "attn": attn_mod.attn_schema(cfg),
+                "mlp_norm": _norm_spec(d),
+                "mlp": ffn_mod.mlp_schema(cfg, cfg.d_ff),
+            }
+        if fam == "moe":
+            block: Schema = {
+                "attn_norm": _norm_spec(d),
+                "attn": attn_mod.attn_schema(cfg),
+                "mlp_norm": _norm_spec(d),
+                "moe": ffn_mod.moe_schema(cfg),
+            }
+            if cfg.dense_residual:
+                block["mlp"] = ffn_mod.mlp_schema(cfg, cfg.d_ff)
+            return block
+        if fam == "ssm":
+            return {"norm": _norm_spec(d), "ssm": ssm_mod.ssm_schema(cfg)}
+        if fam == "hybrid":
+            bl = cfg.block_len
+            n_ssm = bl - 1
+            n_moe = sum(1 for i in range(bl) if i % 2 == 1)
+            n_mlp = bl - n_moe
+            return {
+                "ssm_norm": ParamSpec((n_ssm, d), ("sublayer", "embed"), init="ones"),
+                "ssm": stack_schema(ssm_mod.ssm_schema(cfg), n_ssm, "sublayer"),
+                "attn_norm": _norm_spec(d),
+                "attn": attn_mod.attn_schema(cfg),
+                "mlp_norm": ParamSpec((bl, d), ("sublayer", "embed"), init="ones"),
+                "mlp": stack_schema(ffn_mod.mlp_schema(cfg, cfg.d_ff), n_mlp, "sublayer"),
+                "moe": stack_schema(ffn_mod.moe_schema(cfg), n_moe, "sublayer"),
+            }
+        if fam == "vlm":
+            n_self = cfg.cross_attn_every - 1
+            per = cfg.cross_attn_every
+            return {
+                "self_norm": ParamSpec((n_self, d), ("sublayer", "embed"), init="ones"),
+                "self_attn": stack_schema(attn_mod.attn_schema(cfg), n_self, "sublayer"),
+                "cross_norm": _norm_spec(d),
+                "cross_attn": attn_mod.attn_schema(cfg, cross=True),
+                "cross_gate": ParamSpec((1,), (None,), init="zeros"),
+                "mlp_norm": ParamSpec((per, d), ("sublayer", "embed"), init="ones"),
+                "mlp": stack_schema(ffn_mod.mlp_schema(cfg, cfg.d_ff), per, "sublayer"),
+            }
+        if fam == "audio":
+            return {  # decoder block
+                "self_norm": _norm_spec(d),
+                "self_attn": attn_mod.attn_schema(cfg),
+                "cross_norm": _norm_spec(d),
+                "cross_attn": attn_mod.attn_schema(cfg, cross=True),
+                "mlp_norm": _norm_spec(d),
+                "mlp": ffn_mod.mlp_schema(cfg, cfg.d_ff),
+            }
+        raise ValueError(fam)
+
+    def _enc_block_schema(self) -> Schema:
+        cfg = self.cfg
+        return {
+            "attn_norm": _norm_spec(cfg.d_model),
+            "attn": attn_mod.attn_schema(cfg),
+            "mlp_norm": _norm_spec(cfg.d_model),
+            "mlp": ffn_mod.mlp_schema(cfg, cfg.d_ff),
+        }
+
+    def schema(self) -> Schema:
+        cfg = self.cfg
+        out: Schema = {
+            "embed": ParamSpec(
+                (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0
+            ),
+            "blocks": stack_schema(self._block_schema(), self.n_blocks),
+            "final_norm": _norm_spec(cfg.d_model),
+        }
+        if cfg.family == "audio":
+            out["enc_blocks"] = stack_schema(self._enc_block_schema(), cfg.enc_layers)
+            out["enc_norm"] = _norm_spec(cfg.d_model)
+        return out
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract_params(self.schema(), dtype)
+
+    def init(self, key: jax.Array, dtype=jnp.bfloat16):
+        return init_params(self.schema(), key, dtype)
+
+    def logical_axes(self):
+        return logical_axes(self.schema())
+
+    # =======================================================================
+    # Training / prefill block application
+    # =======================================================================
+
+    def _apply_block(
+        self,
+        x: jax.Array,
+        bp: Dict[str, Any],
+        *,
+        mask_kind: str,
+        cross_src: Optional[jax.Array],
+        flags: RunFlags,
+        collect_kv: bool,
+    ) -> Tuple[jax.Array, jax.Array, Any]:
+        """Returns (x, aux_loss, kv_collection or ssm/conv cache pieces)."""
+        cfg = self.cfg
+        fam = cfg.family
+        aux = jnp.zeros((), jnp.float32)
+        kv = None
+
+        def self_attn(x, norm, ap):
+            h = rms_norm(x, norm)
+            y = attn_mod.attention_forward(
+                h, ap, cfg, mask_kind=mask_kind, q_chunk=flags.q_chunk
+            )
+            out = x + y
+            if collect_kv:
+                k = jnp.einsum("btd,dgk->btgk", h, ap["wk"])
+                k = attn_mod.apply_rope(k, jnp.arange(h.shape[1]), cfg.rope_theta)
+                v = jnp.einsum("btd,dgk->btgk", h, ap["wv"])
+                return out, {"k": k, "v": v}
+            return out, None
+
+        if fam in ("dense", "moe"):
+            x, kv = self_attn(x, bp["attn_norm"], bp["attn"])
+            h = rms_norm(x, bp["mlp_norm"])
+            if fam == "dense":
+                x = x + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+            else:
+                y, a = ffn_mod.moe(h, bp["moe"], cfg)
+                if cfg.dense_residual:
+                    y = y + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+                x = x + y
+                aux = aux + a
+            return x, aux, kv
+
+        if fam == "ssm":
+            h = rms_norm(x, bp["norm"])
+            if collect_kv:
+                y, cache = ssm_mod_prefill(h, bp["ssm"], cfg)
+                kv = cache
+            else:
+                y = ssm_mod.ssm_forward(h, bp["ssm"], cfg)
+            return x + y, aux, kv
+
+        if fam == "hybrid":
+            kvs: Dict[str, Any] = {}
+            ssm_i = mlp_i = moe_i = 0
+            for pos in range(cfg.block_len):
+                if pos == cfg.attn_index_in_block:
+                    x, akv = self_attn(x, bp["attn_norm"], bp["attn"])
+                    if collect_kv:
+                        kvs["attn"] = akv
+                else:
+                    sp = jax.tree.map(lambda a: a[ssm_i], bp["ssm"])
+                    h = rms_norm(x, bp["ssm_norm"][ssm_i])
+                    if collect_kv:
+                        y, sc = ssm_mod_prefill(h, sp, cfg)
+                        kvs.setdefault("ssm", []).append(sc)
+                    else:
+                        y = ssm_mod.ssm_forward(h, sp, cfg)
+                    x = x + y
+                    ssm_i += 1
+                h = rms_norm(x, bp["mlp_norm"][pos])
+                if pos % 2 == 1:  # MoE on odd positions
+                    mp = jax.tree.map(lambda a: a[moe_i], bp["moe"])
+                    y, a = ffn_mod.moe(h, mp, cfg)
+                    aux = aux + a
+                    moe_i += 1
+                else:
+                    mp = jax.tree.map(lambda a: a[mlp_i], bp["mlp"])
+                    y = ffn_mod.mlp(h, mp, cfg.act)
+                    mlp_i += 1
+                x = x + y
+            if collect_kv and "ssm" in kvs:
+                kvs["ssm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs["ssm"])
+            return x, aux, (kvs if collect_kv else None)
+
+        if fam == "vlm":
+            kvs = {}
+            self_kvs = []
+            for i in range(cfg.cross_attn_every - 1):
+                ap = jax.tree.map(lambda a: a[i], bp["self_attn"])
+                x, akv = self_attn(x, bp["self_norm"][i], ap)
+                if collect_kv:
+                    self_kvs.append(akv)
+                h = rms_norm(x, bp["mlp_norm"][i])
+                mp = jax.tree.map(lambda a: a[i], bp["mlp"])
+                x = x + ffn_mod.mlp(h, mp, cfg.act)
+            # cross-attention sub-layer (gated, zero-init gate)
+            h = rms_norm(x, bp["cross_norm"])
+            y = attn_mod.attention_forward(
+                h, bp["cross_attn"], cfg, mask_kind="full", kv_input=cross_src,
+                use_rope=False, q_chunk=flags.q_chunk
+            )
+            x = x + jnp.tanh(bp["cross_gate"]).astype(x.dtype) * y
+            i = cfg.cross_attn_every - 1
+            h = rms_norm(x, bp["mlp_norm"][i])
+            mp = jax.tree.map(lambda a: a[i], bp["mlp"])
+            x = x + ffn_mod.mlp(h, mp, cfg.act)
+            if collect_kv:
+                kvs["self"] = jax.tree.map(lambda *xs: jnp.stack(xs), *self_kvs)
+                # cross K/V from the (constant) vision tokens
+                ck, cv = attn_mod.precompute_cross_kv(cross_src, bp["cross_attn"])
+                kvs["cross"] = {"k": ck, "v": cv}
+            return x, aux, (kvs if collect_kv else None)
+
+        if fam == "audio":  # decoder block
+            x, akv = self_attn(x, bp["self_norm"], bp["self_attn"])
+            h = rms_norm(x, bp["cross_norm"])
+            y = attn_mod.attention_forward(
+                h, bp["cross_attn"], cfg, mask_kind="full", kv_input=cross_src,
+                use_rope=False, q_chunk=flags.q_chunk
+            )
+            x = x + y
+            h = rms_norm(x, bp["mlp_norm"])
+            x = x + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+            kvs = None
+            if collect_kv:
+                ck, cv = attn_mod.precompute_cross_kv(cross_src, bp["cross_attn"])
+                kvs = {"self": akv, "cross": {"k": ck, "v": cv}}
+            return x, aux, kvs
+
+        raise ValueError(fam)
+
+    # -- stacks ---------------------------------------------------------------
+    def _run_blocks(
+        self,
+        x: jax.Array,
+        blocks,
+        *,
+        mask_kind: str,
+        cross_src: Optional[jax.Array],
+        flags: RunFlags,
+        collect_kv: bool = False,
+    ):
+        def body(carry, bp):
+            x, aux = carry
+            if flags.constrain_acts:
+                from jax.sharding import PartitionSpec as P
+
+                x = jax.lax.with_sharding_constraint(
+                    x, P(tuple(flags.act_dp) or None, None, None)
+                )
+            x2, a, kv = self._apply_block(
+                x, bp, mask_kind=mask_kind, cross_src=cross_src,
+                flags=flags, collect_kv=collect_kv,
+            )
+            return (x2, aux + a), kv
+
+        if flags.remat == "block":
+            body = jax.checkpoint(body)
+        elif flags.remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        (x, aux), kvs = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), blocks, unroll=flags.scan_unroll
+        )
+        return x, aux, kvs
+
+    def _encode(self, params, audio_embeds, flags: RunFlags):
+        cfg = self.cfg
+
+        def body(carry, bp):
+            x = carry
+            h = rms_norm(x, bp["attn_norm"])
+            y = attn_mod.attention_forward(
+                h, bp["attn"], cfg, mask_kind="full", q_chunk=flags.q_chunk
+            )
+            x = x + y
+            h = rms_norm(x, bp["mlp_norm"])
+            x = x + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+            return x, None
+
+        if flags.remat in ("block", "dots"):
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(
+            body, audio_embeds, params["enc_blocks"], unroll=flags.scan_unroll
+        )
+        return rms_norm(x, params["enc_norm"])
+
+    def _cross_source(self, params, batch, flags: RunFlags):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self._encode(params, batch["audio_embeds"], flags)
+        if cfg.family == "vlm":
+            return batch["image_embeds"]
+        return None
+
+    # =======================================================================
+    # Public entry points
+    # =======================================================================
+
+    def loss_fn(self, params, batch, flags: RunFlags = RunFlags()):
+        """batch: tokens (B,S) int32, labels (B,S) int32
+        [+ audio_embeds (B,F,D) | image_embeds (B,V,D)]."""
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        if flags.constrain_acts:
+            from jax.sharding import PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(
+                x, P(tuple(flags.act_dp) or None, None, None)
+            )
+        cross_src = self._cross_source(params, batch, flags)
+        mask = "sliding" if cfg.sliding_window else "causal"
+        x, aux, _ = self._run_blocks(
+            x, params["blocks"], mask_kind=mask, cross_src=cross_src, flags=flags
+        )
+        x = rms_norm(x, params["final_norm"])
+        if flags.loss_impl == "chunked":
+            loss = self._chunked_ce(x, params["embed"], batch["labels"], flags)
+        else:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+            loss = cross_entropy_loss(logits, batch["labels"], cfg.vocab_size)
+        total = loss + aux
+        return total, {"ce": loss, "aux": aux}
+
+    def _chunked_ce(self, x, embed, labels, flags: RunFlags):
+        """CE scanned over seq chunks: the (B, chunk, V) logits tile is the
+        only vocab-sized live tensor (fwd and — via checkpoint — bwd)."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        chunk = min(flags.loss_chunk, s)
+        while s % chunk:
+            chunk //= 2
+        nc = s // chunk
+        xr = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        lr = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def body(acc, inp):
+            xc, lc = inp
+            logits = jnp.einsum("bsd,vd->bsv", xc, embed).astype(jnp.float32)
+            valid = (lc >= 0) & (lc < cfg.vocab_size)
+            safe = jnp.where(valid, lc, 0)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+            nll_sum, n_valid = acc
+            return (
+                nll_sum + (((lse - gold) * valid).sum()).astype(jnp.float32),
+                n_valid + valid.sum(),
+            ), None
+
+        (nll, n), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xr, lr))
+        return nll / jnp.maximum(n, 1)
+
+    # -- caches ------------------------------------------------------------
+    def kv_window(self, max_seq: int) -> int:
+        cfg = self.cfg
+        return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+
+    def abstract_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        w = self.kv_window(max_seq)
+        nb = self.n_blocks
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+            )
+
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            layer = attn_mod.abstract_kv_cache(cfg, batch, w, dtype)
+        elif fam == "ssm":
+            layer = ssm_mod.abstract_ssm_cache(cfg, batch, dtype)
+        elif fam == "hybrid":
+            layer = {
+                "attn": attn_mod.abstract_kv_cache(cfg, batch, w, dtype),
+                "ssm": stack(ssm_mod.abstract_ssm_cache(cfg, batch, dtype), cfg.block_len - 1),
+            }
+        elif fam == "vlm":
+            kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+            layer = {
+                "self": stack(
+                    attn_mod.abstract_kv_cache(cfg, batch, w, dtype),
+                    cfg.cross_attn_every - 1,
+                ),
+                "cross": {
+                    "k": jax.ShapeDtypeStruct((batch, cfg.vision_tokens, kvh, hd), dtype),
+                    "v": jax.ShapeDtypeStruct((batch, cfg.vision_tokens, kvh, hd), dtype),
+                },
+            }
+        elif fam == "audio":
+            kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+            layer = {
+                "self": attn_mod.abstract_kv_cache(cfg, batch, w, dtype),
+                "cross": {
+                    "k": jax.ShapeDtypeStruct((batch, cfg.audio_frames, kvh, hd), dtype),
+                    "v": jax.ShapeDtypeStruct((batch, cfg.audio_frames, kvh, hd), dtype),
+                },
+            }
+        else:
+            raise ValueError(fam)
+        return {
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "layers": stack(layer, nb),
+        }
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return _zeros_like_abstract(self.abstract_cache(batch, max_seq, dtype))
+
+    # -- decode -------------------------------------------------------------
+    def _decode_block(self, x, bp, bc, pos, flags: RunFlags = RunFlags()):
+        cfg = self.cfg
+        dc = flags.decode_dp if flags.decode_constrain else None
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            h = rms_norm(x, bp["attn_norm"])
+            y, kv = attn_mod.decode_attention(h, bp["attn"], bc, pos, cfg, constrain=dc)
+            x = x + y
+            h = rms_norm(x, bp["mlp_norm"])
+            if fam == "dense":
+                x = x + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+            else:
+                y, _ = ffn_mod.moe(h, bp["moe"], cfg)
+                if cfg.dense_residual:
+                    y = y + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+                x = x + y
+            return x, kv
+
+        if fam == "ssm":
+            h = rms_norm(x, bp["norm"])
+            y, cache = ssm_mod.ssm_decode_step(h, bp["ssm"], bc, cfg)
+            return x + y, cache
+
+        if fam == "hybrid":
+            new_cache = {"attn": bc["attn"], "ssm": bc["ssm"]}
+            ssm_i = mlp_i = moe_i = 0
+            ssm_caches = []
+            for p in range(cfg.block_len):
+                if p == cfg.attn_index_in_block:
+                    h = rms_norm(x, bp["attn_norm"])
+                    y, kv = attn_mod.decode_attention(h, bp["attn"], bc["attn"], pos, cfg, constrain=dc)
+                    new_cache["attn"] = kv
+                    x = x + y
+                else:
+                    sp = jax.tree.map(lambda a: a[ssm_i], bp["ssm"])
+                    sc = jax.tree.map(lambda a: a[ssm_i], bc["ssm"])
+                    h = rms_norm(x, bp["ssm_norm"][ssm_i])
+                    y, sc2 = ssm_mod.ssm_decode_step(h, sp, sc, cfg)
+                    ssm_caches.append(sc2)
+                    x = x + y
+                    ssm_i += 1
+                h = rms_norm(x, bp["mlp_norm"][p])
+                if p % 2 == 1:
+                    mp = jax.tree.map(lambda a: a[moe_i], bp["moe"])
+                    y, _ = ffn_mod.moe(h, mp, cfg)
+                    moe_i += 1
+                else:
+                    mp = jax.tree.map(lambda a: a[mlp_i], bp["mlp"])
+                    y = ffn_mod.mlp(h, mp, cfg.act)
+                    mlp_i += 1
+                x = x + y
+            new_cache["ssm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_caches)
+            return x, new_cache
+
+        if fam == "vlm":
+            new_self = []
+            for i in range(cfg.cross_attn_every - 1):
+                ap = jax.tree.map(lambda a: a[i], bp["self_attn"])
+                sc = jax.tree.map(lambda a: a[i], bc["self"])
+                h = rms_norm(x, bp["self_norm"][i])
+                y, kv = attn_mod.decode_attention(h, ap, sc, pos, cfg, constrain=dc)
+                new_self.append(kv)
+                x = x + y
+                h = rms_norm(x, bp["mlp_norm"][i])
+                mp = jax.tree.map(lambda a: a[i], bp["mlp"])
+                x = x + ffn_mod.mlp(h, mp, cfg.act)
+            h = rms_norm(x, bp["cross_norm"])
+            y = attn_mod.decode_cross_attention(
+                h, bp["cross_attn"], bc["cross"]["k"], bc["cross"]["v"], cfg
+            )
+            x = x + jnp.tanh(bp["cross_gate"]).astype(x.dtype) * y
+            i = cfg.cross_attn_every - 1
+            h = rms_norm(x, bp["mlp_norm"][i])
+            mp = jax.tree.map(lambda a: a[i], bp["mlp"])
+            x = x + ffn_mod.mlp(h, mp, cfg.act)
+            cache = {
+                "self": jax.tree.map(lambda *xs: jnp.stack(xs), *new_self),
+                "cross": bc["cross"],
+            }
+            return x, cache
+
+        if fam == "audio":
+            h = rms_norm(x, bp["self_norm"])
+            y, kv = attn_mod.decode_attention(h, bp["self_attn"], bc["self"], pos, cfg, constrain=dc)
+            x = x + y
+            h = rms_norm(x, bp["cross_norm"])
+            y = attn_mod.decode_cross_attention(
+                h, bp["cross_attn"], bc["cross"]["k"], bc["cross"]["v"], cfg
+            )
+            x = x + y
+            h = rms_norm(x, bp["mlp_norm"])
+            x = x + ffn_mod.mlp(h, bp["mlp"], cfg.act)
+            return x, {"self": kv, "cross": bc["cross"]}
+
+        raise ValueError(fam)
+
+    def decode_fn(self, params, cache, token, flags: RunFlags = RunFlags()):
+        """One serve step.  token: (B, 1) int32 -> (logits (B, vocab), cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"][token]
+
+        def body(x, scanned):
+            bp, bc = scanned
+            x2, nc = self._decode_block(x, bp, bc, pos, flags)
+            return x2, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["blocks"], cache["layers"]), unroll=flags.scan_unroll
+        )
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0, : cfg.vocab_size]
+        return logits, {"pos": pos + 1, "layers": new_layers}
+
+    # -- prefill -------------------------------------------------------------
+    def prefill_fn(self, params, batch, max_seq: int, flags: RunFlags = RunFlags()):
+        """Prompt pass: batch["tokens"] (B,S) -> (last-token logits, cache).
+
+        The returned cache is laid out exactly as ``init_cache(B, max_seq)``
+        so ``decode_fn`` can continue from position S.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        w = self.kv_window(max_seq)
+        x = params["embed"][tokens]
+        cross_src = self._cross_source(params, batch, flags)
+        mask = "sliding" if cfg.sliding_window else "causal"
+        x, _, kvs = self._run_blocks(
+            x, params["blocks"], mask_kind=mask, cross_src=cross_src,
+            flags=flags, collect_kv=True,
+        )
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"])[:, : cfg.vocab_size]
+        cache = {"pos": jnp.asarray(s, jnp.int32), "layers": self._pack_cache(kvs, s, w, max_seq)}
+        return logits, cache
+
+    def _ring_pack(self, k: jax.Array, s: int, w: int) -> jax.Array:
+        """Place the last w of s keys into ring-buffer slots (slot = pos % w)."""
+        if s <= w:
+            pad = [(0, 0), (0, w - s)] + [(0, 0)] * (k.ndim - 2)
+            return jnp.pad(k, pad)
+        last = k[:, s - w :]
+        positions = np.arange(s - w, s)
+        slots = positions % w
+        inv = np.empty(w, dtype=np.int32)
+        inv[slots] = np.arange(w)
+        return last[:, inv]
+
+    def _pack_cache(self, kvs, s: int, w: int, max_seq: int):
+        cfg = self.cfg
+        fam = cfg.family
+
+        def pack_kv(kv):
+            return {
+                "k": self._ring_pack(kv["k"], s, w),
+                "v": self._ring_pack(kv["v"], s, w),
+            }
+
+        if fam in ("dense", "moe"):
+            return {
+                "k": self._ring_pack_stacked(kvs["k"], s, w),
+                "v": self._ring_pack_stacked(kvs["v"], s, w),
+            }
+        if fam == "ssm":
+            return kvs  # stacked ssm caches from prefill
+        if fam == "hybrid":
+            return {
+                "attn": {
+                    "k": self._ring_pack_stacked(kvs["attn"]["k"], s, w),
+                    "v": self._ring_pack_stacked(kvs["attn"]["v"], s, w),
+                },
+                "ssm": kvs["ssm"],
+            }
+        if fam == "vlm":
+            return {
+                "self": {
+                    "k": self._ring_pack_stacked(kvs["self"]["k"], s, w, extra_lead=1),
+                    "v": self._ring_pack_stacked(kvs["self"]["v"], s, w, extra_lead=1),
+                },
+                "cross": kvs["cross"],
+            }
+        if fam == "audio":
+            return {
+                "self": {
+                    "k": self._ring_pack_stacked(kvs["self"]["k"], s, w),
+                    "v": self._ring_pack_stacked(kvs["self"]["v"], s, w),
+                },
+                "cross": kvs["cross"],
+            }
+        raise ValueError(fam)
+
+    def _ring_pack_stacked(self, k: jax.Array, s: int, w: int, extra_lead: int = 0):
+        """k: (L[, sub], B, S, KV, hd) stacked over scan outputs."""
+        lead = 1 + extra_lead
+        flat = k.reshape((-1,) + k.shape[lead:])
+        packed = jax.vmap(lambda kk: self._ring_pack(kk, s, w))(flat)
+        return packed.reshape(k.shape[:lead] + packed.shape[1:])
+
+
+def ssm_mod_prefill(h, params, cfg):
+    """SSM forward that also returns the decode cache (conv + state)."""
+    bsz, s, _ = h.shape
+    nh, p = cfg.ssm_n_heads, cfg.ssm_head_dim
+    wd = cfg.ssm_conv_width
+
+    z = h @ params["w_z"]
+    xs_pre = h @ params["w_x"]
+    bp_pre = h @ params["w_B"]
+    cp_pre = h @ params["w_C"]
+    dt = jax.nn.softplus((h @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    xs = jax.nn.silu(ssm_mod.causal_conv(xs_pre, params["conv_x"], params["conv_bias_x"]))
+    bp = jax.nn.silu(ssm_mod.causal_conv(bp_pre, params["conv_B"], params["conv_bias_B"]))
+    cp = jax.nn.silu(ssm_mod.causal_conv(cp_pre, params["conv_C"], params["conv_bias_C"]))
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, s, nh, p)
+    y, h_final = ssm_mod.ssd_scan(
+        xh, dt.astype(xs.dtype), a, bp, cp,
+        chunk=ssm_mod.pick_chunk(s, cfg.ssm_chunk),
+    )
+    y = y + xh * params["D"].astype(h.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, nh * p)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["out_proj"]
+
+    def last_w(pre):  # (B, S, C) -> (B, C, wd-1) last pre-conv inputs
+        tail = pre[:, s - (wd - 1) :, :] if s >= wd - 1 else jnp.pad(
+            pre, ((0, 0), (wd - 1 - s, 0), (0, 0))
+        )
+        return tail.transpose(0, 2, 1)
+
+    cache = {
+        "conv_x": last_w(xs_pre),
+        "conv_B": last_w(bp_pre),
+        "conv_C": last_w(cp_pre),
+        "state": h_final,
+    }
+    return out, cache

@@ -1,0 +1,244 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer [arXiv:2405.21060].
+
+Training uses the chunked SSD algorithm: within a chunk the recurrence is
+computed as a masked quadratic form (the "dual" attention-like view), and
+chunk states are passed with a `lax.scan` — O(S * chunk) work, constant
+memory in S.  Decode is the O(1) recurrent state update.
+
+The recurrence (per head h, state size N, head dim P):
+
+    h_i = exp(dt_i * A) * h_{i-1} + dt_i * B_i x_i^T
+    y_i = C_i . h_i + D * x_i
+
+``ssd_scan`` here is also the semantic reference for the Pallas kernel in
+``kernels/ssd`` (its ref.py calls this).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0**30
+
+
+def ssm_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    h, w = cfg.ssm_n_heads, cfg.ssm_conv_width
+    return {
+        "w_z": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "w_x": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "w_B": ParamSpec((d, n), ("embed", None)),
+        "w_C": ParamSpec((d, n), ("embed", None)),
+        "w_dt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((di, w), ("ssm_inner", None), init="normal", scale=1.0),
+        "conv_B": ParamSpec((n, w), (None, None)),
+        "conv_C": ParamSpec((n, w), (None, None)),
+        "conv_bias_x": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "conv_bias_B": ParamSpec((n,), (None,), init="zeros"),
+        "conv_bias_C": ParamSpec((n,), (None,), init="zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), scale=0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width w), train and single-step forms
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (C, W) depthwise causal conv; returns (B, S, C)."""
+    width = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # unrolled taps — width is 4; avoids conv_general_dilated layout pitfalls
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[:, i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def conv_step(
+    x1: jax.Array, state: jax.Array, w: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x1: (B, C) new input; state: (B, C, W-1) previous inputs.
+    Returns (conv output (B, C), new state)."""
+    width = w.shape[-1]
+    full = jnp.concatenate([state, x1[:, :, None]], axis=-1)  # (B, C, W)
+    y = jnp.sum(full * w[None, :, :], axis=-1) + b[None, :]
+    return y, full[:, :, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (already softplus'd, >= 0)
+    a: jax.Array,   # (H,)       (negative: -exp(A_log))
+    b_in: jax.Array,  # (B, S, N)
+    c_in: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array = None,  # (B, H, P, N) initial state or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc, q = s // chunk, chunk
+
+    dA = (dt * a[None, None, :]).astype(jnp.float32)  # (B,S,H), <= 0
+    xr = x.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    dAr = dA.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    br = b_in.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    cr = c_in.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((q, q), dtype=bool))  # j <= i
+
+    def body(h_state, inp):
+        xc, dtc, dac, bc, cc = inp  # (B,q,h,p) (B,q,h) (B,q,h) (B,q,n) (B,q,n)
+        cum = jnp.cumsum(dac, axis=1)  # (B,q,h)
+        total = cum[:, -1, :]  # (B,h)
+        # inter-chunk: y_i += exp(cum_i) * C_i . h_state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc.astype(jnp.float32), h_state)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # intra-chunk masked quadratic
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,h)
+        diff = jnp.where(tri[None, :, :, None], diff, NEG_INF)
+        el = jnp.exp(diff) * dtc[:, None, :, :]  # (B,i,j,h)
+        scores = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, el, xc.astype(jnp.float32))
+        # state update
+        decay = jnp.exp(total[:, None, :] - cum) * dtc  # (B,j,h)
+        new_state = h_state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", decay, bc.astype(jnp.float32), xc.astype(jnp.float32)
+        )
+        return new_state, (y_inter + y_intra).astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(body, h0, (xr, dtr, dAr, br, cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, h_final
+
+
+def ssd_step(
+    x1: jax.Array,   # (B, H, P)
+    dt1: jax.Array,  # (B, H)
+    a: jax.Array,    # (H,)
+    b1: jax.Array,   # (B, N)
+    c1: jax.Array,   # (B, N)
+    h_state: jax.Array,  # (B, H, P, N) float32
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step.  Returns (y (B,H,P), new state)."""
+    da = jnp.exp((dt1 * a[None, :]).astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1.astype(jnp.float32), b1.astype(jnp.float32), x1.astype(jnp.float32)
+    )
+    new_state = h_state * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c1.astype(jnp.float32), new_state)
+    return y.astype(x1.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mixer layer
+# ---------------------------------------------------------------------------
+
+
+def pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (SSD chunk size)."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def ssm_forward(x: jax.Array, params: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    """(B, S, D) -> (B, S, D) Mamba-2 mixer (train/prefill)."""
+    bsz, s, _ = x.shape
+    h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x @ params["w_z"]
+    xs = x @ params["w_x"]
+    bp = x @ params["w_B"]
+    cp = x @ params["w_C"]
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    xs = jax.nn.silu(causal_conv(xs, params["conv_x"], params["conv_bias_x"]))
+    bp = jax.nn.silu(causal_conv(bp, params["conv_B"], params["conv_bias_B"]))
+    cp = jax.nn.silu(causal_conv(cp, params["conv_C"], params["conv_bias_C"]))
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, s, h, p)
+    y, _ = ssd_scan(xh, dt.astype(xs.dtype), a, bp, cp, chunk=pick_chunk(s, cfg.ssm_chunk))
+    y = y + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, h * p)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, w = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv_width
+    h, p = cfg.ssm_n_heads, cfg.ssm_head_dim
+    return {
+        "conv_x": jnp.zeros((batch, di, w - 1), dtype),
+        "conv_B": jnp.zeros((batch, n, w - 1), dtype),
+        "conv_C": jnp.zeros((batch, n, w - 1), dtype),
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def abstract_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, w = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv_width
+    h, p = cfg.ssm_n_heads, cfg.ssm_head_dim
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, di, w - 1), dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, n, w - 1), dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, n, w - 1), dtype),
+        "state": jax.ShapeDtypeStruct((batch, h, p, n), jnp.float32),
+    }
+
+
+def ssm_decode_step(
+    x1: jax.Array, params: Dict[str, jax.Array], cache, cfg: ModelConfig
+) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x1: (B, 1, D) -> (y (B,1,D), new cache)."""
+    bsz = x1.shape[0]
+    h, p = cfg.ssm_n_heads, cfg.ssm_head_dim
+    x0 = x1[:, 0, :]
+
+    z = x0 @ params["w_z"]
+    xs = x0 @ params["w_x"]
+    bp = x0 @ params["w_B"]
+    cp = x0 @ params["w_C"]
+    dt = jax.nn.softplus((x0 @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    xs, conv_x = conv_step(xs, cache["conv_x"], params["conv_x"], params["conv_bias_x"])
+    bp, conv_b = conv_step(bp, cache["conv_B"], params["conv_B"], params["conv_bias_B"])
+    cp, conv_c = conv_step(cp, cache["conv_C"], params["conv_C"], params["conv_bias_C"])
+    xs, bp, cp = jax.nn.silu(xs), jax.nn.silu(bp), jax.nn.silu(cp)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, state = ssd_step(
+        xs.reshape(bsz, h, p), dt.astype(xs.dtype), a, bp, cp, cache["state"]
+    )
+    y = y + xs.reshape(bsz, h, p) * params["D"].astype(x1.dtype)[None, :, None]
+    y = y.reshape(bsz, h * p)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = (y @ params["out_proj"])[:, None, :]
+    new_cache = {"conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c, "state": state}
+    return out, new_cache

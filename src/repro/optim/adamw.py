@@ -1,0 +1,106 @@
+"""AdamW with decoupled weight decay, gradient clipping, and schedules.
+
+Plain-pytree implementation (no optax dependency).  Moment dtype is
+configurable: f32 by default; the largest assigned architectures
+(arctic-480b, jamba-52b) use bf16 moments so the optimizer state fits the
+per-chip HBM budget — the trade-off is recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params, cfg: AdamWConfig):
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(sds, abstract_params),
+        "v": jax.tree.map(sds, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    cfg: AdamWConfig,
+    lr: jax.Array | float | None = None,
+):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr_t = cfg.lr if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr_t * delta
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [n[0] for n in new])
+    new_m = jax.tree.unflatten(treedef, [n[1] for n in new])
+    new_v = jax.tree.unflatten(treedef, [n[2] for n in new])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm},
+    )
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule

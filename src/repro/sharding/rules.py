@@ -1,0 +1,226 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility guards.
+
+Every parameter leaf carries logical axis names (from the model schema);
+this module maps them to mesh axes per *strategy*:
+
+* ``tp``    — megatron-style tensor parallel: heads/ffn/experts/vocab over
+              "model", params replicated across "data"/"pod".
+* ``fsdp``  — tp + the "embed" axis sharded over ("data",) (and "pod" on the
+              multi-pod mesh): ZeRO-3-style weight sharding for the largest
+              models.
+* ``zero1`` — tp for params, but optimizer moments additionally sharded over
+              the data axis (ZeRO-1).
+* ``dp``    — everything replicated (tiny models: pure data parallel).
+
+A mesh axis is only used when it exactly divides the dimension — otherwise
+it is dropped (e.g. yi-9b's 4 kv-heads stay replicated on a 16-way model
+axis).  This guard is what lets one rule table serve all 10 architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axes that shard over the tensor-parallel ("model") mesh axis.
+_TP_AXES = (
+    "vocab",
+    "ffn",
+    "q_heads",
+    "kv_heads",
+    "experts",
+    "ssm_inner",
+    "ssm_heads",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingStrategy:
+    name: str = "tp"           # tp | fsdp | zero1 | dp
+    fsdp_axis: str = "embed"   # logical axis sharded over data under fsdp
+    #: shard moments over data even when params are replicated over data
+    zero1: bool = False
+
+    @classmethod
+    def from_name(cls, name: str) -> "ShardingStrategy":
+        if name == "zero1":
+            return cls(name="zero1", zero1=True)
+        return cls(name=name)
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for_param(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    strategy: ShardingStrategy,
+) -> P:
+    """PartitionSpec for one parameter from its logical axes."""
+    entries = []
+    used: set = set()  # a mesh axis may appear at most once per spec
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if strategy.name == "dp":
+            entries.append(None)
+            continue
+        if (
+            name in _TP_AXES
+            and "model" not in used
+            and dim % mesh.shape["model"] == 0
+        ):
+            assigned = "model"
+        elif strategy.name == "fsdp" and name == strategy.fsdp_axis:
+            da = _data_axes(mesh)
+            if da and not used.intersection(da) and dim % _axis_size(mesh, da) == 0:
+                assigned = da if len(da) > 1 else da[0]
+        if assigned is not None:
+            used.update([assigned] if isinstance(assigned, str) else assigned)
+        entries.append(assigned)
+    return P(*entries)
+
+
+def param_shardings(
+    axes_tree, abstract_tree, mesh: Mesh, strategy: ShardingStrategy
+):
+    """NamedSharding pytree for the whole parameter tree."""
+    return jax.tree.map(
+        lambda ax, sds: NamedSharding(
+            mesh, spec_for_param(ax, sds.shape, mesh, strategy)
+        ),
+        axes_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def moment_shardings(param_shardings_tree, abstract_tree, mesh: Mesh, strategy: ShardingStrategy):
+    """Optimizer-moment shardings.  Under zero1, add the data axis to the
+    first dimension that is unsharded and divisible (ZeRO-1 partitioning)."""
+    if not strategy.zero1:
+        return param_shardings_tree
+
+    da = _data_axes(mesh)
+    dsz = _axis_size(mesh, da)
+
+    def one(ns: NamedSharding, sds) -> NamedSharding:
+        spec = list(ns.spec) + [None] * (len(sds.shape) - len(ns.spec))
+        for i, (cur, dim) in enumerate(zip(spec, sds.shape)):
+            if cur is None and dim % dsz == 0 and dim >= dsz:
+                spec[i] = da if len(da) > 1 else da[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, param_shardings_tree, abstract_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec_axes(
+    mesh: Mesh, batch: int, include_model: bool = False
+) -> Optional[Tuple[str, ...]]:
+    """Largest suffix-trimmed tuple of ("pod","data"[,"model"]) dividing the
+    global batch.  ``include_model`` lets tiny replicated models (mamba2-130m)
+    spread the batch over the whole mesh."""
+    da = _data_axes(mesh) + (("model",) if include_model else ())
+    while da and batch % _axis_size(mesh, da) != 0:
+        da = da[:-1]
+    return da or None
+
+
+def token_sharding(mesh: Mesh, batch: int, include_model: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_spec_axes(mesh, batch, include_model), None))
+
+
+def embeds_sharding(mesh: Mesh, batch: int, include_model: bool = False) -> NamedSharding:
+    """(B, T, D) stub-embedding inputs (audio frames / vision patches)."""
+    return NamedSharding(mesh, P(batch_spec_axes(mesh, batch, include_model), None, None))
+
+
+def cache_sharding(
+    path: Tuple[str, ...],
+    shape: Sequence[int],
+    mesh: Mesh,
+    batch: int,
+    cfg,
+    mode: str = "auto",
+) -> NamedSharding:
+    """Decode-cache leaf sharding, keyed on the leaf's path in the cache tree.
+
+    KV caches ``(layers, [sub,] B, W, KV, hd)``: batch over the data axes,
+    then kv-heads over "model" when divisible, otherwise the sequence (W)
+    dim when divisible (long-context caches), otherwise replicated.
+    SSM states ``(layers, [sub,] B, H, P, N)``: batch over data, heads over
+    "model" when divisible.
+    """
+    names = [str(p) for p in path]
+    ba = batch_spec_axes(mesh, batch)
+    msz = mesh.shape["model"]
+
+    if "pos" in names[-1:]:
+        return NamedSharding(mesh, P())
+
+    spec: list = [None] * len(shape)
+    # find the batch dim: first dim equal to `batch` after the leading stack dims
+    try:
+        bdim = list(shape).index(batch)
+    except ValueError:
+        bdim = None
+    if bdim is not None and ba is not None:
+        spec[bdim] = ba if len(ba) > 1 else ba[0]
+
+    leaf = names[-1]
+    if leaf in ("k", "v"):
+        kv_dim, w_dim = len(shape) - 2, len(shape) - 3
+        if mode == "batch":
+            pass  # batch-only: replicate over the model axis
+        elif mode == "seq":
+            if shape[w_dim] % msz == 0:
+                spec[w_dim] = "model"
+        elif shape[kv_dim] % msz == 0:
+            spec[kv_dim] = "model"
+        elif shape[w_dim] % msz == 0:
+            spec[w_dim] = "model"
+    elif leaf == "state":
+        h_dim = len(shape) - 3
+        if shape[h_dim] % msz == 0:
+            spec[h_dim] = "model"
+    elif leaf.startswith("conv"):
+        c_dim = len(shape) - 2
+        if shape[c_dim] % msz == 0:
+            spec[c_dim] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(abstract_cache, mesh: Mesh, batch: int, cfg, mode: str = "auto"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, sds: cache_sharding(
+            tuple(getattr(p, "key", getattr(p, "idx", "")) for p in path),
+            sds.shape,
+            mesh,
+            batch,
+            cfg,
+            mode=mode,
+        ),
+        abstract_cache,
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no xla_force_host_platform_device_count here —
+smoke tests and benches must see the real single CPU device; only the
+dry-run (a separate process) forces 512 devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

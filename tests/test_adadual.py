@@ -1,0 +1,169 @@
+"""Property tests for AdaDUAL (paper Theorems 1-2, Algorithm 2) against an
+exact brute-force integrator of the Eq. (5) dynamics, plus sanity for the
+beyond-paper k-way generalization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.adadual import (
+    adadual_should_start,
+    c1_average_completion,
+    c2a_average_completion,
+    c2b_average_completion,
+    candidate_minima,
+    kway_adadual_should_start,
+    simulate_task_set,
+    simulate_two_tasks,
+)
+from repro.core.contention import ContentionParams
+
+PARAMS = st.builds(
+    ContentionParams,
+    a=st.just(0.0),  # P1 neglects the latency term
+    b=st.floats(1e-10, 5e-9),
+    eta=st.floats(0.0, 5e-9),
+)
+SIZES = st.floats(1e6, 1e9)
+
+
+class TestIntegrator:
+    @given(PARAMS, SIZES)
+    @settings(max_examples=50, deadline=None)
+    def test_single_task_time(self, p, m):
+        (t,) = simulate_task_set([0.0], [m], p)
+        assert t == pytest.approx(p.b * m, rel=1e-9)
+
+    @given(PARAMS, SIZES)
+    @settings(max_examples=50, deadline=None)
+    def test_simultaneous_equal_tasks(self, p, m):
+        """Two equal tasks fully contended: both finish at (2b+eta)*M."""
+        t1, t2 = simulate_two_tasks(0.0, m, m, p)
+        expect = (2 * p.b + p.eta) * m
+        assert t1 == pytest.approx(expect, rel=1e-9)
+        assert t2 == pytest.approx(expect, rel=1e-9)
+
+    @given(PARAMS, SIZES, SIZES)
+    @settings(max_examples=50, deadline=None)
+    def test_sequential_no_contention(self, p, m1, m2):
+        """Second task started after the first finishes: no contention."""
+        t1, t2 = simulate_two_tasks(p.b * m1, m1, m2, p)
+        assert t1 == pytest.approx(p.b * m1, rel=1e-9)
+        assert t2 == pytest.approx(p.b * (m1 + m2), rel=1e-9)
+
+
+class TestTheorem1:
+    """C1 (small task first): waiting until t1 = b*M1 is optimal, and the
+    closed form Eq. (10c)/(14a) matches the exact integrator."""
+
+    @given(PARAMS, SIZES, SIZES, st.floats(0.0, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_closed_form_matches_integrator(self, p, ma, mb, frac):
+        m1, m2 = sorted([ma, mb])
+        t = frac * p.b * m1
+        t1, t2 = simulate_two_tasks(t, m1, m2, p)
+        assert (t1 + t2) / 2 == pytest.approx(
+            c1_average_completion(t, m1, m2, p), rel=1e-6
+        )
+
+    @given(PARAMS, SIZES, SIZES)
+    @settings(max_examples=100, deadline=None)
+    def test_t1_is_optimal(self, p, ma, mb):
+        m1, m2 = sorted([ma, mb])
+        t_star = p.b * m1
+        best = sum(simulate_two_tasks(t_star, m1, m2, p)) / 2
+        for frac in np.linspace(0.0, 0.999, 8):
+            t = frac * t_star
+            avg = sum(simulate_two_tasks(t, m1, m2, p)) / 2
+            assert best <= avg + 1e-9 * max(1.0, avg)
+
+
+class TestTheorem2:
+    """C2 (large task first): optimum is t=0 iff M1/M2 < b/(2(b+eta))."""
+
+    @given(PARAMS, SIZES, SIZES, st.floats(0.0, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_closed_forms_match_integrator(self, p, ma, mb, frac):
+        m1, m2 = sorted([ma, mb])
+        boundary = p.b * (m2 - m1)
+        # sub-case (a): whole small message contended
+        t = frac * boundary
+        avg = sum(simulate_two_tasks(t, m2, m1, p)) / 2
+        assert avg == pytest.approx(c2a_average_completion(t, m1, m2, p), rel=1e-6)
+        # sub-case (b): partial contention
+        t = boundary + frac * (p.b * m2 - boundary)
+        avg = sum(simulate_two_tasks(t, m2, m1, p)) / 2
+        assert avg == pytest.approx(c2b_average_completion(t, m1, m2, p), rel=1e-6)
+
+    @given(PARAMS, SIZES, SIZES)
+    @settings(max_examples=150, deadline=None)
+    def test_threshold_decision_is_optimal(self, p, ma, mb):
+        m1, m2 = sorted([ma, mb])
+        if m1 == m2:
+            return
+        start_now = sum(simulate_two_tasks(0.0, m2, m1, p)) / 2
+        wait = sum(simulate_two_tasks(p.b * m2, m2, m1, p)) / 2
+        if m1 / m2 < p.dual_threshold - 1e-9:
+            assert start_now <= wait + 1e-9 * wait
+        elif m1 / m2 > p.dual_threshold + 1e-9:
+            assert wait <= start_now + 1e-9 * start_now
+
+    @given(PARAMS, SIZES, SIZES)
+    @settings(max_examples=100, deadline=None)
+    def test_eq14_ordering(self, p, ma, mb):
+        """Eq. (14): the C1 candidate (run smaller first) is never worse."""
+        m1, m2 = sorted([ma, mb])
+        c1, c2a, c2b = candidate_minima(m1, m2, p)
+        assert c1 <= c2a + 1e-12
+        assert c1 <= c2b + 1e-12
+
+
+class TestAlgorithm2:
+    def test_no_contention_starts(self):
+        assert adadual_should_start(1e8, [], 0, ContentionParams())
+
+    def test_two_plus_existing_rejects(self):
+        assert not adadual_should_start(1.0, [1e9, 1e9], 2, ContentionParams())
+
+    def test_threshold_rule(self):
+        p = ContentionParams()
+        m_old = 1e8
+        below = (p.dual_threshold * 0.9) * m_old
+        above = (p.dual_threshold * 1.1) * m_old
+        assert adadual_should_start(below, [m_old], 1, p)
+        assert not adadual_should_start(above, [m_old], 1, p)
+
+    def test_multiple_olds_conservative(self):
+        """max_concurrent==1 with several disjoint olds: all must pass."""
+        p = ContentionParams()
+        small = p.dual_threshold * 0.5 * 1e8
+        assert adadual_should_start(small, [1e8, 1e8], 1, p)
+        assert not adadual_should_start(small, [1e8, small / p.dual_threshold * 0.5], 1, p)
+
+
+class TestKWay:
+    """Beyond-paper k-way rule: must agree with AdaDUAL on the 1-old case's
+    clear regions and never start above max_ways."""
+
+    @given(PARAMS, SIZES, SIZES)
+    @settings(max_examples=100, deadline=None)
+    def test_agrees_with_theorem2_on_one_old(self, p, m_new, m_old):
+        ratio = m_new / m_old
+        if abs(ratio - p.dual_threshold) / p.dual_threshold < 0.05:
+            return  # skip the numerically-degenerate boundary
+        expected = ratio < p.dual_threshold
+        assert kway_adadual_should_start(m_new, [m_old], p) == expected
+
+    def test_max_ways_guard(self):
+        p = ContentionParams()
+        assert not kway_adadual_should_start(1.0, [1e9] * 4, p, max_ways=4)
+
+    def test_empty_starts(self):
+        assert kway_adadual_should_start(1e8, [], ContentionParams())
+
+    def test_tiny_vs_two_large_starts(self):
+        """A tiny task against two huge ones should start (its completion
+        barely hurts them) under the lookahead rule with max_ways>=3."""
+        p = ContentionParams(a=0.0)
+        assert kway_adadual_should_start(1e5, [1e9, 1e9], p, max_ways=3)

@@ -1,0 +1,111 @@
+"""Unit tests for the communication cost/contention models (paper Eq. 2/5,
+Table I, Fig. 2 fits)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.contention import (
+    ALLREDUCE_ALGORITHMS,
+    PAPER_A,
+    PAPER_B,
+    ContentionParams,
+    allreduce_cost_terms,
+    fit_contention_penalty,
+    fit_linear_cost,
+    simulate_contention_sweep,
+)
+
+
+class TestEq5:
+    def test_k1_reduces_to_eq2(self):
+        p = ContentionParams()
+        m = 100e6
+        assert p.allreduce_time(m, k=1) == pytest.approx(p.a + p.b * m)
+
+    def test_monotone_in_k(self):
+        p = ContentionParams()
+        m = 50e6
+        times = [p.allreduce_time(m, k) for k in range(1, 9)]
+        assert all(t2 > t1 for t1, t2 in zip(times, times[1:]))
+
+    def test_penalty_term(self):
+        """T(k) - (a + k*b*M) == (k-1)*eta*M exactly (the Fig. 2(b) gap)."""
+        p = ContentionParams()
+        m, k = 100e6, 5
+        assert p.allreduce_time(m, k) - (p.a + k * p.b * m) == pytest.approx(
+            (k - 1) * p.eta * m
+        )
+
+    def test_rate_consistency(self):
+        """Draining M bytes at rate(k) must take the Eq. 5 time minus a."""
+        p = ContentionParams()
+        m, k = 123e6, 3
+        assert m / p.rate(k) == pytest.approx(p.allreduce_time(m, k) - p.a)
+
+    @given(
+        st.floats(1e-11, 1e-8),
+        st.floats(0, 1e-8),
+        st.integers(1, 16),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_rate_positive(self, b, eta, k):
+        p = ContentionParams(a=0.0, b=b, eta=eta)
+        assert p.rate(k) > 0
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            ContentionParams(b=-1.0)
+        with pytest.raises(ValueError):
+            ContentionParams().allreduce_time(1.0, k=0)
+
+
+class TestTableI:
+    @pytest.mark.parametrize("alg", ALLREDUCE_ALGORITHMS)
+    def test_positive_costs(self, alg):
+        a, b = allreduce_cost_terms(alg, 8, alpha=1e-5, beta=1e-9, gamma=1e-10)
+        assert a > 0 and b > 0
+
+    def test_ring_bandwidth_optimal(self):
+        """Ring's per-byte term beats the tree algorithms for large N."""
+        kw = dict(alpha=1e-5, beta=1e-9, gamma=1e-10)
+        _, b_ring = allreduce_cost_terms("ring", 64, **kw)
+        _, b_tree = allreduce_cost_terms("binary_tree", 64, **kw)
+        _, b_rd = allreduce_cost_terms("recursive_doubling", 64, **kw)
+        assert b_ring < b_tree and b_ring < b_rd
+
+    def test_ring_latency_scales_linearly(self):
+        kw = dict(alpha=1e-5, beta=1e-9, gamma=0.0)
+        a8, _ = allreduce_cost_terms("ring", 8, **kw)
+        a16, _ = allreduce_cost_terms("ring", 16, **kw)
+        assert a16 / a8 == pytest.approx(30 / 14)
+
+    def test_unknown_algorithm(self):
+        with pytest.raises(ValueError):
+            allreduce_cost_terms("nope", 4, 1e-5, 1e-9, 0)
+
+
+class TestFits:
+    def test_linear_fit_recovers_paper_constants(self):
+        ms = np.linspace(1e6, 500e6, 40)
+        ts = PAPER_A + PAPER_B * ms
+        a, b = fit_linear_cost(ms, ts)
+        assert a == pytest.approx(PAPER_A, rel=0.05)
+        assert b == pytest.approx(PAPER_B, rel=0.01)
+
+    def test_eta_fit_recovers_truth(self):
+        truth = ContentionParams(eta=3.3e-10)
+        m = 100e6
+        ks = np.arange(1, 9)
+        times = simulate_contention_sweep(truth, m, 8)
+        eta = fit_contention_penalty(ks, times, m, truth.a, truth.b)
+        assert eta == pytest.approx(truth.eta, rel=1e-6)
+
+    def test_dual_threshold_bounds(self):
+        """b/(2(b+eta)) in (0, 0.5]; eta=0 gives exactly 1/2."""
+        assert ContentionParams(eta=0.0).dual_threshold == pytest.approx(0.5)
+        p = ContentionParams()
+        assert 0 < p.dual_threshold < 0.5

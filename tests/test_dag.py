@@ -1,0 +1,75 @@
+"""Tests for the formal DAG job model (paper Fig. 3)."""
+
+import pytest
+
+from repro.core.dag import JobDag, TaskKind, TaskRef, build_job_dag, validate_schedule
+
+
+class TestStructure:
+    def test_task_count(self):
+        dag = build_job_dag(0, n_workers=4, iterations=3, spans_servers=True)
+        assert dag.n_tasks() == 3 * (2 * 4 + 1)
+        dag2 = build_job_dag(0, n_workers=2, iterations=5, spans_servers=False)
+        assert dag2.n_tasks() == 5 * 4
+
+    def test_forward_has_no_predecessor_at_start(self):
+        dag = build_job_dag(0, 2, 2, True)
+        assert dag.predecessors(TaskRef(0, 0, TaskKind.FORWARD, 0)) == []
+
+    def test_allreduce_barrier_over_all_workers(self):
+        dag = build_job_dag(0, 3, 2, True)
+        preds = dag.predecessors(TaskRef(0, 1, TaskKind.ALLREDUCE))
+        assert len(preds) == 3
+        assert all(p.kind is TaskKind.BACKWARD and p.iteration == 1 for p in preds)
+
+    def test_next_iteration_waits_for_allreduce(self):
+        dag = build_job_dag(0, 2, 3, True)
+        preds = dag.predecessors(TaskRef(0, 2, TaskKind.FORWARD, 1))
+        assert preds == [TaskRef(0, 1, TaskKind.ALLREDUCE)]
+
+    def test_no_comm_chain_is_per_worker(self):
+        dag = build_job_dag(0, 2, 3, False)
+        preds = dag.predecessors(TaskRef(0, 1, TaskKind.FORWARD, 1))
+        assert preds == [TaskRef(0, 0, TaskKind.BACKWARD, 1)]
+
+
+class TestValidation:
+    def _valid_intervals(self, dag):
+        t = 0.0
+        out = {}
+        for task in dag.tasks():
+            out[task] = (t, t + 1.0)
+            t += 1.0
+        # tasks() yields f,b per worker then c, per iteration -> sequential
+        # execution in that order is a valid schedule
+        return out
+
+    def test_accepts_valid_schedule(self):
+        dag = build_job_dag(0, 2, 2, True)
+        ok, msg = validate_schedule(dag, self._valid_intervals(dag))
+        assert ok, msg
+
+    def test_rejects_barrier_violation(self):
+        dag = build_job_dag(0, 2, 1, True)
+        iv = self._valid_intervals(dag)
+        # start the all-reduce before worker 1's backward ends
+        c = TaskRef(0, 0, TaskKind.ALLREDUCE)
+        b1 = TaskRef(0, 0, TaskKind.BACKWARD, 1)
+        iv[c] = (iv[b1][1] - 0.5, iv[b1][1] + 1.0)
+        ok, msg = validate_schedule(dag, iv)
+        assert not ok and "edge violated" in msg
+
+    def test_rejects_missing_task(self):
+        dag = build_job_dag(0, 2, 1, True)
+        iv = self._valid_intervals(dag)
+        iv.pop(TaskRef(0, 0, TaskKind.ALLREDUCE))
+        ok, msg = validate_schedule(dag, iv)
+        assert not ok and "mismatch" in msg
+
+    def test_rejects_reversed_interval(self):
+        dag = build_job_dag(0, 1, 1, False)
+        iv = self._valid_intervals(dag)
+        f = TaskRef(0, 0, TaskKind.FORWARD, 0)
+        iv[f] = (5.0, 1.0)
+        ok, _ = validate_schedule(dag, iv)
+        assert not ok

@@ -1,0 +1,101 @@
+"""Unit tests: HLO collective parser, trace generator, analytic flops."""
+
+import pytest
+
+from repro.core.trace import is_large, is_long, paper_trace
+from repro.launch.hlo import collective_bytes, _bytes_of_type
+
+
+class TestHloParser:
+    def test_bytes_of_type(self):
+        assert _bytes_of_type("bf16[16,4096,128]{2,1,0}") == 16 * 4096 * 128 * 2
+        assert _bytes_of_type("f32[]") == 4
+        assert _bytes_of_type("(bf16[8,8]{1,0}, f32[4]{0})") == 8 * 8 * 2 + 16
+
+    def test_collective_parse(self):
+        hlo = """
+  %ar = bf16[1024,512]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %ag = f32[64,256]{1,0} all-gather(%y), dimensions={0}
+  %p.1 = pred[] compare(%a, %b)
+  %rs = (bf16[32]{0}, bf16[32]{0}) reduce-scatter(%u, %v), dimensions={0}
+  %done = bf16[2]{0} all-reduce-done(%start)
+"""
+        res = collective_bytes(hlo)
+        assert res["all-reduce"] == 1024 * 512 * 2
+        assert res["all-gather"] == 64 * 256 * 4
+        assert res["reduce-scatter"] == 2 * 32 * 2
+        assert res["op_counts"]["all-reduce"] == 1  # -done skipped
+        assert res["total"] == res["all-reduce"] + res["all-gather"] + res["reduce-scatter"]
+
+    def test_async_start_counted_once(self):
+        hlo = """
+  %s = bf16[128]{0} all-gather-start(%x), dimensions={0}
+  %d = bf16[128]{0} all-gather-done(%s)
+"""
+        res = collective_bytes(hlo)
+        assert res["op_counts"]["all-gather"] == 1
+
+
+class TestTrace:
+    def test_job_count_and_sorted(self):
+        jobs = paper_trace(seed=0)
+        assert len(jobs) == 160
+        arr = [j.arrival for j in jobs]
+        assert arr == sorted(arr)
+
+    def test_gpu_distribution_roughly_papers(self):
+        jobs = paper_trace(seed=0)
+        ones = sum(1 for j in jobs if j.n_gpus == 1)
+        assert 60 <= ones <= 100  # paper: 80 of 160
+        assert any(j.n_gpus == 32 for j in jobs)
+
+    def test_iterations_range(self):
+        jobs = paper_trace(seed=1)
+        assert all(1000 <= j.iterations <= 6000 for j in jobs)
+
+    def test_deterministic_by_seed(self):
+        a = paper_trace(seed=5)
+        b = paper_trace(seed=5)
+        assert [(j.arrival, j.n_gpus, j.iterations) for j in a] == [
+            (j.arrival, j.n_gpus, j.iterations) for j in b
+        ]
+
+    def test_large_long_characterization(self):
+        jobs = paper_trace(seed=0)
+        assert any(is_large(j) for j in jobs) and any(is_long(j) for j in jobs)
+
+    def test_scaling(self):
+        jobs = paper_trace(seed=0, n_jobs=40)
+        assert len(jobs) == 40
+
+
+class TestAnalyticFlops:
+    def test_moe_active_less_than_total(self):
+        from repro.configs import get_config
+
+        cfg = get_config("olmoe-1b-7b")
+        assert cfg.active_param_count() < cfg.param_count()
+        # OLMoE: ~1B active of ~7B total
+        assert cfg.param_count() / 1e9 == pytest.approx(6.9, rel=0.25)
+        assert cfg.active_param_count() / 1e9 == pytest.approx(1.3, rel=0.35)
+
+    def test_dense_param_counts_sane(self):
+        from repro.configs import get_config
+
+        for arch, total_b in [
+            ("llama3.2-1b", 1.24),
+            ("yi-9b", 8.8),
+            ("gemma-7b", 8.5),
+            ("phi4-mini-3.8b", 3.8),
+            ("mamba2-130m", 0.13),
+        ]:
+            cfg = get_config(arch)
+            got = cfg.param_count() / 1e9
+            assert got == pytest.approx(total_b, rel=0.30), f"{arch}: {got}B"
+
+    def test_arctic_is_huge(self):
+        from repro.configs import get_config
+
+        cfg = get_config("arctic-480b")
+        assert cfg.param_count() / 1e9 > 300
+        assert cfg.active_param_count() / 1e9 < 30

@@ -1,0 +1,34 @@
+"""Tests for the vectorized (fluid) JAX simulator — beyond-paper ext. #3.
+
+It is an approximation of the exact event-driven simulator (gang placement,
+fixed dt, one admission per step), so tests assert *qualitative* agreement:
+completeness, determinism, and the policy orderings the paper establishes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.jaxsim import JaxSimConfig, monte_carlo_jct
+
+
+@pytest.mark.slow
+class TestJaxSim:
+    def test_completes_and_deterministic(self):
+        r1 = monte_carlo_jct(n_seeds=2, n_jobs=16, policy="ada", dt=0.1)
+        r2 = monte_carlo_jct(n_seeds=2, n_jobs=16, policy="ada", dt=0.1)
+        # the fluid approximation can strand a minority of jobs on some
+        # sampled traces (admission/gating quantization) — documented
+        # approximation; the exact simulator is the reference.
+        assert r1["finished_frac"] > 0.6
+        np.testing.assert_allclose(r1["per_seed"], r2["per_seed"])
+
+    def test_policy_ordering_matches_paper(self):
+        """AdaDUAL gating should beat blind 2-way acceptance on average."""
+        ada = monte_carlo_jct(n_seeds=3, n_jobs=24, policy="ada", dt=0.1)
+        srsf2 = monte_carlo_jct(n_seeds=3, n_jobs=24, policy="srsf2", dt=0.1)
+        assert ada["avg_jct_mean"] < srsf2["avg_jct_mean"] * 1.05
+
+    def test_monte_carlo_gives_spread(self):
+        r = monte_carlo_jct(n_seeds=4, n_jobs=16, policy="srsf1", dt=0.1)
+        assert r["avg_jct_std"] >= 0.0
+        assert len(r["per_seed"]) == 4

@@ -1,0 +1,156 @@
+"""Pallas kernel validation (interpret mode) against pure-jnp oracles —
+shape/dtype sweeps per the kernel-testing contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.ssd.ops import ssd_decode_step
+from repro.kernels.ssd.ref import ssd_decode_step_reference
+from repro.models.ssm import ssd_scan
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol_for(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "bh,s,t,d,causal",
+        [
+            (4, 256, 256, 64, True),
+            (2, 128, 384, 128, False),
+            (3, 200, 200, 64, True),     # non-divisible by block
+            (1, 64, 512, 256, False),    # gemma-style head_dim 256
+            (2, 512, 512, 64, True),
+        ],
+    )
+    def test_matches_reference(self, bh, s, t, d, causal, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (bh, s, d), dtype)
+        k = jax.random.normal(ks[1], (bh, t, d), dtype)
+        v = jax.random.normal(ks[2], (bh, t, d), dtype)
+        out = flash_attention(q, k, v, causal=causal)
+        ref = attention_reference(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref, np.float32),
+            atol=tol_for(dtype),
+            rtol=tol_for(dtype),
+        )
+
+    @pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 256), (256, 128)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 256, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 256, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 256, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=block_q, block_k=block_k)
+        ref = attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_scale_override(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=False, scale=0.05)
+        ref = attention_reference(q, k, v, causal=False, scale=0.05)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_matches_model_attention_semantics(self):
+        """The kernel and models/attention.py agree (same masking/softmax)."""
+        from repro.models.attention import attention_forward
+        from repro.models.config import ModelConfig
+
+        cfg = ModelConfig(
+            name="t", family="dense", n_layers=1, d_model=64, vocab_size=16,
+            n_heads=2, n_kv_heads=2, d_ff=64,
+        )
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (2, 128, 64), jnp.float32)
+        params = {
+            "wq": jax.random.normal(ks[1], (64, 2, 32)) * 0.1,
+            "wk": jax.random.normal(ks[2], (64, 2, 32)) * 0.1,
+            "wv": jax.random.normal(ks[3], (64, 2, 32)) * 0.1,
+            "wo": jnp.eye(64).reshape(2, 32, 64),
+        }
+        model_out = attention_forward(x, params, cfg, mask_kind="causal", use_rope=False, q_chunk=32)
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"]).reshape(4, 128, 32)
+        k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"]).reshape(4, 128, 32)
+        v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"]).reshape(4, 128, 32)
+        kern = flash_attention(q, k, v, causal=True).reshape(2, 2, 128, 32)
+        kern_out = jnp.einsum("bhsk,hkd->bsd", kern, params["wo"])
+        np.testing.assert_allclose(
+            np.asarray(model_out), np.asarray(kern_out), atol=1e-4, rtol=1e-4
+        )
+
+
+class TestSsdDecode:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,h,p,n,block_h",
+        [(2, 8, 64, 128, 8), (3, 12, 32, 64, 4), (1, 24, 64, 128, 8), (2, 6, 16, 32, 8)],
+    )
+    def test_matches_reference(self, b, h, p, n, block_h, dtype):
+        ks = jax.random.split(KEY, 6)
+        x = jax.random.normal(ks[0], (b, h, p), dtype)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h))).astype(dtype)
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.1)
+        bb = jax.random.normal(ks[3], (b, n), dtype)
+        cc = jax.random.normal(ks[4], (b, n), dtype)
+        dd = jnp.ones((h,), jnp.float32)
+        st = jax.random.normal(ks[5], (b, h, p, n), jnp.float32)
+        y1, s1 = ssd_decode_step(x, dt, a, bb, cc, dd, st, block_h=block_h)
+        y2, s2 = ssd_decode_step_reference(x, dt, a, bb, cc, dd, st)
+        np.testing.assert_allclose(
+            np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+            atol=tol_for(dtype) * 3, rtol=tol_for(dtype) * 3,
+        )
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+class TestSsdScanInternalConsistency:
+    """The chunked SSD scan must equal its own step-by-step recurrence —
+    ties the train path to the decode path (and hence to the kernel)."""
+
+    @pytest.mark.parametrize("chunk", [4, 8, 16])
+    def test_scan_equals_stepwise(self, chunk):
+        b, s, h, p, n = 2, 32, 4, 8, 16
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.1)
+        bb = jax.random.normal(ks[3], (b, s, n), jnp.float32) * 0.5
+        cc = jax.random.normal(ks[4], (b, s, n), jnp.float32) * 0.5
+        y_scan, final = ssd_scan(x, dt, a, bb, cc, chunk=chunk)
+
+        from repro.models.ssm import ssd_step
+
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+        ys = []
+        for i in range(s):
+            y, state = ssd_step(x[:, i], dt[:, i], a, bb[:, i], cc[:, i], state)
+            ys.append(y)
+        y_step = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step), atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(final), np.asarray(state), atol=1e-4, rtol=1e-3)
+
+    def test_chunk_invariance(self):
+        b, s, h, p, n = 1, 64, 2, 8, 16
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.1)
+        bb = jax.random.normal(ks[3], (b, s, n), jnp.float32) * 0.5
+        cc = jax.random.normal(ks[4], (b, s, n), jnp.float32) * 0.5
+        y8, f8 = ssd_scan(x, dt, a, bb, cc, chunk=8)
+        y32, f32_ = ssd_scan(x, dt, a, bb, cc, chunk=32)
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(f8), np.asarray(f32_), atol=1e-4, rtol=1e-3)

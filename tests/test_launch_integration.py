@@ -1,0 +1,64 @@
+"""Integration tests for the launch layer: tiny end-to-end training run,
+serving loop, and the multi-job Ada-SRSF launcher with real jitted steps."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch.multi_job import FABRICS, JobRequest, profile_job, run_multi_job
+from repro.launch.serve import serve_batch
+from repro.launch.train import train
+
+
+@pytest.mark.slow
+class TestTrainDriver:
+    def test_loss_decreases_and_checkpoint_resume(self, tmp_path):
+        cfg = dataclasses.replace(
+            get_config("llama3.2-1b", reduced=True),
+            d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=256,
+        )
+        losses = train(
+            cfg, steps=12, batch=2, seq=32, lr=3e-3,
+            ckpt_dir=str(tmp_path), ckpt_every=6, log_every=0,
+        )
+        assert len(losses) == 12
+        assert losses[-1] < losses[0]
+        # resume continues from step 12 checkpoint
+        more = train(cfg, steps=14, batch=2, seq=32, lr=3e-3,
+                     ckpt_dir=str(tmp_path), log_every=0)
+        assert len(more) == 2  # only steps 12..13 executed
+
+
+class TestServeDriver:
+    def test_serve_batch_generates(self):
+        cfg = get_config("mamba2-130m", reduced=True)
+        res = serve_batch(cfg, batch=2, prompt_len=16, gen=4)
+        assert res["generated"].shape == (2, 4)
+        assert (res["generated"] >= 0).all()
+        assert (res["generated"] < cfg.vocab_size).all()
+
+
+@pytest.mark.slow
+class TestMultiJob:
+    def test_profile_job_measures_real_step(self):
+        pj = profile_job(JobRequest("llama3.2-1b", 2, 50, batch=2, seq=32))
+        assert pj.profile.t_iter_compute > 0
+        assert pj.profile.size_bytes > 1e5
+
+    def test_ada_schedule_with_real_jobs(self):
+        reqs = [
+            JobRequest("llama3.2-1b", n_gpus=8, iterations=40, batch=2, seq=32),
+            JobRequest("mamba2-130m", n_gpus=8, iterations=60, arrival=1.0, batch=2, seq=32),
+        ]
+        out = run_multi_job(reqs, policy="ada", execute_steps=2)
+        res = out["schedule"]
+        assert len(res.jct) == 2  # both jobs complete in the schedule
+        for jid, losses in out["losses"].items():
+            assert len(losses) == 2
+            assert all(jnp.isfinite(jnp.asarray(losses)))
+
+    def test_fabrics_defined(self):
+        assert set(FABRICS) == {"10gbe", "tpu-dcn"}

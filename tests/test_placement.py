@@ -1,0 +1,134 @@
+"""Tests for the placement algorithms (paper Algorithm 1, LWF-kappa)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cluster import TABLE_III, Cluster, JobSpec
+from repro.core.placement import (
+    PlacementPolicy,
+    place_first_fit,
+    place_list_scheduling,
+    place_lwf,
+    place_random,
+)
+
+
+def mk_job(n_gpus, job_id=0, model="resnet50", iters=1000):
+    return JobSpec(job_id, 0.0, n_gpus, iters, TABLE_III[model])
+
+
+def empty_cluster():
+    return Cluster(n_servers=16, gpus_per_server=4)
+
+
+class TestBasics:
+    @pytest.mark.parametrize("policy", ["rand", "ff", "ls", "lwf"])
+    def test_returns_exact_count_and_unique(self, policy):
+        c = empty_cluster()
+        for n in (1, 2, 4, 8, 32):
+            got = PlacementPolicy(policy, kappa=1)(c, mk_job(n))
+            assert got is not None and len(got) == n and len(set(got)) == n
+
+    def test_memory_admission(self):
+        c = empty_cluster()
+        # fill every GPU to leave less than a vgg16 footprint
+        for g in c.gpus.values():
+            g.mem_used_mb = g.mem_capacity_mb - 1000.0
+        assert place_first_fit(c, mk_job(1, model="vgg16")) is None
+        # resnet50 (3213 MB) also doesn't fit in 1000 MB
+        assert place_list_scheduling(c, mk_job(1)) is None
+
+    def test_ff_is_in_order(self):
+        c = empty_cluster()
+        got = place_first_fit(c, mk_job(6))
+        assert got == sorted(c.all_gpu_ids())[:6]
+
+    def test_ls_picks_least_loaded(self):
+        c = empty_cluster()
+        for gid, g in c.gpus.items():
+            g.workload = 100.0
+        light = [(3, 1), (7, 2), (9, 0)]
+        for s, i in light:
+            c.gpus[(s, i)].workload = 1.0
+        got = place_list_scheduling(c, mk_job(3))
+        assert set(got) == set(light)
+
+
+class TestLwfKappa:
+    def test_small_job_equals_ls(self):
+        """n <= kappa: LWF == LS (Alg. 1 lines 2-9)."""
+        c = empty_cluster()
+        for gid, g in c.gpus.items():
+            g.workload = float(hash(gid) % 37)
+        for n, kappa in [(1, 1), (2, 2), (4, 4)]:
+            assert place_lwf(c, mk_job(n), kappa) == place_list_scheduling(c, mk_job(n))
+
+    def test_large_job_consolidates(self):
+        """n > kappa: GPUs come from the fewest, least-loaded servers."""
+        c = empty_cluster()
+        got = place_lwf(c, mk_job(8), kappa=1)
+        servers = {s for s, _ in got}
+        assert len(servers) == 2  # 8 GPUs / 4 per server
+
+    def test_large_job_prefers_idle_servers(self):
+        c = empty_cluster()
+        # load servers 0..13; keep 14, 15 idle
+        for s in range(14):
+            for g in c.gpus_of_server(s):
+                g.workload = 1000.0
+        got = place_lwf(c, mk_job(8), kappa=1)
+        assert {s for s, _ in got} == {14, 15}
+
+    def test_kappa_consolidation_vs_ls_spread(self):
+        """The scenario motivating LWF: per-GPU workloads that trick LS into
+        spreading across many servers, while LWF-1 consolidates."""
+        c = empty_cluster()
+        # one light GPU on each server -> LS picks 8 different servers
+        for s in range(16):
+            for i, g in enumerate(c.gpus_of_server(s)):
+                g.workload = 1.0 if i == 0 else 50.0
+        ls = place_list_scheduling(c, mk_job(8))
+        lwf = place_lwf(c, mk_job(8), kappa=1)
+        assert len({s for s, _ in ls}) == 8
+        assert len({s for s, _ in lwf}) == 2
+
+    @given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2**31))
+    @settings(max_examples=60, deadline=None)
+    def test_lwf_respects_memory_and_count(self, n, kappa, seed):
+        rng = random.Random(seed)
+        c = empty_cluster()
+        for g in c.gpus.values():
+            g.workload = rng.uniform(0, 100)
+            g.mem_used_mb = rng.choice([0.0, 14000.0])  # some GPUs nearly full
+        job = mk_job(n)
+        got = place_lwf(c, job, kappa)
+        feasible = [g.gpu_id for g in c.available_gpus(job.model.mem_mb)]
+        if got is None:
+            assert len(feasible) < n
+        else:
+            assert len(got) == n and set(got) <= set(feasible)
+
+
+class TestClusterBookkeeping:
+    def test_place_release_roundtrip(self):
+        c = empty_cluster()
+        job = mk_job(4, model="vgg16")
+        gids = place_lwf(c, job, 1)
+        c.place(job, gids, workload_share=123.0)
+        for gid in gids:
+            assert c.gpus[gid].mem_used_mb == pytest.approx(job.model.mem_mb)
+            assert job.job_id in c.gpus[gid].resident_jobs
+        c.release(job, gids)
+        for gid in gids:
+            assert c.gpus[gid].mem_used_mb == 0.0
+            assert job.job_id not in c.gpus[gid].resident_jobs
+
+    def test_double_booking_memory_raises(self):
+        c = Cluster(n_servers=1, gpus_per_server=1, gpu_mem_mb=5000.0)
+        j1, j2 = mk_job(1, 1, "vgg16"), mk_job(1, 2, "vgg16")
+        c.place(j1, [(0, 0)], 1.0)
+        with pytest.raises(RuntimeError):
+            c.place(j2, [(0, 0)], 1.0)
