@@ -187,6 +187,55 @@ def bench_chunked(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Scenario engine sweep (src/repro/scenarios)
+# ---------------------------------------------------------------------------
+
+def _scenario_sweep(
+    names, policies, placements, seeds, backend, processes, full
+) -> None:
+    from repro.scenarios import QUICK_OVERRIDES, metrics as metrics_mod
+    from repro.scenarios import scenario_names, sweep
+
+    if names == ["all"]:
+        names = scenario_names()
+    print(metrics_mod.RunMetrics.csv_header(), flush=True)
+    records = sweep(
+        names,
+        comms=policies,
+        placements=placements,
+        seeds=seeds,
+        backend=backend,
+        per_scenario_overrides={} if full else QUICK_OVERRIDES,
+        processes=processes,
+    )
+    for r in records:
+        print(r.as_csv_row(), flush=True)
+
+
+def bench_scenarios(full: bool) -> None:
+    """Default-path smoke of the scenario sweep: two cheap scenarios."""
+    from repro.scenarios import QUICK_OVERRIDES, sweep
+
+    for name in ("smoke", "adversarial_allbig"):
+        t0 = time.time()
+        records = sweep(
+            [name],
+            comms=("ada", "srsf1", "srsf2"),
+            seeds=(0,),
+            per_scenario_overrides={} if full else QUICK_OVERRIDES,
+        )
+        dt = (time.time() - t0) * 1e6 / max(1, len(records))
+        for r in records:
+            emit(
+                f"scenarios/{name}/{r.comm}",
+                dt,
+                f"avg_jct={r.avg_jct:.1f};p95={r.p95_jct:.1f};"
+                f"makespan={r.makespan:.1f};util={r.gpu_util:.4f};"
+                f"finished={r.n_finished}",
+            )
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (from the dry-run artifact)
 # ---------------------------------------------------------------------------
 
@@ -221,6 +270,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "fig5": bench_fig5,
     "table5": bench_table5,
     "chunked": bench_chunked,
+    "scenarios": bench_scenarios,
     "roofline": bench_roofline,
 }
 
@@ -229,7 +279,52 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale 160-job trace")
     ap.add_argument("--only", nargs="+", choices=list(BENCHES), default=None)
+    ap.add_argument(
+        "--scenario",
+        nargs="+",
+        default=None,
+        metavar="NAME",
+        help="run the scenario sweep instead of the table benches "
+        "('all' or names from repro.scenarios)",
+    )
+    ap.add_argument(
+        "--policy",
+        nargs="+",
+        default=["ada", "srsf1", "srsf2"],
+        help="comm policies for --scenario (ada/adadual, srsfN, kwayK)",
+    )
+    ap.add_argument(
+        "--placement",
+        nargs="+",
+        default=["lwf"],
+        choices=["rand", "ff", "ls", "lwf"],
+        help="placement policies for --scenario",
+    )
+    ap.add_argument(
+        "--backend",
+        default="event",
+        choices=["event", "fluid"],
+        help="simulator backend for --scenario",
+    )
+    ap.add_argument("--seeds", nargs="+", type=int, default=[0])
+    ap.add_argument(
+        "--processes",
+        type=int,
+        default=None,
+        help="multiprocessing fan-out for --scenario (event backend)",
+    )
     args = ap.parse_args()
+    if args.scenario:
+        _scenario_sweep(
+            args.scenario,
+            args.policy,
+            args.placement,
+            args.seeds,
+            args.backend,
+            args.processes,
+            args.full,
+        )
+        return
     print("name,us_per_call,derived")
     names = args.only or list(BENCHES)
     for name in names:

@@ -25,8 +25,6 @@ import dataclasses
 import math
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 # ---------------------------------------------------------------------------
@@ -58,17 +56,45 @@ TPU_DCN_ETA = 8.0e-12
 
 @dataclasses.dataclass(frozen=True)
 class ContentionParams:
-    """Parameters (a, b, eta) of the contended All-Reduce model, Eq. (5)."""
+    """Parameters (a, b, eta) of the contended All-Reduce model, Eq. (5).
+
+    ``server_bandwidth`` (beyond-paper, scenario engine) optionally assigns
+    each server a relative NIC bandwidth multiplier (1.0 = nominal ``1/b``).
+    A communication task spanning several servers drains at the rate of its
+    slowest member; servers beyond the tuple's length are nominal.  Empty
+    tuple (default) = homogeneous network, exactly the paper's model.
+    """
 
     a: float = PAPER_A
     b: float = PAPER_B
     eta: float = DEFAULT_ETA
+    server_bandwidth: Tuple[float, ...] = ()
 
     def __post_init__(self) -> None:
         if self.b <= 0:
             raise ValueError(f"b must be positive, got {self.b}")
         if self.a < 0 or self.eta < 0:
             raise ValueError("a and eta must be non-negative")
+        if any(s <= 0 for s in self.server_bandwidth):
+            raise ValueError("server_bandwidth multipliers must be positive")
+
+    def bandwidth_scale(self, servers) -> float:
+        """Relative drain-rate multiplier for a task touching ``servers``:
+        the slowest member NIC bottlenecks the ring."""
+        if not self.server_bandwidth:
+            return 1.0
+        n = len(self.server_bandwidth)
+        return min((self.server_bandwidth[s] if s < n else 1.0) for s in servers)
+
+    def mean_bandwidth_scale(self, n_servers: int) -> float:
+        """Cluster-mean multiplier — the homogeneous-network equivalent used
+        by the fluid (JAX) backend, which has no per-server rate support."""
+        if not self.server_bandwidth:
+            return 1.0
+        n = len(self.server_bandwidth)
+        return sum(
+            (self.server_bandwidth[s] if s < n else 1.0) for s in range(n_servers)
+        ) / max(1, n_servers)
 
     # -- Eq. (5) -----------------------------------------------------------
     def allreduce_time(self, message_bytes: float, k: int = 1) -> float:
@@ -145,7 +171,7 @@ def allreduce_cost_terms(
 
 
 # ---------------------------------------------------------------------------
-# Model fitting (reproduces the Fig. 2(a) fit) — implemented in JAX.
+# Model fitting (reproduces the Fig. 2(a) fit) — offline, float64 numpy.
 # ---------------------------------------------------------------------------
 
 

@@ -101,7 +101,6 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     use_ada = cfg.policy == "ada"
 
     comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free seconds
-    has_comm0 = trace["n_gpus"] > cfg.gpus_per_server  # spans servers iff > per-server
 
     state = {
         "phase": jnp.full((n_jobs,), QUEUED, jnp.int32),
@@ -140,8 +139,12 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         spans = (servers > 0).sum(axis=1) > 1
 
         # ---- communication contention state --------------------------------
+        started = st["started"]
         in_comm = phase == COMM
-        active = in_comm & (rem > 0)
+        # Only *started* transfers occupy links: a job that reached its
+        # barrier but is still gated must not count toward contention (it
+        # would otherwise see itself and deadlock under ada/srsf1).
+        active = in_comm & started & (rem > 0)
         comm_on_server = ((servers > 0) & active[:, None]).astype(jnp.int32).sum(0)  # (ns,)
         k_per_job = jnp.max(
             jnp.where(servers > 0, comm_on_server[None, :], 0), axis=1
@@ -158,9 +161,6 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         iter_done_direct = comp_done & ~spans
 
         # ---- comm gating (on jobs in COMM with rem == full, i.e. waiting) ---
-        # We mark "waiting" with rem > 0 and a parallel flag: started jobs
-        # carry negative sign-free bookkeeping via started mask array.
-        started = st["started"]
         waiting = in_comm & ~started
         # contention the job would see if it started now
         k_would = jnp.max(
@@ -181,7 +181,17 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
             may_start = (k_would <= 1) | ok2
         else:
             may_start = k_would <= policy_maxk
-        start_now = waiting & may_start
+        start_ok = waiting & may_start
+        # At most one comm start per step, smallest remaining service first —
+        # mirrors the event sim's sorted re-evaluate-after-each-start loop.
+        # Without this, barriers landing on the same step would all start
+        # against a contention state that excludes their co-starters,
+        # violating the srsf1/ada caps.
+        rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
+        pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
+        start_now = (
+            jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
+        )
         started = started | start_now
         # ---- drain comm (started only), at Eq.5 rate ------------------------
         # rem for comm jobs is stored in contention-free seconds; a k-way
@@ -241,6 +251,34 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
 def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
     trace = sample_trace(key, n_jobs)
     return _simulate(trace, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate_trace(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
+    """Fluid-simulate a *fixed* workload (scenario-engine entry point)."""
+    return _simulate(trace, cfg)
+
+
+def trace_from_jobs(jobs) -> Dict[str, jnp.ndarray]:
+    """Convert ``JobSpec`` lists (trace generator / scenario engine output)
+    into the struct-of-arrays layout the fluid simulator consumes."""
+    return {
+        "arrival": jnp.asarray([j.arrival for j in jobs], jnp.float32),
+        "iters": jnp.asarray([j.iterations for j in jobs], jnp.float32),
+        "t_iter": jnp.asarray([j.model.t_iter_compute for j in jobs], jnp.float32),
+        "msg_bytes": jnp.asarray([j.model.size_bytes for j in jobs], jnp.float32),
+        "n_gpus": jnp.asarray([j.n_gpus for j in jobs], jnp.int32),
+    }
+
+
+def simulate_jobs(jobs, cfg: JaxSimConfig) -> Dict[str, np.ndarray]:
+    """One fluid simulation of a fixed job list; numpy outputs."""
+    out = simulate_trace(trace_from_jobs(jobs), cfg)
+    return {
+        "jct": np.asarray(out["jct"]),
+        "finished": np.asarray(out["finished"]),
+        "makespan": float(out["makespan"]),
+    }
 
 
 def monte_carlo_jct(

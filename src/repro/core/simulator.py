@@ -148,6 +148,25 @@ class JobRun:
         return rem_iters * self.per_iter_service(params) * self.spec.n_gpus
 
 
+def median(xs: Sequence[float]) -> float:
+    """Median (mean of the middle two for even-length lists)."""
+    if not xs:
+        return math.nan
+    ys = sorted(xs)
+    n = len(ys)
+    return ys[n // 2] if n % 2 else 0.5 * (ys[n // 2 - 1] + ys[n // 2])
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile, q in [0, 1] (the convention all JCT
+    reporting in this repo shares)."""
+    if not xs:
+        return math.nan
+    ys = sorted(xs)
+    idx = min(len(ys) - 1, int(math.ceil(q * len(ys))) - 1)
+    return ys[max(0, idx)]
+
+
 @dataclasses.dataclass
 class SimResult:
     policy_name: str
@@ -167,14 +186,10 @@ class SimResult:
         return sum(self.jct.values()) / len(self.jct)
 
     def median_jct(self) -> float:
-        xs = sorted(self.jct.values())
-        n = len(xs)
-        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+        return median(list(self.jct.values()))
 
     def p95_jct(self) -> float:
-        xs = sorted(self.jct.values())
-        idx = min(len(xs) - 1, int(math.ceil(0.95 * len(xs))) - 1)
-        return xs[idx]
+        return percentile(list(self.jct.values()), 0.95)
 
 
 # ---------------------------------------------------------------------------
@@ -288,7 +303,10 @@ class ClusterSimulator:
             task.latency_left -= lat
             drain_t = dt - lat
             if drain_t > 0:
-                task.remaining_bytes -= drain_t * self.params.rate(ks[jid])
+                rate = self.params.rate(ks[jid]) * self.params.bandwidth_scale(
+                    task.servers
+                )
+                task.remaining_bytes -= drain_t * rate
             if task.latency_left <= _EPS and task.remaining_bytes <= 1.0:
                 # tolerance: 1 byte ~ 1e-9 s — absorbs float drift in the
                 # piecewise integration
@@ -303,7 +321,8 @@ class ClusterSimulator:
         t_min = math.inf
         for task in self._active_comm.values():
             k = self._comm_k(task)
-            t = self._last_comm_update + task.latency_left + task.remaining_bytes / self.params.rate(k)
+            rate = self.params.rate(k) * self.params.bandwidth_scale(task.servers)
+            t = self._last_comm_update + task.latency_left + task.remaining_bytes / rate
             t_min = min(t_min, t)
         return t_min
 
@@ -602,6 +621,17 @@ class ClusterSimulator:
 # ---------------------------------------------------------------------------
 
 
+def comm_policy_from_name(comm: str) -> CommPolicy:
+    """'ada' (AdaDUAL), 'srsfN', or 'kwayK' -> a CommPolicy instance."""
+    if comm == "ada":
+        return AdaDual()
+    if comm.startswith("srsf"):
+        return SrsfN(int(comm[4:]))
+    if comm.startswith("kway"):
+        return KWayAdaDual(int(comm[4:]))
+    raise ValueError(f"unknown comm policy {comm!r}")
+
+
 def simulate(
     jobs: Sequence[JobSpec],
     placement: str = "lwf",
@@ -624,14 +654,7 @@ def simulate(
     comm_chunks > 1 enables the beyond-paper chunked/preemptible all-reduce.
     contention_domain: 'server' (NIC bottleneck) or 'link' (paper's wording).
     """
-    if comm == "ada":
-        policy: CommPolicy = AdaDual()
-    elif comm.startswith("srsf"):
-        policy = SrsfN(int(comm[4:]))
-    elif comm.startswith("kway"):
-        policy = KWayAdaDual(int(comm[4:]))
-    else:
-        raise ValueError(f"unknown comm policy {comm!r}")
+    policy = comm_policy_from_name(comm)
     sim = ClusterSimulator(
         jobs,
         cluster=Cluster(n_servers=n_servers, gpus_per_server=gpus_per_server),

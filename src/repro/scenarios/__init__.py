@@ -1,0 +1,41 @@
+"""Scenario engine: named workload/cluster scenarios + sweep runner.
+
+Importing this package registers the built-in library (``library.py``).
+"""
+
+from repro.scenarios.registry import (
+    Scenario,
+    describe,
+    get_scenario,
+    register,
+    scenario_names,
+)
+from repro.scenarios.library import QUICK_OVERRIDES  # also registers the library
+from repro.scenarios.metrics import RunMetrics, from_event_result, from_jcts, summarize
+from repro.scenarios.sweep import (
+    SweepCell,
+    canonical_comm,
+    run_cell,
+    run_scenario_event,
+    run_scenario_fluid,
+    sweep,
+)
+
+__all__ = [
+    "QUICK_OVERRIDES",
+    "Scenario",
+    "describe",
+    "get_scenario",
+    "register",
+    "scenario_names",
+    "RunMetrics",
+    "from_event_result",
+    "from_jcts",
+    "summarize",
+    "SweepCell",
+    "canonical_comm",
+    "run_cell",
+    "run_scenario_event",
+    "run_scenario_fluid",
+    "sweep",
+]

@@ -1,0 +1,352 @@
+"""The scenario library.
+
+Seven named scenarios (importing this module registers them):
+
+* ``paper``              — the paper's Section V-A Microsoft-like 160-job trace.
+* ``philly_heavy_tail``  — Philly-derived heavy tails: mostly small jobs plus
+                           rare huge/long ones (Pareto iterations).
+* ``bursty_diurnal``     — diurnal baseline with synchronized arrival bursts
+                           (multi-tenant "everyone submits at 9am" shape).
+* ``hetero_bandwidth``   — paper workload on a cluster whose servers have
+                           heterogeneous per-link NIC bandwidth.
+* ``large_job_dominated``— majority multi-server 8..32-GPU jobs; communication
+                           dominates and placement quality is decisive.
+* ``adversarial_allbig`` — contention-adversarial: identical big-message jobs
+                           all arriving at once, every all-reduce collides.
+* ``smoke``              — tiny, fully deterministic; for differential and CI
+                           tests (seconds on one CPU, no RNG at all).
+
+All randomness derives from the builder's ``seed`` argument, so a
+``(name, seed, overrides)`` triple pins a workload bitwise — that is what the
+fixed-seed regression tests in ``tests/test_scenarios.py`` rely on.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+from repro.core.cluster import TABLE_III, JobSpec, ModelProfile
+from repro.core.contention import ContentionParams
+from repro.core.trace import paper_trace
+from repro.scenarios.registry import Scenario, register
+
+
+#: Hand-tuned downsized overrides per scenario: small enough for a
+#: seconds-long run on one CPU, large enough that every job finishes and
+#: the paper's policy orderings hold (validated by the fixed-seed cells in
+#: tests/test_scenarios.py).  Shared by the quick bench path
+#: (benchmarks/run.py) and the regression suite — retune here, not there.
+QUICK_OVERRIDES = {
+    "paper": dict(n_jobs=40, min_iters=100, max_iters=600),
+    "philly_heavy_tail": dict(n_jobs=32, min_iters=80, max_iters=1500),
+    "bursty_diurnal": dict(n_jobs=32, min_iters=100, max_iters=600),
+    "hetero_bandwidth": dict(n_jobs=28, min_iters=100, max_iters=600),
+    "large_job_dominated": dict(n_jobs=14, min_iters=100, max_iters=500),
+    "adversarial_allbig": dict(n_jobs=8, base_iters=120),
+    "smoke": {},
+}
+
+
+def _finalize(jobs: List[JobSpec]) -> tuple:
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    return tuple(jobs)
+
+
+def _sample_models(rng: random.Random) -> ModelProfile:
+    return rng.choice(list(TABLE_III.values()))
+
+
+# ---------------------------------------------------------------------------
+# 1. The paper's trace
+# ---------------------------------------------------------------------------
+
+
+@register("paper", "Paper Section V-A Microsoft-like trace (160 jobs / 20 min)")
+def paper_scenario(
+    seed: int = 0,
+    n_jobs: int = 160,
+    horizon_s: float = 1200.0,
+    min_iters: int = 1000,
+    max_iters: int = 6000,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+    params: Optional[ContentionParams] = None,
+) -> Scenario:
+    jobs = paper_trace(
+        seed=seed,
+        n_jobs=n_jobs,
+        horizon_s=horizon_s,
+        min_iters=min_iters,
+        max_iters=max_iters,
+    )
+    return Scenario(
+        name="paper",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=tuple(jobs),
+        params=params or ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. Philly-like heavy tail
+# ---------------------------------------------------------------------------
+
+PHILLY_GPU_WEIGHTS = ((1, 0.58), (2, 0.12), (4, 0.12), (8, 0.10), (16, 0.05), (32, 0.03))
+
+
+@register(
+    "philly_heavy_tail",
+    "Philly-derived heavy-tailed job sizes: Pareto iterations, rare huge jobs",
+)
+def philly_heavy_tail(
+    seed: int = 0,
+    n_jobs: int = 120,
+    horizon_s: float = 1200.0,
+    min_iters: int = 300,
+    max_iters: int = 20000,
+    pareto_alpha: float = 1.2,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    sizes = [g for g, _ in PHILLY_GPU_WEIGHTS]
+    weights = [w for _, w in PHILLY_GPU_WEIGHTS]
+    jobs = []
+    for k in range(n_jobs):
+        arrival = float(int(rng.uniform(1.0, horizon_s)))
+        iters = min(max_iters, int(min_iters * rng.paretovariate(pareto_alpha)))
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=arrival,
+                n_gpus=rng.choices(sizes, weights)[0],
+                iterations=iters,
+                model=_sample_models(rng),
+            )
+        )
+    return Scenario(
+        name="philly_heavy_tail",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3. Bursty / diurnal arrivals
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "bursty_diurnal",
+    "Diurnal arrival baseline plus synchronized submission bursts",
+)
+def bursty_diurnal(
+    seed: int = 0,
+    n_jobs: int = 120,
+    horizon_s: float = 1200.0,
+    n_bursts: int = 4,
+    burst_frac: float = 0.6,
+    min_iters: int = 500,
+    max_iters: int = 4000,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    import math
+
+    rng = random.Random(seed)
+    centers = [rng.uniform(0.1, 0.9) * horizon_s for _ in range(n_bursts)]
+    sigma = horizon_s / 60.0
+    jobs = []
+    for k in range(n_jobs):
+        if rng.random() < burst_frac:
+            c = rng.choice(centers)
+            arrival = min(horizon_s - 1.0, max(1.0, rng.gauss(c, sigma)))
+        else:
+            # diurnal baseline: accept-reject against a raised sine
+            while True:
+                t = rng.uniform(1.0, horizon_s)
+                if rng.random() < 0.5 * (1.0 + math.sin(2 * math.pi * t / horizon_s)):
+                    arrival = t
+                    break
+        gpus = rng.choices([1, 2, 4, 8], [0.45, 0.2, 0.2, 0.15])[0]
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=float(int(arrival)),
+                n_gpus=gpus,
+                iterations=rng.randint(min_iters, max_iters),
+                model=_sample_models(rng),
+            )
+        )
+    return Scenario(
+        name="bursty_diurnal",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. Heterogeneous per-link bandwidth
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "hetero_bandwidth",
+    "Paper workload on a cluster with heterogeneous per-server NIC bandwidth",
+)
+def hetero_bandwidth(
+    seed: int = 0,
+    n_jobs: int = 100,
+    horizon_s: float = 1200.0,
+    min_iters: int = 1000,
+    max_iters: int = 6000,
+    slow_fraction: float = 0.5,
+    slow_scale: float = 0.4,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    jobs = paper_trace(
+        seed=seed,
+        n_jobs=n_jobs,
+        horizon_s=horizon_s,
+        min_iters=min_iters,
+        max_iters=max_iters,
+    )
+    # evenly spread slow servers so consolidation can't simply avoid them
+    n_slow = int(round(slow_fraction * n_servers))
+    slow_ids = {int(i * n_servers / max(1, n_slow)) for i in range(n_slow)}
+    bandwidth = tuple(
+        slow_scale if s in slow_ids else 1.0 for s in range(n_servers)
+    )
+    return Scenario(
+        name="hetero_bandwidth",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=tuple(jobs),
+        params=ContentionParams(server_bandwidth=bandwidth),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 5. Large-job dominated
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "large_job_dominated",
+    "Majority 8..32-GPU multi-server jobs — communication dominates",
+)
+def large_job_dominated(
+    seed: int = 0,
+    n_jobs: int = 48,
+    horizon_s: float = 900.0,
+    min_iters: int = 500,
+    max_iters: int = 3000,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = []
+    for k in range(n_jobs):
+        gpus = rng.choices([4, 8, 16, 32], [0.15, 0.45, 0.28, 0.12])[0]
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=float(int(rng.uniform(1.0, horizon_s))),
+                n_gpus=gpus,
+                iterations=rng.randint(min_iters, max_iters),
+                model=_sample_models(rng),
+            )
+        )
+    return Scenario(
+        name="large_job_dominated",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 6. Contention-adversarial: all big jobs at once
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "adversarial_allbig",
+    "All identical big-message multi-server jobs arriving at once — every "
+    "all-reduce collides; worst case for blind comm acceptance",
+)
+def adversarial_allbig(
+    seed: int = 0,
+    n_jobs: int = 12,
+    n_gpus_per_job: int = 8,
+    base_iters: int = 300,
+    iter_jitter: float = 0.2,
+    model: str = "vgg16",
+    n_servers: int = 4,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    profile = TABLE_III[model]
+    jobs = []
+    for k in range(n_jobs):
+        iters = int(base_iters * (1.0 + rng.uniform(-iter_jitter, iter_jitter)))
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=float(k % 2),  # two back-to-back waves, 1 s apart
+                n_gpus=n_gpus_per_job,
+                iterations=max(1, iters),
+                model=profile,
+            )
+        )
+    return Scenario(
+        name="adversarial_allbig",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 7. Smoke (deterministic, tiny)
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "smoke",
+    "Tiny deterministic 6-job / 8-GPU scenario for differential + CI tests",
+)
+def smoke(seed: int = 0, n_servers: int = 4, gpus_per_server: int = 2) -> Scenario:
+    t3 = TABLE_III
+    jobs = (
+        # (job_id, arrival, n_gpus, iterations, model)
+        JobSpec(0, 0.0, 4, 30, t3["resnet50"]),      # spans 2 servers -> comm
+        JobSpec(1, 0.0, 4, 25, t3["vgg16"]),         # big message, spans 2
+        JobSpec(2, 1.0, 1, 60, t3["lstm_ptb"]),      # single GPU, no comm
+        JobSpec(3, 2.0, 2, 40, t3["inception_v3"]),  # fits one server
+        JobSpec(4, 3.0, 4, 20, t3["resnet50"]),      # queued until GPUs free
+        JobSpec(5, 5.0, 1, 50, t3["resnet50"]),
+    )
+    return Scenario(
+        name="smoke",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=jobs,
+        params=ContentionParams(),
+    )

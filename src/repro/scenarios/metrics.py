@@ -1,0 +1,146 @@
+"""Per-run scheduling metrics, uniform across both simulator backends.
+
+One :class:`RunMetrics` record per (scenario, seed, placement, comm policy,
+backend) simulation: JCT statistics (avg/median/p95), makespan, GPU
+utilization and contention-event counts, plus the wall-clock cost of the
+simulation itself.  The sweep runner (``scenarios/sweep.py``) emits lists of
+these; ``benchmarks/run.py`` prints them as CSV rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+from repro.core.simulator import SimResult, median, percentile
+
+CSV_FIELDS = (
+    "scenario",
+    "backend",
+    "placement",
+    "comm",
+    "seed",
+    "n_jobs",
+    "n_finished",
+    "avg_jct",
+    "median_jct",
+    "p95_jct",
+    "makespan",
+    "gpu_util",
+    "comm_contended",
+    "comm_clean",
+    "wall_s",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunMetrics:
+    scenario: str
+    backend: str  # "event" | "fluid"
+    placement: str
+    comm: str
+    seed: int
+    n_jobs: int
+    n_finished: int
+    avg_jct: float
+    median_jct: float
+    p95_jct: float
+    makespan: float
+    gpu_util: float
+    comm_contended: int = 0
+    comm_clean: int = 0
+    wall_s: float = 0.0
+
+    def as_csv_row(self) -> str:
+        vals = []
+        for f in CSV_FIELDS:
+            v = getattr(self, f)
+            vals.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+        return ",".join(vals)
+
+    @staticmethod
+    def csv_header() -> str:
+        return ",".join(CSV_FIELDS)
+
+
+def from_jcts(
+    jcts: Sequence[float],
+    *,
+    scenario: str,
+    backend: str,
+    placement: str,
+    comm: str,
+    seed: int,
+    n_jobs: int,
+    makespan: float,
+    gpu_util: float = math.nan,
+    comm_contended: int = 0,
+    comm_clean: int = 0,
+    wall_s: float = 0.0,
+) -> RunMetrics:
+    jcts = [float(x) for x in jcts]
+    n_fin = len(jcts)
+    return RunMetrics(
+        scenario=scenario,
+        backend=backend,
+        placement=placement,
+        comm=comm,
+        seed=seed,
+        n_jobs=n_jobs,
+        n_finished=n_fin,
+        avg_jct=(sum(jcts) / n_fin) if n_fin else math.nan,
+        median_jct=median(jcts),
+        p95_jct=percentile(jcts, 0.95),
+        makespan=float(makespan),
+        gpu_util=float(gpu_util),
+        comm_contended=comm_contended,
+        comm_clean=comm_clean,
+        wall_s=wall_s,
+    )
+
+
+def from_event_result(
+    res: SimResult,
+    *,
+    scenario: str,
+    seed: int,
+    n_jobs: int,
+    wall_s: float = 0.0,
+) -> RunMetrics:
+    return from_jcts(
+        list(res.jct.values()),
+        scenario=scenario,
+        backend="event",
+        placement=res.placement_name,
+        comm=res.policy_name,
+        seed=seed,
+        n_jobs=n_jobs,
+        makespan=res.makespan,
+        gpu_util=res.gpu_util,
+        comm_contended=res.comm_started_contended,
+        comm_clean=res.comm_started_clean,
+        wall_s=wall_s,
+    )
+
+
+def summarize(records: Sequence[RunMetrics]) -> Dict[str, Dict[str, float]]:
+    """Aggregate per (scenario, backend, placement, comm): mean avg-JCT,
+    mean makespan, mean utilization and total finished over seeds."""
+    groups: Dict[str, List[RunMetrics]] = {}
+    for r in records:
+        groups.setdefault(
+            f"{r.scenario}/{r.backend}/{r.placement}/{r.comm}", []
+        ).append(r)
+    out: Dict[str, Dict[str, float]] = {}
+    for key, rs in sorted(groups.items()):
+        out[key] = {
+            "avg_jct": sum(r.avg_jct for r in rs) / len(rs),
+            "p95_jct": sum(r.p95_jct for r in rs) / len(rs),
+            "makespan": sum(r.makespan for r in rs) / len(rs),
+            "gpu_util": sum(r.gpu_util for r in rs) / len(rs),
+            "finished_frac": sum(r.n_finished for r in rs)
+            / max(1, sum(r.n_jobs for r in rs)),
+            "n_runs": float(len(rs)),
+        }
+    return out

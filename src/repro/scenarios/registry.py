@@ -1,0 +1,103 @@
+"""Scenario registry — named, parameterized workload/cluster scenarios.
+
+A *scenario* bundles everything one simulation run needs:
+
+* a cluster shape (``n_servers`` x ``gpus_per_server``, GPU memory),
+* a job list (``JobSpec`` tuple, sorted by arrival),
+* the contention model (:class:`~repro.core.contention.ContentionParams`,
+  optionally with per-server heterogeneous bandwidth).
+
+Builders are registered by name via :func:`register` and instantiated with
+:func:`get_scenario`; every builder takes ``seed`` plus scenario-specific
+keyword overrides (``n_jobs``, iteration ranges, cluster shape, ...) so the
+same scenario scales from a seconds-long regression test to a paper-scale
+benchmark.  Both simulation backends — the exact event simulator
+(``core/simulator.py``) and the vectorized fluid simulator
+(``core/jaxsim.py``) — consume scenarios through this one interface (see
+``scenarios/sweep.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+from repro.core.cluster import Cluster, JobSpec
+from repro.core.contention import ContentionParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-instantiated workload + cluster + network scenario."""
+
+    name: str
+    seed: int
+    n_servers: int
+    gpus_per_server: int
+    jobs: Tuple[JobSpec, ...]
+    params: ContentionParams
+    gpu_mem_mb: float = 16160.0
+    description: str = ""
+
+    def make_cluster(self) -> Cluster:
+        """A fresh (mutable) cluster — one per simulation run."""
+        return Cluster(
+            n_servers=self.n_servers,
+            gpus_per_server=self.gpus_per_server,
+            gpu_mem_mb=self.gpu_mem_mb,
+        )
+
+    def job_list(self) -> List[JobSpec]:
+        return list(self.jobs)
+
+    def build(self) -> Tuple[Cluster, List[JobSpec], ContentionParams]:
+        """The ``(Cluster, List[JobSpec], ContentionParams)`` interface both
+        simulator backends consume."""
+        return self.make_cluster(), self.job_list(), self.params
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def total_gpus(self) -> int:
+        return self.n_servers * self.gpus_per_server
+
+
+ScenarioBuilder = Callable[..., Scenario]
+
+_REGISTRY: Dict[str, ScenarioBuilder] = {}
+_DESCRIPTIONS: Dict[str, str] = {}
+
+
+def register(name: str, description: str = ""):
+    """Decorator: register ``fn(seed=0, **kw) -> Scenario`` under ``name``."""
+
+    def deco(fn: ScenarioBuilder) -> ScenarioBuilder:
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} already registered")
+        _REGISTRY[name] = fn
+        _DESCRIPTIONS[name] = description or (fn.__doc__ or "").strip()
+        return fn
+
+    return deco
+
+
+def scenario_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def describe(name: str) -> str:
+    return _DESCRIPTIONS.get(name, "")
+
+
+def get_scenario(name: str, seed: int = 0, **overrides) -> Scenario:
+    """Instantiate a registered scenario (same name+seed+overrides => same
+    jobs, bitwise — builders must derive all randomness from ``seed``)."""
+    try:
+        builder = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {scenario_names()}"
+        ) from None
+    return builder(seed=seed, **overrides)

@@ -1,0 +1,214 @@
+"""Sweep runner: scenario x policy x seed matrices over both backends.
+
+* :func:`run_scenario_event` — one exact event-driven simulation of a
+  scenario (the reference backend; supports every placement/comm policy and
+  heterogeneous per-server bandwidth).
+* :func:`run_scenario_fluid` — one vectorized fluid (JAX) simulation of the
+  same scenario through the ``core/jaxsim.py`` fixed-trace entry point.
+  Approximations: gang-exclusive placement, fixed dt, and heterogeneous
+  bandwidth collapsed to its cluster mean.
+* :func:`sweep` — the full matrix, optionally fanned out over a
+  ``multiprocessing`` pool (event backend only: jax jits don't fork well),
+  returning one :class:`~repro.scenarios.metrics.RunMetrics` per cell.
+
+Policy strings accept the simulator's names ('ada', 'srsf1', 'kway3', ...)
+plus the paper aliases 'adadual'/'ada-srsf'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.placement import PlacementPolicy
+from repro.core.simulator import ClusterSimulator, SimResult, comm_policy_from_name
+from repro.scenarios import metrics as metrics_mod
+from repro.scenarios.registry import Scenario, get_scenario
+
+COMM_ALIASES = {
+    "adadual": "ada",
+    "ada-srsf": "ada",
+    "ada_srsf": "ada",
+}
+
+#: Fluid backend supports the branchless policies only.
+FLUID_POLICIES = ("ada", "srsf1", "srsf2", "srsf3")
+
+
+def canonical_comm(comm: str) -> str:
+    return COMM_ALIASES.get(comm.lower(), comm.lower())
+
+
+# ---------------------------------------------------------------------------
+# Single runs
+# ---------------------------------------------------------------------------
+
+
+def run_scenario_event(
+    scenario: Scenario,
+    placement: str = "lwf",
+    kappa: int = 1,
+    comm: str = "ada",
+    **sim_kw,
+) -> SimResult:
+    """Exact event-driven simulation of one scenario instance."""
+    cluster, jobs, params = scenario.build()
+    sim = ClusterSimulator(
+        jobs,
+        cluster=cluster,
+        placement=PlacementPolicy(placement, kappa=kappa, seed=scenario.seed),
+        comm_policy=comm_policy_from_name(canonical_comm(comm)),
+        params=params,
+        **sim_kw,
+    )
+    return sim.run()
+
+
+def fluid_config(
+    scenario: Scenario,
+    comm: str = "ada",
+    dt: float = 0.05,
+    max_steps: int = 400_000,
+):
+    """JaxSimConfig for a scenario (heterogeneous bandwidth -> mean b)."""
+    from repro.core.jaxsim import JaxSimConfig
+
+    comm = canonical_comm(comm)
+    if comm not in FLUID_POLICIES:
+        raise ValueError(
+            f"fluid backend supports {FLUID_POLICIES}, got {comm!r}"
+        )
+    p = scenario.params
+    scale = p.mean_bandwidth_scale(scenario.n_servers)
+    return JaxSimConfig(
+        n_servers=scenario.n_servers,
+        gpus_per_server=scenario.gpus_per_server,
+        dt=dt,
+        max_steps=max_steps,
+        policy=comm,
+        a=p.a,
+        b=p.b / scale,
+        eta=p.eta / scale,
+        dual_threshold=p.dual_threshold,
+    )
+
+
+def run_scenario_fluid(
+    scenario: Scenario,
+    comm: str = "ada",
+    dt: float = 0.05,
+    max_steps: int = 400_000,
+) -> Dict[str, object]:
+    """Fluid (vectorized JAX) simulation of one scenario instance."""
+    from repro.core.jaxsim import simulate_jobs
+
+    cfg = fluid_config(scenario, comm=comm, dt=dt, max_steps=max_steps)
+    return simulate_jobs(scenario.job_list(), cfg)
+
+
+# ---------------------------------------------------------------------------
+# The matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One picklable cell of the sweep matrix (workers rebuild the scenario
+    from (name, seed, overrides) so nothing heavyweight crosses processes)."""
+
+    scenario: str
+    seed: int
+    placement: str
+    kappa: int
+    comm: str
+    backend: str  # "event" | "fluid"
+    overrides: Tuple[Tuple[str, object], ...] = ()
+    dt: float = 0.05
+
+
+def run_cell(cell: SweepCell) -> metrics_mod.RunMetrics:
+    scn = get_scenario(cell.scenario, seed=cell.seed, **dict(cell.overrides))
+    t0 = time.time()
+    if cell.backend == "event":
+        res = run_scenario_event(
+            scn, placement=cell.placement, kappa=cell.kappa, comm=cell.comm
+        )
+        return metrics_mod.from_event_result(
+            res,
+            scenario=cell.scenario,
+            seed=cell.seed,
+            n_jobs=scn.n_jobs,
+            wall_s=time.time() - t0,
+        )
+    if cell.backend == "fluid":
+        out = run_scenario_fluid(scn, comm=cell.comm, dt=cell.dt)
+        jcts = [float(j) for j, fin in zip(out["jct"], out["finished"]) if fin]
+        return metrics_mod.from_jcts(
+            jcts,
+            scenario=cell.scenario,
+            backend="fluid",
+            placement="gang-lwf1",
+            comm=canonical_comm(cell.comm),
+            seed=cell.seed,
+            n_jobs=scn.n_jobs,
+            makespan=out["makespan"],
+            wall_s=time.time() - t0,
+        )
+    raise ValueError(f"unknown backend {cell.backend!r}")
+
+
+def sweep(
+    scenarios: Sequence[str],
+    comms: Sequence[str] = ("ada", "srsf1", "srsf2"),
+    placements: Sequence[str] = ("lwf",),
+    kappa: int = 1,
+    seeds: Sequence[int] = (0,),
+    backend: str = "event",
+    overrides: Optional[Dict[str, object]] = None,
+    per_scenario_overrides: Optional[Dict[str, Dict[str, object]]] = None,
+    processes: Optional[int] = None,
+    dt: float = 0.05,
+) -> List[metrics_mod.RunMetrics]:
+    """Run the full scenario x placement x comm x seed matrix.
+
+    ``overrides`` applies to every scenario; ``per_scenario_overrides``
+    (keyed by scenario name, e.g. ``QUICK_OVERRIDES``) layers on top, so
+    one call — and hence one worker pool — can span scenarios that need
+    different sizing.  ``processes > 1`` fans cells out over a
+    multiprocessing pool (event backend only — jitted jax functions don't
+    survive fork well)."""
+    if backend == "fluid":
+        # the fluid backend has one built-in gang placement; collapsing the
+        # placement axis avoids duplicate identical runs/rows
+        placements = ("gang",)
+
+    def cell_overrides(name: str) -> Tuple[Tuple[str, object], ...]:
+        d = dict(overrides or {})
+        d.update((per_scenario_overrides or {}).get(name, {}))
+        return tuple(sorted(d.items()))
+
+    cells = [
+        SweepCell(
+            scenario=s,
+            seed=seed,
+            placement=pl,
+            kappa=kappa,
+            comm=c,
+            backend=backend,
+            overrides=cell_overrides(s),
+            dt=dt,
+        )
+        for s in scenarios
+        for pl in placements
+        for c in comms
+        for seed in seeds
+    ]
+    if processes and processes > 1 and backend == "event" and len(cells) > 1:
+        import multiprocessing as mp
+
+        # spawn, not fork: the caller may hold jitted jax state and worker
+        # imports are cheap (the event backend is jax-free)
+        with mp.get_context("spawn").Pool(processes) as pool:
+            return pool.map(run_cell, cells)
+    return [run_cell(c) for c in cells]

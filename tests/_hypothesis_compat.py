@@ -1,0 +1,46 @@
+"""Optional-``hypothesis`` shim for the property-test modules.
+
+On a bare environment (no ``hypothesis`` installed) the property tests are
+skipped with a clear reason while the deterministic tests in the same
+modules keep running.  ``given`` becomes a decorator that replaces the test
+with a skip; ``settings`` becomes a no-op; ``st`` becomes a stub whose
+strategy constructors return ``None`` (the values are never drawn because
+the test body is never entered).
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare envs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``; every attribute is a
+        callable returning ``None`` so module-level strategy definitions
+        (e.g. ``st.builds(...)``) import cleanly."""
+
+        def __getattr__(self, name):
+            def _strategy(*_args, **_kwargs):
+                return None
+
+            return _strategy
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

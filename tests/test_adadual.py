@@ -4,8 +4,8 @@ beyond-paper k-way generalization."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.adadual import (
     adadual_should_start,

@@ -5,8 +5,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.contention import (
     ALLREDUCE_ALGORITHMS,

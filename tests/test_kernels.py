@@ -20,15 +20,17 @@ def tol_for(dtype):
 
 
 class TestFlashAttention:
+    # Representative cases run by default; the full sweep is `-m slow`
+    # (every case recompiles an interpret-mode Pallas kernel, ~1-2 s each).
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize(
         "bh,s,t,d,causal",
         [
             (4, 256, 256, 64, True),
-            (2, 128, 384, 128, False),
             (3, 200, 200, 64, True),     # non-divisible by block
-            (1, 64, 512, 256, False),    # gemma-style head_dim 256
-            (2, 512, 512, 64, True),
+            pytest.param(2, 128, 384, 128, False, marks=pytest.mark.slow),
+            pytest.param(1, 64, 512, 256, False, marks=pytest.mark.slow),
+            pytest.param(2, 512, 512, 64, True, marks=pytest.mark.slow),
         ],
     )
     def test_matches_reference(self, bh, s, t, d, causal, dtype):
@@ -45,7 +47,14 @@ class TestFlashAttention:
             rtol=tol_for(dtype),
         )
 
-    @pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 256), (256, 128)])
+    @pytest.mark.parametrize(
+        "block_q,block_k",
+        [
+            (64, 64),
+            pytest.param(128, 256, marks=pytest.mark.slow),
+            pytest.param(256, 128, marks=pytest.mark.slow),
+        ],
+    )
     def test_block_shape_invariance(self, block_q, block_k):
         ks = jax.random.split(KEY, 3)
         q = jax.random.normal(ks[0], (2, 256, 64), jnp.float32)
@@ -96,7 +105,12 @@ class TestSsdDecode:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize(
         "b,h,p,n,block_h",
-        [(2, 8, 64, 128, 8), (3, 12, 32, 64, 4), (1, 24, 64, 128, 8), (2, 6, 16, 32, 8)],
+        [
+            (2, 8, 64, 128, 8),
+            (2, 6, 16, 32, 8),
+            pytest.param(3, 12, 32, 64, 4, marks=pytest.mark.slow),
+            pytest.param(1, 24, 64, 128, 8, marks=pytest.mark.slow),
+        ],
     )
     def test_matches_reference(self, b, h, p, n, block_h, dtype):
         ks = jax.random.split(KEY, 6)
@@ -120,7 +134,9 @@ class TestSsdScanInternalConsistency:
     """The chunked SSD scan must equal its own step-by-step recurrence —
     ties the train path to the decode path (and hence to the kernel)."""
 
-    @pytest.mark.parametrize("chunk", [4, 8, 16])
+    @pytest.mark.parametrize(
+        "chunk", [4, pytest.param(8, marks=pytest.mark.slow), 16]
+    )
     def test_scan_equals_stepwise(self, chunk):
         b, s, h, p, n = 2, 32, 4, 8, 16
         ks = jax.random.split(KEY, 5)

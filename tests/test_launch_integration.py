@@ -33,6 +33,7 @@ class TestTrainDriver:
 
 
 class TestServeDriver:
+    @pytest.mark.slow
     def test_serve_batch_generates(self):
         cfg = get_config("mamba2-130m", reduced=True)
         res = serve_batch(cfg, batch=2, prompt_len=16, gen=4)

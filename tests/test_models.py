@@ -38,14 +38,46 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+#: Archs whose train/decode smoke runs in the default (tier-1) path: one
+#: dense and one MoE representative.  The rest recompile 10-80 s of jits
+#: each and run under `-m slow` (plus the SSM family keeps default decode
+#: coverage via TestDecodeMatchesPrefill[mamba2-130m]).
+DEFAULT_SMOKE_ARCHS = ("llama32_1b", "olmoe_1b_7b")
+
+SMOKE_ARCH_PARAMS = [
+    arch
+    if arch in DEFAULT_SMOKE_ARCHS
+    else pytest.param(arch, marks=pytest.mark.slow)
+    for arch in ARCH_IDS
+]
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
-class TestArchSmoke:
+class TestArchConfigs:
+    """Cheap (no-jit) per-arch checks — run for every arch by default."""
+
     def test_reduced_config_is_small(self, arch, key):
         cfg = get_config(arch, reduced=True)
         assert cfg.n_layers <= 8 and cfg.d_model <= 512
         if cfg.n_experts:
             assert cfg.n_experts <= 4
 
+    def test_analytic_param_count_matches_schema(self, arch, key):
+        """The roofline's analytic N must track the real parameter tree."""
+        from repro.models.common import param_count
+
+        cfg = get_config(arch, reduced=True)
+        lm = LM(cfg)
+        analytic = cfg.param_count(padded=True)
+        # padded vocab is part of the schema; analytic uses padded too
+        real = param_count(lm.schema())
+        assert abs(real - analytic) / real < 0.05, (
+            f"{arch}: schema {real} vs analytic {analytic}"
+        )
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCH_PARAMS)
+class TestArchSmoke:
     def test_train_step(self, arch, key):
         cfg = get_config(arch, reduced=True)
         lm = LM(cfg)
@@ -77,25 +109,20 @@ class TestArchSmoke:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         assert int(cache["pos"]) == S + 3
 
-    def test_analytic_param_count_matches_schema(self, arch, key):
-        """The roofline's analytic N must track the real parameter tree."""
-        from repro.models.common import param_count
-
-        cfg = get_config(arch, reduced=True)
-        lm = LM(cfg)
-        analytic = cfg.param_count(padded=True)
-        # padded vocab is part of the schema; analytic uses padded too
-        real = param_count(lm.schema())
-        assert abs(real - analytic) / real < 0.05, (
-            f"{arch}: schema {real} vs analytic {analytic}"
-        )
-
 
 class TestDecodeMatchesPrefill:
     """Teacher-forcing consistency: decoding token t against the cache must
     produce (close to) the same logits as a fresh prefill over t+1 tokens."""
 
-    @pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-130m", "olmoe-1b-7b"])
+    # olmoe's MoE decode path is already exercised by the default ArchSmoke
+    @pytest.mark.parametrize(
+        "arch",
+        [
+            "llama3.2-1b",
+            "mamba2-130m",
+            pytest.param("olmoe-1b-7b", marks=pytest.mark.slow),
+        ],
+    )
     def test_consistency(self, arch, key):
         cfg = get_config(arch, reduced=True)
         lm = LM(cfg)

@@ -22,8 +22,8 @@ SCRIPT = textwrap.dedent(
     from repro.models.config import InputShape
     from repro.models.lm import RunFlags
 
-    mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 2, 4), ("pod", "data", "model"))
     cfg = get_config("llama3.2-1b", reduced=True)
     flags = RunFlags(remat="none", q_chunk=32)
     out = {}

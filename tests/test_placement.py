@@ -3,8 +3,8 @@
 import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cluster import TABLE_III, Cluster, JobSpec
 from repro.core.placement import (

@@ -1,0 +1,178 @@
+"""Scenario-engine tests: registry sanity, per-scenario invariants, and the
+paper's policy-ordering regressions (Ada-SRSF vs SRSF(1)/SRSF(2) avg JCT,
+LWF-kappa vs first-fit makespan) locked on fixed-seed downsized scenarios."""
+
+import dataclasses
+import functools
+
+import pytest
+
+from repro.core.contention import ContentionParams
+from repro.scenarios import (
+    QUICK_OVERRIDES,
+    get_scenario,
+    run_scenario_event,
+    scenario_names,
+    summarize,
+    sweep,
+)
+
+#: Fixed seeds for the regression tests, paired with the shared downsized
+#: QUICK_OVERRIDES sizing.  Each (seed, overrides) cell was verified to
+#: (a) finish every job and (b) satisfy the paper orderings; any scheduler
+#: change that breaks one of them is a regression (or a finding worth an
+#: EXPERIMENTS.md entry).
+REGRESSION_SEEDS = {
+    "paper": 0,
+    "philly_heavy_tail": 1,
+    "bursty_diurnal": 1,
+    "hetero_bandwidth": 1,
+    "large_job_dominated": 1,
+    "adversarial_allbig": 1,
+    "smoke": 0,
+}
+REGRESSION_CELLS = {
+    name: (seed, QUICK_OVERRIDES[name]) for name, seed in REGRESSION_SEEDS.items()
+}
+
+RTOL = 5e-3  # numerical slack on the <= orderings
+
+
+def small(name):
+    seed, overrides = REGRESSION_CELLS[name]
+    return get_scenario(name, seed=seed, **overrides)
+
+
+@functools.lru_cache(maxsize=None)
+def sim(name, comm="ada", placement="lwf"):
+    """Memoized event-sim run of a regression cell (results are reused
+    across the ordering tests; simulations are deterministic)."""
+    return run_scenario_event(small(name), comm=comm, placement=placement)
+
+
+class TestRegistry:
+    def test_at_least_six_scenarios(self):
+        assert len(scenario_names()) >= 6
+        assert set(REGRESSION_CELLS) == set(scenario_names())
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            get_scenario("nope")
+
+    def test_duplicate_registration_raises(self):
+        from repro.scenarios import register
+
+        with pytest.raises(ValueError, match="already registered"):
+            register("smoke")(lambda seed=0: None)
+
+    @pytest.mark.parametrize("name", sorted(REGRESSION_CELLS))
+    def test_seed_determinism(self, name):
+        a, b = small(name), small(name)
+        assert a.jobs == b.jobs
+        assert a.params == b.params
+
+    @pytest.mark.parametrize(
+        "name", [n for n in sorted(REGRESSION_CELLS) if n != "smoke"]
+    )
+    def test_different_seeds_differ(self, name):
+        _, overrides = REGRESSION_CELLS[name]
+        a = get_scenario(name, seed=100, **overrides)
+        b = get_scenario(name, seed=101, **overrides)
+        assert a.jobs != b.jobs
+
+
+class TestScenarioInvariants:
+    @pytest.mark.parametrize("name", sorted(REGRESSION_CELLS))
+    def test_well_formed(self, name):
+        scn = small(name)
+        jobs = scn.job_list()
+        assert len(jobs) > 0
+        assert len({j.job_id for j in jobs}) == len(jobs)
+        assert all(j.arrival >= 0 for j in jobs)
+        assert all(jobs[i].arrival <= jobs[i + 1].arrival for i in range(len(jobs) - 1))
+        assert all(0 < j.n_gpus <= scn.total_gpus for j in jobs)
+        assert all(j.iterations >= 1 for j in jobs)
+        cluster, jlist, params = scn.build()
+        assert cluster.n_servers == scn.n_servers
+        assert len(jlist) == scn.n_jobs
+        assert isinstance(params, ContentionParams)
+
+    def test_fresh_cluster_per_build(self):
+        scn = small("smoke")
+        c1, c2 = scn.make_cluster(), scn.make_cluster()
+        assert c1 is not c2
+        c1.gpus[(0, 0)].mem_used_mb = 999.0
+        assert c2.gpus[(0, 0)].mem_used_mb == 0.0
+
+    def test_smoke_is_fully_deterministic(self):
+        assert get_scenario("smoke", seed=0).jobs == get_scenario("smoke", seed=7).jobs
+
+    def test_hetero_bandwidth_has_slow_servers(self):
+        scn = small("hetero_bandwidth")
+        bw = scn.params.server_bandwidth
+        assert len(bw) == scn.n_servers
+        assert min(bw) < 1.0 < max(bw) + 1e-9
+
+    def test_hetero_bandwidth_slows_jobs_down(self):
+        """Same workload on a degraded network must not finish sooner."""
+        scn = small("hetero_bandwidth")
+        homog = dataclasses.replace(scn, params=ContentionParams())
+        slow = run_scenario_event(scn, comm="ada")
+        fast = run_scenario_event(homog, comm="ada")
+        assert slow.avg_jct() >= fast.avg_jct() * (1 - RTOL)
+        assert slow.makespan >= fast.makespan * (1 - RTOL)
+
+
+class TestPaperOrderings:
+    """The paper's headline orderings, locked per scenario on fixed seeds."""
+
+    @pytest.mark.parametrize("name", sorted(REGRESSION_CELLS))
+    def test_ada_beats_srsf_baselines(self, name):
+        scn = small(name)
+        ada = sim(name, comm="ada")
+        srsf1 = sim(name, comm="srsf1")
+        srsf2 = sim(name, comm="srsf2")
+        assert len(ada.jct) == scn.n_jobs, "Ada-SRSF stranded jobs"
+        assert len(srsf1.jct) == scn.n_jobs
+        assert len(srsf2.jct) == scn.n_jobs
+        assert ada.avg_jct() <= srsf1.avg_jct() * (1 + RTOL), (
+            f"{name}: Ada-SRSF {ada.avg_jct():.1f} vs SRSF(1) {srsf1.avg_jct():.1f}"
+        )
+        assert ada.avg_jct() <= srsf2.avg_jct() * (1 + RTOL), (
+            f"{name}: Ada-SRSF {ada.avg_jct():.1f} vs SRSF(2) {srsf2.avg_jct():.1f}"
+        )
+
+    @pytest.mark.parametrize("name", sorted(REGRESSION_CELLS))
+    def test_lwf_beats_first_fit_makespan(self, name):
+        lwf = sim(name, comm="ada", placement="lwf")
+        ff = sim(name, comm="ada", placement="ff")
+        assert lwf.makespan <= ff.makespan * (1 + RTOL), (
+            f"{name}: LWF-1 {lwf.makespan:.1f} vs FF {ff.makespan:.1f}"
+        )
+
+
+class TestSweepRunner:
+    def test_matrix_shape_and_summary(self):
+        records = sweep(
+            ["smoke"], comms=("ada", "srsf2"), placements=("lwf", "ff"), seeds=(0, 1)
+        )
+        assert len(records) == 1 * 2 * 2 * 2
+        agg = summarize(records)
+        assert len(agg) == 4  # seeds collapse into the group key
+        for v in agg.values():
+            assert v["n_runs"] == 2.0
+            assert v["finished_frac"] == 1.0
+
+    def test_multiprocessing_matches_serial(self):
+        kw = dict(comms=("ada",), seeds=(0, 1), overrides={})
+        serial = sweep(["smoke"], processes=None, **kw)
+        fanned = sweep(["smoke"], processes=2, **kw)
+        assert [r.avg_jct for r in serial] == [r.avg_jct for r in fanned]
+        assert [r.makespan for r in serial] == [r.makespan for r in fanned]
+
+    def test_policy_aliases(self):
+        from repro.scenarios import canonical_comm
+
+        assert canonical_comm("adadual") == "ada"
+        assert canonical_comm("Ada-SRSF") == "ada"
+        assert canonical_comm("srsf2") == "srsf2"

@@ -12,19 +12,21 @@ import pytest
 
 # Pure-logic tests use a Mesh built lazily inside a subprocess-safe guard:
 # constructing an abstract mesh for spec computation doesn't need devices —
-# but jax.make_mesh does, so we use jax.sharding.AbstractMesh.
+# but jax.make_mesh does, so we use jax.sharding.AbstractMesh (via the
+# version-compat wrapper in repro.launch.mesh).
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_abstract_mesh
 from repro.sharding.rules import ShardingStrategy, spec_for_param
 
 
 def mesh2d():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh3d():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestSpecForParam:
@@ -101,8 +103,8 @@ MINI_DRYRUN = textwrap.dedent(
     from repro.models.config import InputShape
     from repro.models.lm import LM, RunFlags
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     shape = InputShape("mini_train", seq_len=64, global_batch=4, kind="train")
     profile = Profile(strategy="tp", remat="none", q_chunk=32)
 

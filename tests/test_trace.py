@@ -1,0 +1,84 @@
+"""Tests for the paper trace generator (``core/trace.py``): GPU-count
+distribution scaling, exact ``n_jobs`` padding/trim behavior, and seed
+determinism."""
+
+import collections
+
+import pytest
+
+from repro.core.cluster import TABLE_III
+from repro.core.trace import PAPER_GPU_DISTRIBUTION, is_large, is_long, paper_trace
+
+
+class TestGpuDistribution:
+    def test_full_scale_matches_paper_exactly(self):
+        """At n_jobs=160 the paper's Table-like distribution is exact:
+        80x1, 14x2, 26x4, 30x8, 8x16, 2x32."""
+        jobs = paper_trace(seed=0, n_jobs=160)
+        counts = collections.Counter(j.n_gpus for j in jobs)
+        assert counts == {1: 80, 2: 14, 4: 26, 8: 30, 16: 8, 32: 2}
+
+    def test_scaling_preserves_proportions(self):
+        jobs = paper_trace(seed=1, n_jobs=320)
+        counts = collections.Counter(j.n_gpus for j in jobs)
+        total = sum(c for _, c in PAPER_GPU_DISTRIBUTION)
+        for gpus, count in PAPER_GPU_DISTRIBUTION:
+            expect = count * 320 / total
+            # rounding + 1-GPU pad/trim can shift each bucket slightly
+            assert abs(counts[gpus] - expect) <= max(2, 0.1 * expect), (
+                gpus,
+                counts[gpus],
+                expect,
+            )
+
+    def test_every_bucket_survives_downscaling(self):
+        """max(1, round(...)) keeps rare sizes (16/32 GPUs) represented even
+        in small traces."""
+        jobs = paper_trace(seed=2, n_jobs=20)
+        sizes = {j.n_gpus for j in jobs}
+        assert {16, 32} <= sizes
+
+    @pytest.mark.parametrize("n_jobs", [1, 7, 10, 59, 160, 161])
+    def test_exact_n_jobs(self, n_jobs):
+        """Pad/trim always yields exactly n_jobs jobs with unique ids."""
+        jobs = paper_trace(seed=3, n_jobs=n_jobs)
+        assert len(jobs) == n_jobs
+        assert len({j.job_id for j in jobs}) == n_jobs
+
+    def test_padding_uses_single_gpu_jobs(self):
+        """When rounding under-produces, the pad fills with 1-GPU jobs, so
+        small traces never have fewer 1-GPU jobs than the rounded share."""
+        jobs = paper_trace(seed=4, n_jobs=10)
+        counts = collections.Counter(j.n_gpus for j in jobs)
+        # 6 buckets, each at least 1 after max(1, ...); 10 - 5 = 5 slots at
+        # most for the rest, and any shortfall is 1-GPU padded
+        assert counts[1] >= 1
+        assert sum(counts.values()) == 10
+
+
+class TestDeterminismAndFields:
+    def test_seed_determinism(self):
+        assert paper_trace(seed=42) == paper_trace(seed=42)
+
+    def test_different_seeds_differ(self):
+        assert paper_trace(seed=0) != paper_trace(seed=1)
+
+    def test_sorted_by_arrival_with_tick_granularity(self):
+        jobs = paper_trace(seed=5, n_jobs=80)
+        assert all(
+            jobs[i].arrival <= jobs[i + 1].arrival for i in range(len(jobs) - 1)
+        )
+        assert all(j.arrival == float(int(j.arrival)) for j in jobs)  # 1 s ticks
+        assert all(1.0 <= j.arrival < 1200.0 for j in jobs)
+
+    def test_iteration_bounds_and_models(self):
+        jobs = paper_trace(seed=6, n_jobs=50, min_iters=100, max_iters=200)
+        assert all(100 <= j.iterations <= 200 for j in jobs)
+        profiles = set(TABLE_III.values())
+        assert all(j.model in profiles for j in jobs)
+
+    def test_is_large_is_long(self):
+        jobs = paper_trace(seed=7, n_jobs=160)
+        assert all(is_large(j) == (j.n_gpus > 4) for j in jobs)
+        assert all(is_long(j) == (j.iterations > 1600) for j in jobs)
+        assert any(is_large(j) for j in jobs) and any(not is_large(j) for j in jobs)
