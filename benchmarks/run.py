@@ -6,6 +6,20 @@ Prints ``name,us_per_call,derived`` CSV rows.  Default scale is reduced so
 EXPERIMENTS.md (the headline numbers there come from --full runs).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table5 ...]
+
+Scenario-engine sweeps (``--scenario``) print one RunMetrics CSV row per
+scenario x placement x comm x seed cell, on either backend:
+
+    # event backend, one scenario x policy matrix
+    PYTHONPATH=src python -m benchmarks.run --scenario philly_heavy_tail \
+        --policy adadual srsf1 srsf2
+    # fluid backend incl. k-way AdaDUAL and placement modes
+    PYTHONPATH=src python -m benchmarks.run --scenario hetero_bandwidth \
+        --backend fluid --policy ada kway3 --placement lwf ff
+    # mean +/- std confidence intervals per cell; fluid batches every seed
+    # into ONE vmapped device launch (CellCI CSV rows)
+    PYTHONPATH=src python -m benchmarks.run --scenario all --ci \
+        --seeds 0 1 2 3 4 --backend fluid
 """
 
 from __future__ import annotations
@@ -191,16 +205,14 @@ def bench_chunked(full: bool) -> None:
 # ---------------------------------------------------------------------------
 
 def _scenario_sweep(
-    names, policies, placements, seeds, backend, processes, full
+    names, policies, placements, seeds, backend, processes, full, ci=False
 ) -> None:
     from repro.scenarios import QUICK_OVERRIDES, metrics as metrics_mod
-    from repro.scenarios import scenario_names, sweep
+    from repro.scenarios import scenario_names, sweep, sweep_ci
 
     if names == ["all"]:
         names = scenario_names()
-    print(metrics_mod.RunMetrics.csv_header(), flush=True)
-    records = sweep(
-        names,
+    kw = dict(
         comms=policies,
         placements=placements,
         seeds=seeds,
@@ -208,7 +220,13 @@ def _scenario_sweep(
         per_scenario_overrides={} if full else QUICK_OVERRIDES,
         processes=processes,
     )
-    for r in records:
+    if ci:
+        print(metrics_mod.CellCI.csv_header(), flush=True)
+        for r in sweep_ci(names, **kw):
+            print(r.as_csv_row(), flush=True)
+        return
+    print(metrics_mod.RunMetrics.csv_header(), flush=True)
+    for r in sweep(names, **kw):
         print(r.as_csv_row(), flush=True)
 
 
@@ -291,14 +309,16 @@ def main() -> None:
         "--policy",
         nargs="+",
         default=["ada", "srsf1", "srsf2"],
-        help="comm policies for --scenario (ada/adadual, srsfN, kwayK)",
+        help="comm policies for --scenario (ada/adadual, srsfN, kwayK — "
+        "the fluid backend supports ada, srsf1-3, kway2/kway3)",
     )
     ap.add_argument(
         "--placement",
         nargs="+",
         default=["lwf"],
         choices=["rand", "ff", "ls", "lwf"],
-        help="placement policies for --scenario",
+        help="placement policies for --scenario (fluid maps lwf->consolidate,"
+        " ff->first_fit, ls->least_loaded gang modes; rand is event-only)",
     )
     ap.add_argument(
         "--backend",
@@ -307,6 +327,12 @@ def main() -> None:
         help="simulator backend for --scenario",
     )
     ap.add_argument("--seeds", nargs="+", type=int, default=[0])
+    ap.add_argument(
+        "--ci",
+        action="store_true",
+        help="with --scenario: aggregate seeds into mean +/- std CellCI rows"
+        " (fluid backend runs all seeds of a cell in one vmapped launch)",
+    )
     ap.add_argument(
         "--processes",
         type=int,
@@ -323,6 +349,7 @@ def main() -> None:
             args.backend,
             args.processes,
             args.full,
+            ci=args.ci,
         )
         return
     print("name,us_per_call,derived")

@@ -11,6 +11,7 @@ from repro.scenarios import (
     scenario_names,
     summarize,
     sweep,
+    sweep_ci,
 )
 
 
@@ -48,6 +49,23 @@ def main() -> None:
         f"avg JCT {float(jcts.mean()):.2f}s (event reference ~7.5s; gap = "
         f"documented gang-placement + fixed-dt approximation)"
     )
+
+    # -- Monte-Carlo confidence intervals: every seed of a cell in ONE
+    # vmapped device launch (padded batch), mean +/- std per cell ----------
+    cis = sweep_ci(
+        ["contended_residue"],
+        comms=("ada", "srsf2"),
+        seeds=(0, 1, 2),
+        backend="fluid",
+        dt=0.05,
+    )
+    print("\nfluid Monte-Carlo (3 seeds, one vmapped batch per cell):")
+    for c in cis:
+        print(
+            f"  {c.scenario}/{c.comm:6s} avg JCT "
+            f"{c.avg_jct_mean:6.1f} +/- {c.avg_jct_std:5.1f} s "
+            f"({c.n_seeds} seeds, finished {c.finished_frac:.0%})"
+        )
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.core.contention import (
     allreduce_cost_terms,
     fit_linear_cost,
 )
+from repro.core.netmodel import PolicySpec, may_start, parse_policy
 from repro.core.placement import PlacementPolicy
 from repro.core.simulator import (
     AdaDual,
@@ -43,6 +44,9 @@ __all__ = [
     "ContentionParams",
     "allreduce_cost_terms",
     "fit_linear_cost",
+    "PolicySpec",
+    "may_start",
+    "parse_policy",
     "PlacementPolicy",
     "AdaDual",
     "ClusterSimulator",

@@ -23,8 +23,10 @@ to power our beyond-paper k-way generalization
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Sequence, Tuple
 
+from repro.core import netmodel
 from repro.core.contention import ContentionParams
 
 # ---------------------------------------------------------------------------
@@ -85,16 +87,20 @@ def adadual_should_start(
     When ``max_concurrent == 1`` but several distinct in-flight tasks touch
     disjoint servers of the new task, the paper's Alg. 2 line 12 implicitly
     assumes a single old task; we apply Theorem 2 against *each* and start
-    only if every test passes (conservative; documented in DESIGN.md).
+    only if every test passes (conservative; documented in DESIGN.md) —
+    equivalent to testing against the smallest remaining old size, which is
+    how the shared predicate (``netmodel.may_start``) expresses it.
     """
-    if max_concurrent == 0:
-        return True
-    if max_concurrent > 1:
-        return False
-    threshold = params.dual_threshold
-    return all(
-        old_rem > 0 and (new_bytes / old_rem) < threshold
-        for old_rem in old_remaining_bytes
+    min_old = min(old_remaining_bytes, default=math.inf)
+    return bool(
+        netmodel.may_start(
+            max_concurrent + 1,
+            new_bytes,
+            min_old,
+            max_ways=2,
+            threshold_gated=True,
+            dual_threshold=params.dual_threshold,
+        )
     )
 
 
@@ -251,4 +257,13 @@ def srsf_n_should_start(
     """SRSF(n) baseline gating: start iff the resulting contention on every
     touched server stays <= n (SRSF(1) = avoid all contention; SRSF(2)/(3)
     blindly accept 2-/3-way contention)."""
-    return (max_concurrent + 1) <= n
+    return bool(
+        netmodel.may_start(
+            max_concurrent + 1,
+            0.0,
+            math.inf,
+            max_ways=n,
+            threshold_gated=False,
+            dual_threshold=0.0,
+        )
+    )

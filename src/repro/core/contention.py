@@ -87,14 +87,19 @@ class ContentionParams:
         return min((self.server_bandwidth[s] if s < n else 1.0) for s in servers)
 
     def mean_bandwidth_scale(self, n_servers: int) -> float:
-        """Cluster-mean multiplier — the homogeneous-network equivalent used
-        by the fluid (JAX) backend, which has no per-server rate support."""
-        if not self.server_bandwidth:
+        """Cluster-mean multiplier — the homogeneous-network equivalent.
+
+        Kept as a diagnostic/summary statistic; the fluid (JAX) backend now
+        models per-server rates directly (``core/netmodel.py``) and no
+        longer collapses heterogeneity to this mean.  ``n_servers <= 0``
+        returns the nominal 1.0.
+        """
+        if not self.server_bandwidth or n_servers <= 0:
             return 1.0
         n = len(self.server_bandwidth)
         return sum(
             (self.server_bandwidth[s] if s < n else 1.0) for s in range(n_servers)
-        ) / max(1, n_servers)
+        ) / n_servers
 
     # -- Eq. (5) -----------------------------------------------------------
     def allreduce_time(self, message_bytes: float, k: int = 1) -> float:

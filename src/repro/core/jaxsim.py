@@ -5,33 +5,51 @@ Beyond-paper extension #3 (DESIGN.md §7): a fixed-timestep, fully-batched
 control flow, ``vmap``-able over seeds, so JCT confidence intervals over
 dozens of sampled workloads cost one XLA compilation and one device launch.
 
-Approximations vs the exact event-driven simulator (``core/simulator.py``),
+The policy/network math (Eq. 5 rate model, per-server bandwidth, gating
+predicates, placement ranking) lives in ``core/netmodel.py`` and is shared
+with the exact event simulator; this module only supplies the fluid state
+machine around it.  Feature parity with the event backend:
+
+* every gating policy: AdaDUAL, SRSF(n), and k-way AdaDUAL (``kway2``/
+  ``kway3``/...) — for k-way the event backend does exact lookahead while
+  the fluid backend uses the branchless Theorem-2 ratio test capped at K
+  (documented approximation);
+* per-server heterogeneous NIC bandwidth: each communication task drains
+  at the rate of its slowest member server (no cluster-mean collapse);
+* pluggable gang placement: ``consolidate`` (LWF-1 shape), ``first_fit``
+  (FF shape), ``least_loaded`` (LS/LWF L_S ordering).
+
+Remaining approximations vs the event simulator (``core/simulator.py``),
 all documented and tested for *qualitative* agreement:
 
 * gang placement — a job occupies whole GPUs exclusively (no task-level
   time-sharing of one GPU between resident jobs);
-* placement is consolidation-greedy (LWF-kappa with kappa=1 semantics):
-  a job takes GPUs from the least-loaded servers, whole servers first;
 * time advances in fixed dt steps; compute/comm remainders drain linearly
   (the Eq. 5 rate model is exact within a step as long as the active comm
   set is unchanged, so dt only quantizes *transition* times);
-* at most one queued job is admitted per step (admission is rare relative
-  to dt, so this rarely binds).
+* at most one queued job is admitted and one gated all-reduce started per
+  step (admissions/starts are rare relative to dt, so this rarely binds);
+* the fixed all-reduce latency ``a`` is folded into the bandwidth term, so
+  a slow server also stretches ``a`` (a ≪ dt, negligible).
 
 State is a struct-of-arrays over jobs plus per-server occupancy; policies
-(SRSF(n) / AdaDUAL threshold) are branchless masks.
+are branchless masks parameterized by the shared layer.  Traces may carry
+a boolean ``valid`` mask so ragged per-seed traces can be padded to one
+rectangular batch (see :func:`stack_traces`) and swept in a single
+``vmap`` (:func:`simulate_traces_batched`).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import netmodel
 from repro.core.cluster import TABLE_III
 from repro.core.contention import ContentionParams
 from repro.core.trace import PAPER_GPU_DISTRIBUTION
@@ -46,11 +64,15 @@ class JaxSimConfig:
     gpus_per_server: int = 4
     dt: float = 0.05          # [s]
     max_steps: int = 400_000  # dt * max_steps = simulated horizon cap
-    policy: str = "ada"       # ada | srsf1 | srsf2 | srsf3
+    policy: str = "ada"       # ada | srsfN | kwayK (netmodel.parse_policy)
+    placement: str = "consolidate"  # consolidate | first_fit | least_loaded
     a: float = ContentionParams().a
     b: float = ContentionParams().b
     eta: float = ContentionParams().eta
     dual_threshold: float = ContentionParams().dual_threshold
+    #: per-server relative NIC bandwidth multipliers (1.0 = nominal);
+    #: servers beyond the tuple are nominal, () = homogeneous network.
+    server_bandwidth: Tuple[float, ...] = ()
 
 
 def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
@@ -81,10 +103,12 @@ def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
     }
 
 
-def _place(free: jnp.ndarray, n_gpus: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Consolidation-greedy placement: take GPUs from servers sorted by
-    free count (desc).  Returns (per-server takes, feasible flag)."""
-    order = jnp.argsort(-free)
+def _place(free: jnp.ndarray, n_gpus: jnp.ndarray,
+           rank_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gang placement: fill servers in ascending ``rank_key`` order (the
+    shared :func:`netmodel.placement_rank` key; stable sort, server-index
+    ties).  Returns (per-server takes, feasible flag)."""
+    order = jnp.argsort(rank_key)
     sorted_free = free[order]
     cum = jnp.cumsum(sorted_free)
     want = n_gpus.astype(free.dtype)
@@ -97,13 +121,20 @@ def _place(free: jnp.ndarray, n_gpus: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.nda
 def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     n_jobs = trace["arrival"].shape[0]
     ns = cfg.n_servers
-    policy_maxk = {"srsf1": 1, "srsf2": 2, "srsf3": 3}.get(cfg.policy, 2)
-    use_ada = cfg.policy == "ada"
+    spec = netmodel.parse_policy(cfg.policy)
+    placement = netmodel.canonical_placement(cfg.placement)
+    bw = jnp.asarray(
+        netmodel.server_bandwidth_array(cfg.server_bandwidth, ns), jnp.float32
+    )
+    server_index = jnp.arange(ns, dtype=jnp.float32)
+    valid = trace.get("valid")
+    if valid is None:
+        valid = jnp.ones((n_jobs,), bool)
 
     comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free seconds
 
     state = {
-        "phase": jnp.full((n_jobs,), QUEUED, jnp.int32),
+        "phase": jnp.where(valid, QUEUED, DONE).astype(jnp.int32),
         "iters_left": trace["iters"],
         "rem": jnp.zeros((n_jobs,), jnp.float32),       # remaining sec/bytes-time in phase
         "servers": jnp.zeros((n_jobs, ns), jnp.int32),  # GPUs taken per server
@@ -114,6 +145,8 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     }
 
     def srsf_key(st):
+        # E_J = 0 before placement (paper Section IV-A): queued-job priority
+        # is compute-only, matching the event backend's _srsf_key_queued.
         rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
         return jnp.where(st["phase"] == QUEUED, rem_service, jnp.inf)
 
@@ -121,13 +154,26 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         t = st["t"] + cfg.dt
         phase, rem = st["phase"], st["rem"]
 
+        spans0 = (st["servers"] > 0).sum(axis=1) > 1
+        # Running-job SRSF key mirrors the event backend's remaining_service:
+        # remaining iters x (compute + contention-free comm) x GPUs.
+        rem_service = (
+            st["iters_left"]
+            * (trace["t_iter"] + jnp.where(spans0, comm_total, 0.0))
+            * trace["n_gpus"]
+        )
+        # Per-server remaining workload (Alg. 3 line 3's L_S in gang form):
+        # each job contributes its remaining service per occupied GPU.
+        load = (rem_service[:, None] * st["servers"]).sum(0)
+
         # ---- admission: smallest-SRSF arrived job that FITS (no head-of-
         # line blocking: infeasible jobs don't stall smaller ones) ---------
         fits = trace["n_gpus"].astype(jnp.float32) <= st["free"].sum()
         arrived = (phase == QUEUED) & (trace["arrival"] <= t) & fits
         pick = jnp.argmin(jnp.where(arrived, srsf_key(st), jnp.inf))
         can_pick = arrived[pick]
-        take, feasible = _place(st["free"], trace["n_gpus"][pick])
+        rank_key = netmodel.placement_rank(placement, st["free"], load, server_index)
+        take, feasible = _place(st["free"], trace["n_gpus"][pick], rank_key)
         admit = can_pick & feasible
         free = st["free"] - jnp.where(admit, take, 0)
         servers = st["servers"].at[pick].set(
@@ -166,38 +212,37 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         k_would = jnp.max(
             jnp.where(servers > 0, comm_on_server[None, :] + 1, 0), axis=1
         )
-        if use_ada:
-            # AdaDUAL: start if no contention, or 2-way against one old task
-            # whose remaining bytes pass the threshold test.  Remaining bytes
-            # of the single most-contended overlapping old task ~ min rem of
-            # overlapping started jobs (conservative).
-            overlap = (servers @ servers.T) > 0  # (jobs, jobs) share a server
-            old_rem = jnp.where(
-                overlap & active[None, :], rem[None, :], jnp.inf
-            ).min(axis=1)
-            my_bytes_time = comm_total  # proportional to M_new
-            ok2 = (k_would <= 2) & (my_bytes_time / jnp.maximum(old_rem, 1e-9)
-                                     < cfg.dual_threshold)
-            may_start = (k_would <= 1) | ok2
-        else:
-            may_start = k_would <= policy_maxk
+        # Remaining size of the single most-finished overlapping in-flight
+        # task ~ min rem of overlapping started jobs (Theorem 2's M_old;
+        # conservative when several olds overlap, matching the event
+        # backend's all()-quantified Alg. 2 reading).
+        overlap = (servers @ servers.T) > 0  # (jobs, jobs) share a server
+        min_old_rem = jnp.where(
+            overlap & active[None, :], rem[None, :], jnp.inf
+        ).min(axis=1)
+        may_start = netmodel.may_start(
+            k_would,
+            comm_total,  # proportional to M_new — ratio test is unit-free
+            min_old_rem,
+            max_ways=spec.max_ways,
+            threshold_gated=spec.threshold_gated,
+            dual_threshold=cfg.dual_threshold,
+        )
         start_ok = waiting & may_start
         # At most one comm start per step, smallest remaining service first —
         # mirrors the event sim's sorted re-evaluate-after-each-start loop.
         # Without this, barriers landing on the same step would all start
         # against a contention state that excludes their co-starters,
         # violating the srsf1/ada caps.
-        rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
         pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
         start_now = (
             jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
         )
         started = started | start_now
-        # ---- drain comm (started only), at Eq.5 rate ------------------------
-        # rem for comm jobs is stored in contention-free seconds; a k-way
-        # contended job drains dt * rate_ratio where
-        # rate_ratio = b / (k*b + (k-1)*eta).
-        ratio = cfg.b / (k_per_job * cfg.b + (k_per_job - 1) * cfg.eta)
+        # ---- drain comm (started only), at the Eq. 5 rate scaled by the
+        # slowest member server's NIC (per-server heterogeneity) --------------
+        scale = netmodel.slowest_member_scale(bw, servers > 0)
+        ratio = scale * netmodel.rate_ratio(k_per_job, cfg.b, cfg.eta)
         draining = in_comm & started
         rem = jnp.where(draining, rem - cfg.dt * ratio, rem)
         comm_done = draining & (rem <= 0)
@@ -243,8 +288,14 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         return (st, i + 1)
 
     final, _ = jax.lax.while_loop(cond, body, (state, jnp.asarray(0)))
+    finished = (final["phase"] == DONE) & valid
     jct = final["finish"] - trace["arrival"]
-    return {"jct": jct, "finished": final["phase"] == DONE, "makespan": final["t"]}
+    # Makespan from recorded finish times, not the loop clock: under vmap
+    # the while_loop keeps ticking lanes that finished early until the whole
+    # batch converges, so final["t"] would report the slowest lane's clock.
+    makespan = jnp.max(jnp.where(finished, final["finish"], 0.0))
+    makespan = jnp.where(finished.any(), makespan, final["t"])
+    return {"jct": jct, "finished": finished, "makespan": makespan}
 
 
 @functools.partial(jax.jit, static_argnames=("n_jobs", "cfg"))
@@ -259,6 +310,14 @@ def simulate_trace(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     return _simulate(trace, cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate_traces_batched(traces: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
+    """One vmapped launch over a stacked batch of traces (leading axis =
+    seed; see :func:`stack_traces`).  Returns per-lane jct/finished arrays
+    and a per-lane makespan vector — the scenario Monte-Carlo entry point."""
+    return jax.vmap(lambda tr: _simulate(tr, cfg))(traces)
+
+
 def trace_from_jobs(jobs) -> Dict[str, jnp.ndarray]:
     """Convert ``JobSpec`` lists (trace generator / scenario engine output)
     into the struct-of-arrays layout the fluid simulator consumes."""
@@ -269,6 +328,31 @@ def trace_from_jobs(jobs) -> Dict[str, jnp.ndarray]:
         "msg_bytes": jnp.asarray([j.model.size_bytes for j in jobs], jnp.float32),
         "n_gpus": jnp.asarray([j.n_gpus for j in jobs], jnp.int32),
     }
+
+
+def stack_traces(traces: Sequence[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndarray]:
+    """Stack per-seed traces into one rectangular batch for
+    :func:`simulate_traces_batched`, padding ragged job counts with inert
+    jobs masked out by a boolean ``valid`` plane (padded lanes start DONE
+    and are excluded from ``finished``)."""
+    if not traces:
+        raise ValueError("need at least one trace to stack")
+    n_max = max(int(tr["arrival"].shape[0]) for tr in traces)
+
+    def pad(x, fill):
+        pad_n = n_max - x.shape[0]
+        return jnp.concatenate([x, jnp.full((pad_n,), fill, x.dtype)])
+
+    out: Dict[str, List[jnp.ndarray]] = {}
+    for tr in traces:
+        n = int(tr["arrival"].shape[0])
+        lane = dict(tr)
+        lane.setdefault("valid", jnp.ones((n,), bool))
+        fills = {"arrival": 0.0, "iters": 1.0, "t_iter": 1.0,
+                 "msg_bytes": 0.0, "n_gpus": 1, "valid": False}
+        for k, v in lane.items():
+            out.setdefault(k, []).append(pad(v, fills[k]))
+    return {k: jnp.stack(vs) for k, vs in out.items()}
 
 
 def simulate_jobs(jobs, cfg: JaxSimConfig) -> Dict[str, np.ndarray]:
@@ -288,13 +372,14 @@ def monte_carlo_jct(
     base_seed: int = 0,
     **cfg_kw,
 ) -> Dict[str, np.ndarray]:
-    """vmap over seeds; returns mean/std of avg-JCT across sampled traces."""
+    """vmap over seeds; returns mean/std of avg-JCT across sampled traces.
+
+    One jitted launch through :func:`simulate_traces_batched` (sampling is
+    vmapped too) — no per-seed recompiles or redundant jit nesting."""
     cfg = JaxSimConfig(policy=policy, **cfg_kw)
     keys = jax.random.split(jax.random.PRNGKey(base_seed), n_seeds)
-    out = jax.jit(
-        jax.vmap(lambda k: simulate_one(k, n_jobs, cfg)),
-        static_argnames=(),
-    )(keys)
+    traces = jax.vmap(lambda k: sample_trace(k, n_jobs))(keys)
+    out = simulate_traces_batched(traces, cfg)
     jct = np.asarray(out["jct"])
     fin = np.asarray(out["finished"])
     avg = np.array([jct[i][fin[i]].mean() for i in range(n_seeds)])

@@ -1,0 +1,223 @@
+"""Backend-agnostic policy/network layer shared by both simulators.
+
+This module is the single home of the paper's rate/gating math so the exact
+event simulator (``core/simulator.py``) and the vectorized fluid simulator
+(``core/jaxsim.py``) cannot drift apart:
+
+* the Eq. (5) contended-rate model (:func:`rate_ratio`, :func:`rate`);
+* per-server NIC bandwidth heterogeneity (:func:`server_bandwidth_array`,
+  :func:`slowest_member_scale` — a ring all-reduce drains at the rate of
+  its slowest member server);
+* the communication gating predicates — AdaDUAL (Theorem 2), SRSF(n), and
+  the k-way AdaDUAL generalization — expressed once as a
+  :class:`PolicySpec` plus one branchless predicate (:func:`may_start`);
+* the placement-mode ranking keys the fluid backend's gang placement
+  shares with the event backend's Algorithm 1 family
+  (:func:`placement_rank`).
+
+Everything is a pure function of plain scalars/arrays: the same expression
+evaluates on Python floats, numpy arrays, and traced ``jax.numpy`` arrays,
+so the event backend calls these with scalars while the fluid backend maps
+them over whole job vectors inside ``jit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Eq. (5) rate model
+# ---------------------------------------------------------------------------
+
+
+def rate_ratio(k, b: float, eta: float):
+    """Fraction of the contention-free bandwidth one task retains under
+    k-way contention: ``b / (k*b + (k-1)*eta)`` (Eq. 5 per-byte cost
+    inverted and normalized by the k=1 cost).  ``k`` may be a scalar or an
+    array; ``k=1`` gives exactly 1.0."""
+    return b / (k * b + (k - 1) * eta)
+
+
+def rate(k, b: float, eta: float):
+    """Instantaneous drain rate [B/s] under k-way contention (Eq. 5)."""
+    return 1.0 / (k * b + (k - 1) * eta)
+
+
+def server_bandwidth_array(
+    server_bandwidth: Sequence[float], n_servers: int
+) -> np.ndarray:
+    """Per-server relative NIC bandwidth multipliers as a dense
+    ``(n_servers,)`` float array: servers beyond the configured tuple are
+    nominal (1.0), extra entries are dropped.  Empty input = homogeneous
+    network (all ones), exactly the paper's model."""
+    bw = np.ones((max(0, n_servers),), dtype=np.float64)
+    for s, scale in enumerate(server_bandwidth[:n_servers]):
+        bw[s] = scale
+    return bw
+
+
+def slowest_member_scale(bw, member_mask):
+    """Drain-rate multiplier of each task: the slowest member server
+    bottlenecks the ring.  ``bw`` is ``(n_servers,)``, ``member_mask`` a
+    boolean ``(..., n_servers)``; tasks with no member servers get 1.0.
+
+    Works on numpy and jax arrays (pure mask algebra — a large finite
+    sentinel instead of ``inf`` keeps ``0 * sentinel`` NaN-free).
+    """
+    big = 1e30
+    masked = member_mask * bw + (1 - member_mask) * big
+    lo = masked.min(axis=-1)
+    has_member = member_mask.any(axis=-1)
+    return lo * has_member + 1.0 * (1 - has_member)
+
+
+# ---------------------------------------------------------------------------
+# Communication gating policies
+# ---------------------------------------------------------------------------
+
+#: Canonical names of the gating policies both backends understand.
+POLICY_PATTERN = re.compile(r"^(ada|srsf([1-9])|kway([2-9]))$")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """One communication gating policy, reduced to two static parameters.
+
+    ``max_ways``      — accept a start only if the resulting contention on
+                        every touched server stays <= max_ways.
+    ``threshold_gated`` — additionally require Theorem 2's ratio test
+                        ``M_new < dual_threshold * min(M_old_remaining)``
+                        when the start would contend (k_would > 1).
+
+    AdaDUAL is (2, gated); SRSF(n) is (n, blind); the k-way AdaDUAL
+    generalization is (K, gated) — the fluid backend's branchless stand-in
+    for the event backend's exact-lookahead k-way rule.
+    """
+
+    name: str
+    max_ways: int
+    threshold_gated: bool
+
+
+def parse_policy(name: str) -> PolicySpec:
+    """'ada' | 'srsfN' | 'kwayK' -> a :class:`PolicySpec`."""
+    m = POLICY_PATTERN.match(name)
+    if not m:
+        raise ValueError(
+            f"unknown comm policy {name!r}; expected 'ada', 'srsfN' or 'kwayK'"
+        )
+    if name == "ada":
+        return PolicySpec("ada", 2, True)
+    if name.startswith("srsf"):
+        return PolicySpec(name, int(m.group(2)), False)
+    return PolicySpec(name, int(m.group(3)), True)
+
+
+def may_start(
+    k_would,
+    new_cost,
+    min_old_rem,
+    *,
+    max_ways: int,
+    threshold_gated: bool,
+    dual_threshold: float,
+):
+    """Branchless gating predicate shared by both backends.
+
+    Args:
+      k_would: contention level the new task *would* see if it started now
+        (1 = uncontended); scalar or per-job array.
+      new_cost: remaining size of the new task (bytes, or any unit
+        proportional to bytes — the Theorem 2 test is a pure ratio).
+      min_old_rem: smallest remaining size among the in-flight tasks that
+        overlap the new one, in the same unit as ``new_cost``; pass
+        ``inf`` when there is none.
+      max_ways / threshold_gated: static policy parameters
+        (:class:`PolicySpec`).
+      dual_threshold: ``b / (2*(b + eta))`` (Theorem 2).
+
+    Returns a boolean (array) — True where the task may start.  Uncontended
+    starts are always allowed; a zero/negative ``min_old_rem`` fails the
+    ratio test (matching the event backend's ``old_rem > 0`` guard, since
+    ``new_cost`` is positive).
+    """
+    uncontended = k_would <= 1
+    under_cap = k_would <= max_ways
+    if threshold_gated:
+        contended_ok = under_cap & (new_cost < dual_threshold * min_old_rem)
+    else:
+        contended_ok = under_cap
+    return uncontended | contended_ok
+
+
+# ---------------------------------------------------------------------------
+# Placement-mode ranking (fluid backend's gang analogue of Algorithm 1)
+# ---------------------------------------------------------------------------
+
+#: Gang placement modes of the fluid backend and the event-backend
+#: placement each one mirrors (see docs/scenarios.md parity matrix).
+PLACEMENT_MODES = ("consolidate", "first_fit", "least_loaded")
+
+#: Event-backend placement names -> fluid gang analogue.
+FLUID_PLACEMENT_ALIASES = {
+    "lwf": "consolidate",
+    "gang": "consolidate",
+    "consolidate": "consolidate",
+    "ff": "first_fit",
+    "first_fit": "first_fit",
+    "ls": "least_loaded",
+    "least_loaded": "least_loaded",
+}
+
+
+def canonical_placement(name: str) -> str:
+    """Map an event-backend placement name ('lwf', 'ff', 'ls', ...) to the
+    fluid gang placement mode; raises for unsupported ones ('rand')."""
+    try:
+        return FLUID_PLACEMENT_ALIASES[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"fluid backend supports placements {sorted(FLUID_PLACEMENT_ALIASES)}, "
+            f"got {name!r}"
+        ) from None
+
+
+def placement_rank(mode: str, free, load, server_index):
+    """Primary sort key per server for gang placement — servers are filled
+    in ascending key order (stable sort; ties break by server index):
+
+    * ``consolidate``  — most free GPUs first (``-free``): whole servers
+      first, the LWF-1 consolidation shape;
+    * ``first_fit``    — server index order, regardless of load;
+    * ``least_loaded`` — smallest remaining-service workload first
+      (Algorithm 1's L_S ordering, the LWF/LS shape).
+
+    ``free``/``load``/``server_index`` are ``(n_servers,)`` arrays (numpy
+    or jax); ``mode`` is static.
+    """
+    if mode == "consolidate":
+        return -free
+    if mode == "first_fit":
+        return server_index
+    if mode == "least_loaded":
+        return load
+    raise ValueError(f"unknown placement mode {mode!r}; expected {PLACEMENT_MODES}")
+
+
+__all__ = [
+    "FLUID_PLACEMENT_ALIASES",
+    "PLACEMENT_MODES",
+    "PolicySpec",
+    "canonical_placement",
+    "may_start",
+    "parse_policy",
+    "placement_rank",
+    "rate",
+    "rate_ratio",
+    "server_bandwidth_array",
+    "slowest_member_scale",
+]

@@ -135,17 +135,28 @@ class JobRun:
     def has_comm(self) -> bool:
         return len(self.servers) > 1
 
-    def per_iter_service(self, params: ContentionParams) -> float:
-        """Per-iteration service time: compute + contention-free comm."""
+    def per_iter_service(
+        self, params: ContentionParams, bandwidth_aware: bool = False
+    ) -> float:
+        """Per-iteration service time: compute + contention-free comm.
+
+        ``bandwidth_aware`` (beyond-paper, ROADMAP item) divides the
+        per-byte term by the slowest member server's NIC multiplier, so a
+        job placed on degraded links is recognized as having more service
+        left.  Default False = the paper-faithful nominal estimate.
+        """
         t = self.spec.model.t_iter_compute
         if self.has_comm:
-            t += params.a + params.b * self.spec.model.size_bytes
+            scale = params.bandwidth_scale(self.servers) if bandwidth_aware else 1.0
+            t += params.a + params.b * self.spec.model.size_bytes / scale
         return t
 
-    def remaining_service(self, params: ContentionParams) -> float:
+    def remaining_service(
+        self, params: ContentionParams, bandwidth_aware: bool = False
+    ) -> float:
         """SRSF key: remaining time x allocated GPUs (Tiresias-style)."""
         rem_iters = self.spec.iterations - self.iter_done
-        return rem_iters * self.per_iter_service(params) * self.spec.n_gpus
+        return rem_iters * self.per_iter_service(params, bandwidth_aware) * self.spec.n_gpus
 
 
 def median(xs: Sequence[float]) -> float:
@@ -212,6 +223,7 @@ class ClusterSimulator:
         comm_chunks: int = 1,
         contention_domain: str = "server",  # server (NIC) | link (ring edges)
         exclusive_gpus: bool = False,  # paper assumption 3 reading
+        bandwidth_aware_srsf: bool = False,  # hetero-aware remaining-service
     ) -> None:
         self.jobs = {j.job_id: j for j in jobs}
         self.cluster = cluster or Cluster()
@@ -238,6 +250,10 @@ class ClusterSimulator:
             raise ValueError(f"unknown contention domain {contention_domain!r}")
         self.contention_domain = contention_domain
         self.cluster.exclusive = exclusive_gpus
+        # SRSF priority estimate under server_bandwidth heterogeneity: the
+        # paper's nominal homogeneous comm time (False, default) or scaled
+        # by the slowest member NIC (True) — see JobRun.per_iter_service.
+        self.bandwidth_aware_srsf = bandwidth_aware_srsf
 
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
@@ -267,7 +283,8 @@ class ClusterSimulator:
 
     def _srsf_key_running(self, job_id: int):
         run = self._runs[job_id]
-        return (run.remaining_service(self.params), run.spec.arrival, job_id)
+        rem = run.remaining_service(self.params, self.bandwidth_aware_srsf)
+        return (rem, run.spec.arrival, job_id)
 
     # -- communication bookkeeping --------------------------------------------
     def _domains_of(self, servers: Set[int]) -> frozenset:
@@ -341,7 +358,7 @@ class ClusterSimulator:
         for jid, run in self._runs.items():
             if run.finished_at is not None:
                 continue
-            share = run.remaining_service(self.params)
+            share = run.remaining_service(self.params, self.bandwidth_aware_srsf)
             for gid in run.gpus:
                 self.cluster.gpus[gid].workload += share
 
@@ -358,7 +375,7 @@ class ClusterSimulator:
                 continue  # no head-of-line blocking (Alg. 3 loops the queue)
             servers = self.cluster.servers_of(gpu_ids)
             run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
-            workload = run.remaining_service(self.params)
+            workload = run.remaining_service(self.params, self.bandwidth_aware_srsf)
             self.cluster.place(spec, gpu_ids, workload)
             self._runs[jid] = run
             self._dirty_gpus.update(gpu_ids)
@@ -646,6 +663,7 @@ def simulate(
     comm_chunks: int = 1,
     contention_domain: str = "server",
     exclusive_gpus: bool = False,
+    bandwidth_aware_srsf: bool = False,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
 
@@ -653,6 +671,9 @@ def simulate(
     placement: 'rand' | 'ff' | 'ls' | 'lwf'.
     comm_chunks > 1 enables the beyond-paper chunked/preemptible all-reduce.
     contention_domain: 'server' (NIC bottleneck) or 'link' (paper's wording).
+    bandwidth_aware_srsf scales the SRSF remaining-service estimate by each
+    job's slowest member NIC under server_bandwidth heterogeneity (default
+    False = the paper-faithful nominal estimate).
     """
     policy = comm_policy_from_name(comm)
     sim = ClusterSimulator(
@@ -666,5 +687,6 @@ def simulate(
         comm_chunks=comm_chunks,
         contention_domain=contention_domain,
         exclusive_gpus=exclusive_gpus,
+        bandwidth_aware_srsf=bandwidth_aware_srsf,
     )
     return sim.run()

@@ -11,14 +11,24 @@ from repro.scenarios.registry import (
     scenario_names,
 )
 from repro.scenarios.library import QUICK_OVERRIDES  # also registers the library
-from repro.scenarios.metrics import RunMetrics, from_event_result, from_jcts, summarize
+from repro.scenarios.metrics import (
+    CellCI,
+    RunMetrics,
+    ci_from_runs,
+    from_event_result,
+    from_jcts,
+    summarize,
+)
 from repro.scenarios.sweep import (
+    FLUID_POLICIES,
     SweepCell,
     canonical_comm,
+    monte_carlo_fluid,
     run_cell,
     run_scenario_event,
     run_scenario_fluid,
     sweep,
+    sweep_ci,
 )
 
 __all__ = [
@@ -28,14 +38,19 @@ __all__ = [
     "get_scenario",
     "register",
     "scenario_names",
+    "CellCI",
     "RunMetrics",
+    "ci_from_runs",
     "from_event_result",
     "from_jcts",
     "summarize",
+    "FLUID_POLICIES",
     "SweepCell",
     "canonical_comm",
+    "monte_carlo_fluid",
     "run_cell",
     "run_scenario_event",
     "run_scenario_fluid",
     "sweep",
+    "sweep_ci",
 ]

@@ -1,6 +1,6 @@
 """The scenario library.
 
-Seven named scenarios (importing this module registers them):
+Eight named scenarios (importing this module registers them):
 
 * ``paper``              — the paper's Section V-A Microsoft-like 160-job trace.
 * ``philly_heavy_tail``  — Philly-derived heavy tails: mostly small jobs plus
@@ -13,6 +13,10 @@ Seven named scenarios (importing this module registers them):
                            dominates and placement quality is decisive.
 * ``adversarial_allbig`` — contention-adversarial: identical big-message jobs
                            all arriving at once, every all-reduce collides.
+* ``contended_residue``  — 5-GPU jobs on 4-GPU servers: every gang placement
+                           leaves a cross-server residue, so concurrent jobs
+                           share servers and all-reduces persistently collide
+                           even under exclusive (fluid) placement.
 * ``smoke``              — tiny, fully deterministic; for differential and CI
                            tests (seconds on one CPU, no RNG at all).
 
@@ -44,6 +48,7 @@ QUICK_OVERRIDES = {
     "hetero_bandwidth": dict(n_jobs=28, min_iters=100, max_iters=600),
     "large_job_dominated": dict(n_jobs=14, min_iters=100, max_iters=500),
     "adversarial_allbig": dict(n_jobs=8, base_iters=120),
+    "contended_residue": {},
     "smoke": {},
 }
 
@@ -323,7 +328,53 @@ def adversarial_allbig(
 
 
 # ---------------------------------------------------------------------------
-# 7. Smoke (deterministic, tiny)
+# 7. Contended residue: gang placements that must share servers
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "contended_residue",
+    "Jobs one GPU wider than a server: every placement leaves a cross-server "
+    "residue, so resident jobs share servers and their all-reduces collide — "
+    "the cell where comm gating policies differentiate on both backends",
+)
+def contended_residue(
+    seed: int = 0,
+    n_jobs: int = 6,
+    n_gpus_per_job: int = 5,
+    base_iters: int = 40,
+    iter_jitter: float = 0.2,
+    wave_size: int = 3,
+    model: str = "vgg16",
+    n_servers: int = 4,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    profile = TABLE_III[model]
+    jobs = []
+    for k in range(n_jobs):
+        iters = int(base_iters * (1.0 + rng.uniform(-iter_jitter, iter_jitter)))
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=float(k // wave_size),  # waves of simultaneous barriers
+                n_gpus=n_gpus_per_job,
+                iterations=max(1, iters),
+                model=profile,
+            )
+        )
+    return Scenario(
+        name="contended_residue",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 8. Smoke (deterministic, tiny)
 # ---------------------------------------------------------------------------
 
 

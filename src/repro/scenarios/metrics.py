@@ -5,13 +5,18 @@ backend) simulation: JCT statistics (avg/median/p95), makespan, GPU
 utilization and contention-event counts, plus the wall-clock cost of the
 simulation itself.  The sweep runner (``scenarios/sweep.py``) emits lists of
 these; ``benchmarks/run.py`` prints them as CSV rows.
+
+:class:`CellCI` aggregates the per-seed records of one scenario x policy x
+placement cell into mean +/- std confidence intervals
+(:func:`ci_from_runs`) — the output format of the Monte-Carlo sweeps
+(``benchmarks/run.py --scenario ... --ci``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.simulator import SimResult, median, percentile
 
@@ -122,6 +127,91 @@ def from_event_result(
         comm_clean=res.comm_started_clean,
         wall_s=wall_s,
     )
+
+
+CI_CSV_FIELDS = (
+    "scenario",
+    "backend",
+    "placement",
+    "comm",
+    "n_seeds",
+    "avg_jct_mean",
+    "avg_jct_std",
+    "p95_jct_mean",
+    "makespan_mean",
+    "makespan_std",
+    "finished_frac",
+    "wall_s",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellCI:
+    """Mean +/- std over seeds for one scenario x backend x placement x comm
+    cell — the Monte-Carlo confidence-interval row."""
+
+    scenario: str
+    backend: str
+    placement: str
+    comm: str
+    n_seeds: int
+    avg_jct_mean: float
+    avg_jct_std: float
+    p95_jct_mean: float
+    makespan_mean: float
+    makespan_std: float
+    finished_frac: float
+    wall_s: float
+
+    def as_csv_row(self) -> str:
+        vals = []
+        for f in CI_CSV_FIELDS:
+            v = getattr(self, f)
+            vals.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+        return ",".join(vals)
+
+    @staticmethod
+    def csv_header() -> str:
+        return ",".join(CI_CSV_FIELDS)
+
+
+def _mean_std(xs: Sequence[float]) -> Tuple[float, float]:
+    if not xs:
+        return math.nan, math.nan
+    mu = sum(xs) / len(xs)
+    var = sum((x - mu) ** 2 for x in xs) / len(xs)
+    return mu, math.sqrt(var)
+
+
+def ci_from_runs(records: Sequence[RunMetrics]) -> List[CellCI]:
+    """Collapse per-seed :class:`RunMetrics` into one :class:`CellCI` per
+    (scenario, backend, placement, comm) cell — population std over seeds."""
+    groups: Dict[Tuple[str, str, str, str], List[RunMetrics]] = {}
+    for r in records:
+        groups.setdefault((r.scenario, r.backend, r.placement, r.comm), []).append(r)
+    out: List[CellCI] = []
+    for (scn, backend, placement, comm), rs in sorted(groups.items()):
+        avg_mu, avg_sd = _mean_std([r.avg_jct for r in rs])
+        p95_mu, _ = _mean_std([r.p95_jct for r in rs])
+        mk_mu, mk_sd = _mean_std([r.makespan for r in rs])
+        out.append(
+            CellCI(
+                scenario=scn,
+                backend=backend,
+                placement=placement,
+                comm=comm,
+                n_seeds=len(rs),
+                avg_jct_mean=avg_mu,
+                avg_jct_std=avg_sd,
+                p95_jct_mean=p95_mu,
+                makespan_mean=mk_mu,
+                makespan_std=mk_sd,
+                finished_frac=sum(r.n_finished for r in rs)
+                / max(1, sum(r.n_jobs for r in rs)),
+                wall_s=sum(r.wall_s for r in rs),
+            )
+        )
+    return out
 
 
 def summarize(records: Sequence[RunMetrics]) -> Dict[str, Dict[str, float]]:

@@ -5,11 +5,17 @@
   heterogeneous per-server bandwidth).
 * :func:`run_scenario_fluid` — one vectorized fluid (JAX) simulation of the
   same scenario through the ``core/jaxsim.py`` fixed-trace entry point.
-  Approximations: gang-exclusive placement, fixed dt, and heterogeneous
-  bandwidth collapsed to its cluster mean.
+  Feature parity via the shared ``core/netmodel.py`` layer: every gating
+  policy (AdaDUAL, SRSF(n), k-way), per-server heterogeneous bandwidth, and
+  three gang placement modes.  Remaining approximations: gang-exclusive
+  placement, fixed dt, branchless (threshold) k-way gating.
 * :func:`sweep` — the full matrix, optionally fanned out over a
   ``multiprocessing`` pool (event backend only: jax jits don't fork well),
   returning one :class:`~repro.scenarios.metrics.RunMetrics` per cell.
+* :func:`monte_carlo_fluid` / :func:`sweep_ci` — seeds batched into ONE
+  vmapped device launch per fluid cell (padded via
+  ``jaxsim.stack_traces``), aggregated to mean +/- std
+  :class:`~repro.scenarios.metrics.CellCI` rows.
 
 Policy strings accept the simulator's names ('ada', 'srsf1', 'kway3', ...)
 plus the paper aliases 'adadual'/'ada-srsf'.
@@ -21,6 +27,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import netmodel
 from repro.core.placement import PlacementPolicy
 from repro.core.simulator import ClusterSimulator, SimResult, comm_policy_from_name
 from repro.scenarios import metrics as metrics_mod
@@ -32,8 +39,9 @@ COMM_ALIASES = {
     "ada_srsf": "ada",
 }
 
-#: Fluid backend supports the branchless policies only.
-FLUID_POLICIES = ("ada", "srsf1", "srsf2", "srsf3")
+#: Gating policies the fluid backend supports (branchless masks from the
+#: shared layer): AdaDUAL, SRSF(n), and threshold-gated k-way AdaDUAL.
+FLUID_POLICIES = ("ada", "srsf1", "srsf2", "srsf3", "kway2", "kway3")
 
 
 def canonical_comm(comm: str) -> str:
@@ -68,10 +76,14 @@ def run_scenario_event(
 def fluid_config(
     scenario: Scenario,
     comm: str = "ada",
+    placement: str = "lwf",
     dt: float = 0.05,
     max_steps: int = 400_000,
 ):
-    """JaxSimConfig for a scenario (heterogeneous bandwidth -> mean b)."""
+    """JaxSimConfig for a scenario: per-server bandwidth passes through
+    verbatim (the fluid backend drains each transfer at its slowest member
+    server — no cluster-mean collapse); event placement names map to their
+    gang analogues (lwf->consolidate, ff->first_fit, ls->least_loaded)."""
     from repro.core.jaxsim import JaxSimConfig
 
     comm = canonical_comm(comm)
@@ -80,31 +92,44 @@ def fluid_config(
             f"fluid backend supports {FLUID_POLICIES}, got {comm!r}"
         )
     p = scenario.params
-    scale = p.mean_bandwidth_scale(scenario.n_servers)
     return JaxSimConfig(
         n_servers=scenario.n_servers,
         gpus_per_server=scenario.gpus_per_server,
         dt=dt,
         max_steps=max_steps,
         policy=comm,
+        placement=netmodel.canonical_placement(placement),
         a=p.a,
-        b=p.b / scale,
-        eta=p.eta / scale,
+        b=p.b,
+        eta=p.eta,
         dual_threshold=p.dual_threshold,
+        server_bandwidth=tuple(p.server_bandwidth),
     )
 
 
 def run_scenario_fluid(
     scenario: Scenario,
     comm: str = "ada",
+    placement: str = "lwf",
     dt: float = 0.05,
     max_steps: int = 400_000,
 ) -> Dict[str, object]:
     """Fluid (vectorized JAX) simulation of one scenario instance."""
     from repro.core.jaxsim import simulate_jobs
 
-    cfg = fluid_config(scenario, comm=comm, dt=dt, max_steps=max_steps)
+    cfg = fluid_config(
+        scenario, comm=comm, placement=placement, dt=dt, max_steps=max_steps
+    )
     return simulate_jobs(scenario.job_list(), cfg)
+
+
+def _dedupe_fluid_placements(placements: Sequence[str]) -> Tuple[str, ...]:
+    """Map event placement names to their gang analogues up front (so
+    'rand' fails fast) and dedupe aliases that collapse to one mode."""
+    seen: Dict[str, str] = {}
+    for pl in placements:
+        seen.setdefault(netmodel.canonical_placement(pl), pl)
+    return tuple(seen.values())
 
 
 # ---------------------------------------------------------------------------
@@ -142,13 +167,15 @@ def run_cell(cell: SweepCell) -> metrics_mod.RunMetrics:
             wall_s=time.time() - t0,
         )
     if cell.backend == "fluid":
-        out = run_scenario_fluid(scn, comm=cell.comm, dt=cell.dt)
+        out = run_scenario_fluid(
+            scn, comm=cell.comm, placement=cell.placement, dt=cell.dt
+        )
         jcts = [float(j) for j, fin in zip(out["jct"], out["finished"]) if fin]
         return metrics_mod.from_jcts(
             jcts,
             scenario=cell.scenario,
             backend="fluid",
-            placement="gang-lwf1",
+            placement=f"gang-{netmodel.canonical_placement(cell.placement)}",
             comm=canonical_comm(cell.comm),
             seed=cell.seed,
             n_jobs=scn.n_jobs,
@@ -179,9 +206,7 @@ def sweep(
     multiprocessing pool (event backend only — jitted jax functions don't
     survive fork well)."""
     if backend == "fluid":
-        # the fluid backend has one built-in gang placement; collapsing the
-        # placement axis avoids duplicate identical runs/rows
-        placements = ("gang",)
+        placements = _dedupe_fluid_placements(placements)
 
     def cell_overrides(name: str) -> Tuple[Tuple[str, object], ...]:
         d = dict(overrides or {})
@@ -212,3 +237,105 @@ def sweep(
         with mp.get_context("spawn").Pool(processes) as pool:
             return pool.map(run_cell, cells)
     return [run_cell(c) for c in cells]
+
+
+# ---------------------------------------------------------------------------
+# Batched Monte-Carlo (confidence intervals per cell)
+# ---------------------------------------------------------------------------
+
+
+def monte_carlo_fluid(
+    scenario: str,
+    seeds: Sequence[int],
+    comm: str = "ada",
+    placement: str = "lwf",
+    overrides: Optional[Dict[str, object]] = None,
+    dt: float = 0.05,
+    max_steps: int = 400_000,
+) -> List[metrics_mod.RunMetrics]:
+    """All seeds of one scenario x policy x placement cell in ONE vmapped
+    fluid launch: per-seed traces are padded/stacked
+    (``jaxsim.stack_traces``) and swept by ``simulate_traces_batched`` —
+    one XLA compilation, one device launch, one :class:`RunMetrics` per
+    seed.  The contention model/cluster shape must not vary with the seed
+    (true for every registered scenario); the seed only resamples jobs."""
+    import numpy as np
+
+    from repro.core.jaxsim import (
+        simulate_traces_batched,
+        stack_traces,
+        trace_from_jobs,
+    )
+
+    seeds = list(seeds)
+    scns = [get_scenario(scenario, seed=s, **(overrides or {})) for s in seeds]
+    cfg = fluid_config(
+        scns[0], comm=comm, placement=placement, dt=dt, max_steps=max_steps
+    )
+    t0 = time.time()
+    batch = stack_traces([trace_from_jobs(s.job_list()) for s in scns])
+    out = simulate_traces_batched(batch, cfg)
+    jct = np.asarray(out["jct"])
+    fin = np.asarray(out["finished"])
+    mks = np.asarray(out["makespan"])
+    wall = (time.time() - t0) / len(seeds)
+    return [
+        metrics_mod.from_jcts(
+            jct[i][fin[i]].tolist(),
+            scenario=scenario,
+            backend="fluid",
+            placement=f"gang-{cfg.placement}",
+            comm=cfg.policy,
+            seed=seed,
+            n_jobs=scn.n_jobs,
+            makespan=float(mks[i]),
+            wall_s=wall,
+        )
+        for i, (seed, scn) in enumerate(zip(seeds, scns))
+    ]
+
+
+def sweep_ci(
+    scenarios: Sequence[str],
+    comms: Sequence[str] = ("ada", "srsf1", "srsf2"),
+    placements: Sequence[str] = ("lwf",),
+    kappa: int = 1,
+    seeds: Sequence[int] = (0, 1, 2, 3, 4),
+    backend: str = "fluid",
+    overrides: Optional[Dict[str, object]] = None,
+    per_scenario_overrides: Optional[Dict[str, Dict[str, object]]] = None,
+    processes: Optional[int] = None,
+    dt: float = 0.05,
+) -> List[metrics_mod.CellCI]:
+    """Mean +/- std avg-JCT per scenario x placement x comm cell over
+    ``seeds``.  Fluid backend: one vmapped batch per cell
+    (:func:`monte_carlo_fluid`); event backend: the exact per-seed sweep
+    (optionally multiprocessed), aggregated the same way."""
+    if backend == "fluid":
+        placements = _dedupe_fluid_placements(placements)
+        records: List[metrics_mod.RunMetrics] = []
+        for s in scenarios:
+            cell_over = dict(overrides or {})
+            cell_over.update((per_scenario_overrides or {}).get(s, {}))
+            for pl in placements:
+                for c in comms:
+                    records.extend(
+                        monte_carlo_fluid(
+                            s, seeds, comm=c, placement=pl,
+                            overrides=cell_over, dt=dt,
+                        )
+                    )
+    else:
+        records = sweep(
+            scenarios,
+            comms=comms,
+            placements=placements,
+            kappa=kappa,
+            seeds=seeds,
+            backend=backend,
+            overrides=overrides,
+            per_scenario_overrides=per_scenario_overrides,
+            processes=processes,
+            dt=dt,
+        )
+    return metrics_mod.ci_from_runs(records)

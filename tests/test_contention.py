@@ -109,3 +109,39 @@ class TestFits:
         assert ContentionParams(eta=0.0).dual_threshold == pytest.approx(0.5)
         p = ContentionParams()
         assert 0 < p.dual_threshold < 0.5
+
+
+class TestServerBandwidthEdges:
+    """Edge cases of the per-server bandwidth multipliers (scenario-engine
+    heterogeneity): servers beyond the tuple, empty tuples, degenerate
+    cluster sizes."""
+
+    def test_empty_tuple_is_nominal(self):
+        p = ContentionParams()
+        assert p.server_bandwidth == ()
+        assert p.bandwidth_scale({0, 1, 2}) == 1.0
+        assert p.mean_bandwidth_scale(16) == 1.0
+
+    def test_servers_beyond_tuple_are_nominal(self):
+        p = ContentionParams(server_bandwidth=(0.5, 2.0))
+        assert p.bandwidth_scale({0}) == 0.5
+        assert p.bandwidth_scale({1}) == 2.0
+        assert p.bandwidth_scale({5}) == 1.0        # past the tuple
+        assert p.bandwidth_scale({1, 7}) == 1.0     # nominal member binds
+        assert p.bandwidth_scale({0, 7}) == 0.5     # slow member binds
+
+    def test_mean_pads_with_nominal(self):
+        p = ContentionParams(server_bandwidth=(0.5, 0.5))
+        assert p.mean_bandwidth_scale(4) == pytest.approx((0.5 + 0.5 + 1 + 1) / 4)
+        assert p.mean_bandwidth_scale(2) == pytest.approx(0.5)
+
+    def test_mean_degenerate_cluster_is_nominal(self):
+        p = ContentionParams(server_bandwidth=(0.5,))
+        assert p.mean_bandwidth_scale(0) == 1.0
+        assert p.mean_bandwidth_scale(-3) == 1.0
+
+    def test_nonpositive_multiplier_rejected(self):
+        with pytest.raises(ValueError, match="must be positive"):
+            ContentionParams(server_bandwidth=(1.0, 0.0))
+        with pytest.raises(ValueError, match="must be positive"):
+            ContentionParams(server_bandwidth=(-0.5,))

@@ -1,11 +1,22 @@
 """Cross-backend differential harness: the exact event simulator
 (``core/simulator.py``) vs the vectorized fluid simulator
-(``core/jaxsim.py``) on the deterministic smoke scenario.
+(``core/jaxsim.py``).
 
 The fluid backend is a documented approximation (gang-exclusive placement,
-fixed dt, single admission per step), so agreement is *qualitative*:
-completeness, bounded JCT/makespan ratios, determinism, and the
-no-contention limit where both backends are exact.
+fixed dt, single admission per step, threshold-approximated k-way gating),
+so agreement is *qualitative*: completeness, bounded JCT/makespan ratios,
+determinism, matching policy/placement orderings, and the no-contention
+limit where both backends are exact.
+
+Coverage (per the shared ``core/netmodel.py`` layer):
+
+* every fluid-supported gating policy (``FLUID_POLICIES``: ada, srsf1-3,
+  kway2/kway3) on the deterministic ``smoke`` scenario, the
+  policy-differentiating ``contended_residue`` scenario, and a downsized
+  ``hetero_bandwidth`` cell with true per-server (not cluster-mean)
+  bandwidth;
+* the three gang placement modes vs their event analogues (LWF-1 <= FF on
+  a fragmentation-sensitive workload, on both backends).
 
 This harness is what caught the fluid gating self-deadlock (a waiting
 all-reduce counted itself as an active transfer and never started under
@@ -15,7 +26,12 @@ import numpy as np
 import pytest
 
 from repro.core.cluster import TABLE_III, JobSpec
-from repro.scenarios import get_scenario, run_scenario_event, run_scenario_fluid
+from repro.scenarios import (
+    FLUID_POLICIES,
+    get_scenario,
+    run_scenario_event,
+    run_scenario_fluid,
+)
 from repro.scenarios.registry import Scenario
 from repro.core.contention import ContentionParams
 
@@ -24,10 +40,24 @@ DT = 0.02
 #: fluid backend pessimistic on shared-GPU scenarios)
 RATIO = 2.0
 
+#: Downsized hetero_bandwidth cell: small enough for tier-1, large enough
+#: that half the servers being 0.4x slow actually shapes the schedule.
+HETERO_KW = dict(seed=1, n_jobs=16, min_iters=60, max_iters=300)
+
 
 @pytest.fixture(scope="module")
 def smoke():
     return get_scenario("smoke")
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    return get_scenario("hetero_bandwidth", **HETERO_KW)
+
+
+@pytest.fixture(scope="module")
+def contended():
+    return get_scenario("contended_residue", seed=1)
 
 
 @pytest.fixture(scope="module")
@@ -40,6 +70,10 @@ def fluid_res(smoke):
     return run_scenario_fluid(smoke, comm="ada", dt=DT)
 
 
+def fluid_avg(out):
+    return float(out["jct"][out["finished"]].mean())
+
+
 class TestSmokeAgreement:
     def test_both_backends_finish_everything(self, smoke, event_res, fluid_res):
         assert len(event_res.jct) == smoke.n_jobs
@@ -47,7 +81,7 @@ class TestSmokeAgreement:
 
     def test_avg_jct_within_ratio(self, event_res, fluid_res):
         ev = event_res.avg_jct()
-        fl = float(fluid_res["jct"][fluid_res["finished"]].mean())
+        fl = fluid_avg(fluid_res)
         assert ev / RATIO <= fl <= ev * RATIO, (ev, fl)
 
     def test_makespan_within_ratio(self, event_res, fluid_res):
@@ -55,7 +89,7 @@ class TestSmokeAgreement:
         fl = float(fluid_res["makespan"])
         assert ev / RATIO <= fl <= ev * RATIO, (ev, fl)
 
-    @pytest.mark.parametrize("comm", ["ada", "srsf1", "srsf2"])
+    @pytest.mark.parametrize("comm", FLUID_POLICIES)
     def test_no_policy_strands_jobs(self, smoke, comm):
         """Regression for the fluid gating self-deadlock: every policy must
         complete the smoke scenario's multi-server jobs."""
@@ -65,6 +99,114 @@ class TestSmokeAgreement:
     def test_fluid_deterministic(self, smoke, fluid_res):
         again = run_scenario_fluid(smoke, comm="ada", dt=DT)
         np.testing.assert_array_equal(fluid_res["jct"], again["jct"])
+
+
+class TestEveryPolicyEveryBackend:
+    """Each fluid-supported gating policy, event-vs-fluid, on the scenario
+    built so gang placements must share servers (all-reduces collide even
+    under exclusive placement — the cell where the masks actually bite)."""
+
+    @pytest.mark.parametrize("comm", FLUID_POLICIES)
+    def test_contended_cell_agrees(self, contended, comm):
+        ev = run_scenario_event(contended, comm=comm)
+        fl = run_scenario_fluid(contended, comm=comm, dt=DT)
+        assert len(ev.jct) == contended.n_jobs
+        assert int(fl["finished"].sum()) == contended.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_gating_differentiates_like_event(self, contended):
+        """AdaDUAL refuses the always-colliding equal-size transfers (all
+        messages are identical, so Theorem 2's ratio test fails) while
+        SRSF(2) blindly accepts 2-way contention — on BOTH backends the
+        blind policy must be no better."""
+        fl_ada = fluid_avg(run_scenario_fluid(contended, comm="ada", dt=DT))
+        fl_s2 = fluid_avg(run_scenario_fluid(contended, comm="srsf2", dt=DT))
+        ev_ada = run_scenario_event(contended, comm="ada").avg_jct()
+        ev_s2 = run_scenario_event(contended, comm="srsf2").avg_jct()
+        assert fl_ada < fl_s2, (fl_ada, fl_s2)
+        assert ev_ada < ev_s2, (ev_ada, ev_s2)
+
+
+class TestHeteroBandwidth:
+    """Per-server bandwidth on the fluid backend (the cell that previously
+    could not be differentially tested: heterogeneity used to collapse to
+    the cluster mean)."""
+
+    @pytest.mark.parametrize("comm", FLUID_POLICIES)
+    def test_agrees_with_event(self, hetero, comm):
+        ev = run_scenario_event(hetero, comm=comm)
+        fl = run_scenario_fluid(hetero, comm=comm, dt=0.05)
+        assert len(ev.jct) == hetero.n_jobs
+        assert int(fl["finished"].sum()) == hetero.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_slow_servers_slow_the_fluid_backend(self, hetero):
+        """Same workload, homogeneous network: the degraded cluster must
+        not finish sooner — proves per-server rates reach the drain loop
+        (the old mean-collapse fluid backend got this wrong by design)."""
+        import dataclasses
+
+        homog = dataclasses.replace(hetero, params=ContentionParams())
+        slow = run_scenario_fluid(hetero, comm="ada", dt=0.05)
+        fast = run_scenario_fluid(homog, comm="ada", dt=0.05)
+        assert fluid_avg(slow) > fluid_avg(fast)
+
+
+class TestPlacementModes:
+    """Fluid gang placement modes vs their event analogues on a workload
+    where first-fit fragments multi-server jobs across partially-occupied
+    servers (comm + contention) while consolidation gives whole servers."""
+
+    def _scenario(self):
+        jobs = []
+        jid = 0
+        for wave in range(3):
+            t = float(wave * 2)
+            jobs.append(JobSpec(jid, t, 1, 80, TABLE_III["resnet50"]))
+            jid += 1
+            jobs.append(JobSpec(jid, t, 4, 40, TABLE_III["vgg16"]))
+            jid += 1
+        return Scenario(
+            name="frag",
+            seed=0,
+            n_servers=4,
+            gpus_per_server=4,
+            jobs=tuple(jobs),
+            params=ContentionParams(),
+        )
+
+    @pytest.mark.parametrize("placement", ["lwf", "ff"])
+    def test_each_mode_completes_and_agrees(self, placement):
+        scn = self._scenario()
+        ev = run_scenario_event(scn, comm="ada", placement=placement)
+        fl = run_scenario_fluid(scn, comm="ada", placement=placement, dt=DT)
+        assert len(ev.jct) == scn.n_jobs
+        assert int(fl["finished"].sum()) == scn.n_jobs
+        assert ev.makespan / RATIO <= float(fl["makespan"]) <= ev.makespan * RATIO
+
+    def test_least_loaded_completes_and_consolidates(self):
+        """Gang `least_loaded` fills whole servers in L_S order, so its
+        event anchor is LWF-kappa — per-GPU list scheduling (LS) instead
+        *deliberately* fragments jobs across servers, a shape gang
+        placement cannot express (documented parity gap)."""
+        scn = self._scenario()
+        fl = run_scenario_fluid(scn, comm="ada", placement="ls", dt=DT)
+        ev_lwf = run_scenario_event(scn, comm="ada", placement="lwf")
+        assert int(fl["finished"].sum()) == scn.n_jobs
+        assert (
+            ev_lwf.makespan / RATIO
+            <= float(fl["makespan"])
+            <= ev_lwf.makespan * RATIO
+        )
+
+    def test_lwf_beats_ff_on_both_backends(self):
+        scn = self._scenario()
+        fl_lwf = float(run_scenario_fluid(scn, comm="ada", placement="lwf", dt=DT)["makespan"])
+        fl_ff = float(run_scenario_fluid(scn, comm="ada", placement="ff", dt=DT)["makespan"])
+        ev_lwf = run_scenario_event(scn, comm="ada", placement="lwf").makespan
+        ev_ff = run_scenario_event(scn, comm="ada", placement="ff").makespan
+        assert fl_lwf < fl_ff, (fl_lwf, fl_ff)
+        assert ev_lwf < ev_ff, (ev_lwf, ev_ff)
 
 
 class TestNoCommLimit:

@@ -1,14 +1,98 @@
 """Tests for the vectorized (fluid) JAX simulator — beyond-paper ext. #3.
 
 It is an approximation of the exact event-driven simulator (gang placement,
-fixed dt, one admission per step), so tests assert *qualitative* agreement:
-completeness, determinism, and the policy orderings the paper establishes.
+fixed dt, one admission per step), so the Monte-Carlo tests assert
+*qualitative* agreement: completeness, determinism, and the policy
+orderings the paper establishes.  The batched-entry tests are exact:
+vmapped lanes must reproduce the single-trace simulation bit-for-bit.
 """
 
 import numpy as np
 import pytest
 
-from repro.core.jaxsim import JaxSimConfig, monte_carlo_jct
+from repro.core.cluster import TABLE_III
+from repro.core.jaxsim import (
+    JaxSimConfig,
+    monte_carlo_jct,
+    simulate_trace,
+    simulate_traces_batched,
+    stack_traces,
+    trace_from_jobs,
+)
+from repro.scenarios import get_scenario
+
+CFG = JaxSimConfig(n_servers=4, gpus_per_server=2, dt=0.02)
+
+
+class TestTraceFromJobs:
+    def test_round_trips_scenario_jobs(self):
+        jobs = get_scenario("smoke").job_list()
+        tr = trace_from_jobs(jobs)
+        assert set(tr) == {"arrival", "iters", "t_iter", "msg_bytes", "n_gpus"}
+        for key in tr:
+            assert tr[key].shape == (len(jobs),), key
+        assert tr["n_gpus"].dtype == np.int32
+        for key in ("arrival", "iters", "t_iter", "msg_bytes"):
+            assert tr[key].dtype == np.float32, key
+        for i, j in enumerate(jobs):
+            assert float(tr["arrival"][i]) == j.arrival
+            assert int(tr["iters"][i]) == j.iterations
+            assert int(tr["n_gpus"][i]) == j.n_gpus
+            assert float(tr["t_iter"][i]) == pytest.approx(
+                j.model.t_iter_compute, rel=1e-6
+            )
+            assert float(tr["msg_bytes"][i]) == pytest.approx(
+                j.model.size_bytes, rel=1e-6
+            )
+
+    def test_empty_job_list(self):
+        tr = trace_from_jobs([])
+        for key, arr in tr.items():
+            assert arr.shape == (0,), key
+        assert tr["n_gpus"].dtype == np.int32
+        assert tr["arrival"].dtype == np.float32
+
+
+class TestStackTraces:
+    def test_rectangular_batch_with_valid_mask(self):
+        jobs = get_scenario("smoke").job_list()
+        t_full = trace_from_jobs(jobs)
+        t_short = trace_from_jobs(jobs[:4])
+        batch = stack_traces([t_full, t_short])
+        n = len(jobs)
+        for key in ("arrival", "iters", "t_iter", "msg_bytes", "n_gpus", "valid"):
+            assert batch[key].shape == (2, n), key
+        assert bool(batch["valid"].all(axis=1)[0])
+        np.testing.assert_array_equal(
+            np.asarray(batch["valid"][1]), [True] * 4 + [False] * 2
+        )
+
+    def test_empty_batch_raises(self):
+        with pytest.raises(ValueError, match="at least one trace"):
+            stack_traces([])
+
+    def test_batched_lanes_match_single_runs(self):
+        """The padded vmap batch must reproduce each single-trace run
+        exactly — including the ragged lane (padded jobs inert and
+        excluded from `finished`) and the per-lane makespan (the loop
+        clock keeps ticking for early-converged lanes; makespan must not)."""
+        jobs = get_scenario("smoke").job_list()
+        t_full = trace_from_jobs(jobs)
+        t_short = trace_from_jobs(jobs[:4])
+        out_b = simulate_traces_batched(stack_traces([t_full, t_short]), CFG)
+        out_full = simulate_trace(t_full, CFG)
+        out_short = simulate_trace(t_short, CFG)
+        np.testing.assert_array_equal(
+            np.asarray(out_b["jct"])[0], np.asarray(out_full["jct"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out_b["jct"])[1][:4], np.asarray(out_short["jct"])
+        )
+        assert not np.asarray(out_b["finished"])[1][4:].any()
+        np.testing.assert_allclose(
+            np.asarray(out_b["makespan"]),
+            [float(out_full["makespan"]), float(out_short["makespan"])],
+        )
 
 
 @pytest.mark.slow

@@ -1,0 +1,157 @@
+"""Unit tests for the shared policy/network layer (``core/netmodel.py``):
+the same predicates must give identical answers on Python scalars (event
+backend path) and numpy arrays (the shape the fluid backend traces), and
+must agree with the event-side wrappers in ``core/adadual.py``."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import netmodel
+from repro.core.adadual import adadual_should_start, srsf_n_should_start
+from repro.core.contention import ContentionParams
+
+P = ContentionParams()
+
+
+class TestRateModel:
+    def test_ratio_is_one_uncontended(self):
+        assert netmodel.rate_ratio(1, P.b, P.eta) == pytest.approx(1.0)
+
+    def test_ratio_matches_params_rate(self):
+        for k in (1, 2, 3, 5):
+            assert netmodel.rate(k, P.b, P.eta) == pytest.approx(P.rate(k))
+            assert netmodel.rate_ratio(k, P.b, P.eta) == pytest.approx(
+                P.rate(k) / P.rate(1)
+            )
+
+    def test_ratio_vectorizes(self):
+        ks = np.array([1, 2, 4])
+        out = netmodel.rate_ratio(ks, P.b, P.eta)
+        assert out.shape == (3,)
+        assert out[0] == pytest.approx(1.0)
+        assert np.all(np.diff(out) < 0)  # more contention, smaller share
+
+
+class TestServerBandwidth:
+    def test_empty_is_homogeneous(self):
+        assert np.all(netmodel.server_bandwidth_array((), 4) == 1.0)
+
+    def test_pad_and_truncate(self):
+        bw = netmodel.server_bandwidth_array((0.5, 2.0), 4)
+        np.testing.assert_allclose(bw, [0.5, 2.0, 1.0, 1.0])
+        bw = netmodel.server_bandwidth_array((0.5, 2.0, 3.0), 2)
+        np.testing.assert_allclose(bw, [0.5, 2.0])
+
+    def test_zero_servers(self):
+        assert netmodel.server_bandwidth_array((0.5,), 0).shape == (0,)
+
+    def test_slowest_member_matches_params(self):
+        params = ContentionParams(server_bandwidth=(0.4, 1.0, 0.7))
+        bw = netmodel.server_bandwidth_array(params.server_bandwidth, 4)
+        for servers in ({0}, {1}, {0, 2}, {2, 3}, {1, 3}):
+            mask = np.zeros(4, dtype=bool)
+            mask[list(servers)] = True
+            assert netmodel.slowest_member_scale(bw, mask) == pytest.approx(
+                params.bandwidth_scale(servers)
+            ), servers
+
+    def test_slowest_member_no_members_is_nominal(self):
+        bw = netmodel.server_bandwidth_array((0.4,), 3)
+        assert netmodel.slowest_member_scale(bw, np.zeros(3, bool)) == 1.0
+
+    def test_slowest_member_batched(self):
+        bw = np.array([0.4, 1.0, 0.7])
+        masks = np.array([[1, 0, 1], [0, 1, 0], [0, 0, 0]], dtype=bool)
+        out = netmodel.slowest_member_scale(bw, masks)
+        np.testing.assert_allclose(out, [0.4, 1.0, 1.0])
+
+
+class TestParsePolicy:
+    def test_known(self):
+        assert netmodel.parse_policy("ada") == netmodel.PolicySpec("ada", 2, True)
+        assert netmodel.parse_policy("srsf1") == netmodel.PolicySpec("srsf1", 1, False)
+        assert netmodel.parse_policy("srsf3") == netmodel.PolicySpec("srsf3", 3, False)
+        assert netmodel.parse_policy("kway3") == netmodel.PolicySpec("kway3", 3, True)
+
+    @pytest.mark.parametrize("bad", ["", "srsf0", "kway1", "lwf", "adadual"])
+    def test_unknown_raises(self, bad):
+        with pytest.raises(ValueError, match="unknown comm policy"):
+            netmodel.parse_policy(bad)
+
+
+class TestMayStart:
+    def test_matches_adadual_wrapper(self):
+        """The shared predicate and the event backend's Algorithm 2 wrapper
+        must be the same function."""
+        cases = [
+            (0.0, []),            # uncontended
+            (50e6, [200e6]),      # small vs one big old -> start
+            (150e6, [200e6]),     # ratio test fails -> wait
+            (50e6, [200e6, 60e6]),  # binding old is the small one
+            (50e6, [0.0]),        # exhausted old -> refuse (event parity)
+        ]
+        for new_bytes, olds in cases:
+            for max_conc in (0, 1, 2, 3):
+                expect = adadual_should_start(new_bytes, olds, max_conc, P)
+                got = netmodel.may_start(
+                    max_conc + 1,
+                    new_bytes,
+                    min(olds, default=math.inf),
+                    max_ways=2,
+                    threshold_gated=True,
+                    dual_threshold=P.dual_threshold,
+                )
+                assert bool(got) == expect, (new_bytes, olds, max_conc)
+
+    def test_matches_srsf_n(self):
+        for n in (1, 2, 3):
+            for max_conc in (0, 1, 2, 3, 4):
+                expect = srsf_n_should_start(max_conc, n)
+                got = netmodel.may_start(
+                    max_conc + 1, 0.0, math.inf,
+                    max_ways=n, threshold_gated=False, dual_threshold=0.0,
+                )
+                assert bool(got) == expect, (n, max_conc)
+
+    def test_vectorized_mask(self):
+        k_would = np.array([1, 2, 2, 3])
+        new_cost = np.array([1.0, 1.0, 1.0, 1.0])
+        min_old = np.array([np.inf, 10.0, 1.0, 10.0])
+        out = netmodel.may_start(
+            k_would, new_cost, min_old,
+            max_ways=2, threshold_gated=True, dual_threshold=0.4,
+        )
+        # lane0 uncontended; lane1 passes ratio (1 < 4); lane2 fails
+        # (1 !< 0.4); lane3 over the cap
+        np.testing.assert_array_equal(out, [True, True, False, False])
+
+
+class TestPlacementRank:
+    FREE = np.array([1.0, 4.0, 0.0, 2.0])
+    LOAD = np.array([9.0, 0.0, 5.0, 2.0])
+    IDX = np.arange(4, dtype=float)
+
+    def order(self, mode):
+        return list(np.argsort(
+            netmodel.placement_rank(mode, self.FREE, self.LOAD, self.IDX),
+            kind="stable",
+        ))
+
+    def test_modes(self):
+        assert self.order("consolidate") == [1, 3, 0, 2]   # most free first
+        assert self.order("first_fit") == [0, 1, 2, 3]     # index order
+        assert self.order("least_loaded") == [1, 3, 2, 0]  # smallest L_S first
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(ValueError, match="unknown placement mode"):
+            netmodel.placement_rank("rand", self.FREE, self.LOAD, self.IDX)
+
+    def test_canonical_placement(self):
+        assert netmodel.canonical_placement("lwf") == "consolidate"
+        assert netmodel.canonical_placement("FF") == "first_fit"
+        assert netmodel.canonical_placement("ls") == "least_loaded"
+        assert netmodel.canonical_placement("consolidate") == "consolidate"
+        with pytest.raises(ValueError, match="fluid backend supports"):
+            netmodel.canonical_placement("rand")

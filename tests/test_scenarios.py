@@ -29,6 +29,7 @@ REGRESSION_SEEDS = {
     "hetero_bandwidth": 1,
     "large_job_dominated": 1,
     "adversarial_allbig": 1,
+    "contended_residue": 1,
     "smoke": 0,
 }
 REGRESSION_CELLS = {
@@ -176,3 +177,59 @@ class TestSweepRunner:
         assert canonical_comm("adadual") == "ada"
         assert canonical_comm("Ada-SRSF") == "ada"
         assert canonical_comm("srsf2") == "srsf2"
+
+
+class TestMonteCarloCI:
+    """The vmap-batched Monte-Carlo path: one device launch per cell,
+    per-seed records identical to serial fluid runs, CellCI aggregation."""
+
+    def test_batched_matches_serial_fluid(self):
+        from repro.scenarios import monte_carlo_fluid, run_scenario_fluid
+
+        seeds = (0, 1)
+        recs = monte_carlo_fluid("contended_residue", seeds, comm="ada", dt=0.05)
+        assert [r.seed for r in recs] == list(seeds)
+        for r, seed in zip(recs, seeds):
+            scn = get_scenario("contended_residue", seed=seed)
+            out = run_scenario_fluid(scn, comm="ada", dt=0.05)
+            serial = [float(j) for j, f in zip(out["jct"], out["finished"]) if f]
+            assert r.n_finished == len(serial) == scn.n_jobs
+            assert r.avg_jct == pytest.approx(sum(serial) / len(serial))
+            assert r.makespan == pytest.approx(float(out["makespan"]))
+
+    def test_fluid_ci_preserves_paper_ordering(self):
+        from repro.scenarios import sweep_ci
+
+        cis = sweep_ci(
+            ["contended_residue"],
+            comms=("ada", "srsf2"),
+            placements=("lwf",),
+            seeds=(0, 1, 2),
+            backend="fluid",
+            dt=0.05,
+        )
+        by = {c.comm: c for c in cis}
+        assert set(by) == {"ada", "srsf2"}
+        for c in cis:
+            assert c.n_seeds == 3
+            assert c.finished_frac == 1.0
+            assert c.avg_jct_std >= 0.0
+            assert c.backend == "fluid"
+        assert by["ada"].avg_jct_mean <= by["srsf2"].avg_jct_mean
+
+    def test_ci_from_runs_math(self):
+        from repro.scenarios import ci_from_runs, from_jcts
+
+        recs = [
+            from_jcts(
+                [10.0 + off], scenario="s", backend="event", placement="p",
+                comm="c", seed=i, n_jobs=1, makespan=20.0 + off,
+            )
+            for i, off in enumerate((-2.0, 0.0, 2.0))
+        ]
+        (ci,) = ci_from_runs(recs)
+        assert ci.n_seeds == 3
+        assert ci.avg_jct_mean == pytest.approx(10.0)
+        assert ci.avg_jct_std == pytest.approx((8.0 / 3) ** 0.5)
+        assert ci.makespan_mean == pytest.approx(20.0)
+        assert ci.finished_frac == 1.0

@@ -180,3 +180,62 @@ class TestMetrics:
         res = simulate(jobs)
         assert res.median_jct() <= res.avg_jct() * 5
         assert res.median_jct() <= res.p95_jct()
+
+
+class TestBandwidthAwareSrsf:
+    """Beyond-paper (ROADMAP item): SRSF remaining-service estimate scaled
+    by each job's slowest member NIC under server_bandwidth heterogeneity,
+    behind a flag that defaults to the paper-faithful nominal estimate."""
+
+    PARAMS_HET = ContentionParams(server_bandwidth=(0.1, 1.0))
+
+    def _jobs(self):
+        # 2 servers x 1 GPU: job 0 (vgg16) spans both servers, so its comm
+        # crosses the 10x-slow server-0 NIC; job 1 (lstm) shares GPU (0,0).
+        return mk_jobs([(0.0, 2, 30, "vgg16"), (0.0, 1, 500, "lstm_ptb")])
+
+    def test_estimate_scales_with_slowest_member(self):
+        from repro.core.simulator import JobRun
+
+        spec = self._jobs()[0]
+        run = JobRun(spec=spec, gpus=[(0, 0), (1, 0)], servers={0, 1}, placed_at=0.0)
+        nominal = run.per_iter_service(self.PARAMS_HET)
+        aware = run.per_iter_service(self.PARAMS_HET, bandwidth_aware=True)
+        m = spec.model
+        assert nominal == pytest.approx(
+            m.t_iter_compute + self.PARAMS_HET.a + self.PARAMS_HET.b * m.size_bytes
+        )
+        assert aware == pytest.approx(
+            m.t_iter_compute + self.PARAMS_HET.a + self.PARAMS_HET.b * m.size_bytes / 0.1
+        )
+        assert run.remaining_service(self.PARAMS_HET, True) == pytest.approx(
+            30 * aware * 2
+        )
+
+    def test_flag_off_is_default_behavior(self):
+        jobs = self._jobs()
+        kw = dict(params=self.PARAMS_HET, n_servers=2, gpus_per_server=1)
+        default = simulate(jobs, comm="ada", **kw)
+        off = simulate(jobs, comm="ada", bandwidth_aware_srsf=False, **kw)
+        assert default.jct == off.jct
+
+    def test_flag_changes_priorities_under_heterogeneity(self):
+        """Nominal SRSF ranks the short spanning job first; the
+        bandwidth-aware estimate recognizes its slow NIC inflates its real
+        remaining service past the colocated single-GPU job's, flipping the
+        GPU-sharing order (deterministic, verified fixture)."""
+        jobs = self._jobs()
+        kw = dict(params=self.PARAMS_HET, n_servers=2, gpus_per_server=1)
+        nominal = simulate(jobs, comm="ada", **kw)
+        aware = simulate(jobs, comm="ada", bandwidth_aware_srsf=True, **kw)
+        assert len(nominal.jct) == len(aware.jct) == 2
+        assert nominal.jct != aware.jct
+        # the deprioritized slow spanning job finishes later under aware
+        assert aware.jct[0] > nominal.jct[0]
+
+    def test_homogeneous_network_flag_is_noop(self):
+        jobs = self._jobs()
+        kw = dict(params=ContentionParams(), n_servers=2, gpus_per_server=1)
+        a = simulate(jobs, comm="ada", **kw)
+        b = simulate(jobs, comm="ada", bandwidth_aware_srsf=True, **kw)
+        assert a.jct == b.jct
