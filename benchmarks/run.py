@@ -254,6 +254,89 @@ def bench_scenarios(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Topology-aware scheduling (core/topology.py) + fluid batched throughput
+# ---------------------------------------------------------------------------
+
+
+def bench_topology(full: bool) -> None:
+    """oversub_fabric on both backends, the rack-aware placement payoff on
+    rack_locality, and the fluid backend's batched Monte-Carlo throughput
+    (traces/sec through one vmapped launch), persisted to
+    ``BENCH_topology.json`` (path override: ``REPRO_BENCH_TOPOLOGY_JSON``)
+    so the nightly workflow can track the trend."""
+    import numpy as np
+
+    from repro.core.jaxsim import (
+        simulate_traces_batched,
+        stack_traces,
+        trace_from_jobs,
+    )
+    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    from repro.scenarios.sweep import fluid_config, run_scenario_event
+
+    overrides = {} if full else QUICK_OVERRIDES["oversub_fabric"]
+    seeds = list(range(8))
+    scns = [get_scenario("oversub_fabric", seed=s, **overrides) for s in seeds]
+    cfg = fluid_config(scns[0], comm="ada", placement="lwf")
+    batch = stack_traces([trace_from_jobs(s.job_list()) for s in scns])
+
+    # compile once, then time steady-state launches (numpy conversion syncs)
+    np.asarray(simulate_traces_batched(batch, cfg)["makespan"])
+    n_rep = 3
+    t0 = time.time()
+    for _ in range(n_rep):
+        out = simulate_traces_batched(batch, cfg)
+        np.asarray(out["makespan"])
+    wall = (time.time() - t0) / n_rep
+    traces_per_sec = len(seeds) / wall
+    jct = np.asarray(out["jct"])
+    fin = np.asarray(out["finished"])
+    fluid_avg = float(np.mean([jct[i][fin[i]].mean() for i in range(len(seeds))]))
+
+    t0 = time.time()
+    ev = run_scenario_event(scns[0], comm="ada")
+    ev_wall = time.time() - t0
+
+    rack = get_scenario("rack_locality", seed=1)
+    plain = run_scenario_event(rack, comm="ada", placement="lwf")
+    aware = run_scenario_event(rack, comm="ada", placement="lwf_rack")
+    speedup = plain.makespan / aware.makespan
+
+    emit(
+        "topology/fluid_batched",
+        wall * 1e6,
+        f"traces_per_sec={traces_per_sec:.2f};avg_jct={fluid_avg:.1f};"
+        f"n_seeds={len(seeds)}",
+    )
+    emit(
+        "topology/event_oversub",
+        ev_wall * 1e6,
+        f"avg_jct={ev.avg_jct():.1f};finished={len(ev.jct)}",
+    )
+    emit("topology/rack_aware_speedup", 0.0, f"makespan_ratio={speedup:.2f}")
+
+    path = os.environ.get("REPRO_BENCH_TOPOLOGY_JSON", "BENCH_topology.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "scenario": "oversub_fabric",
+                "full": full,
+                "n_seeds": len(seeds),
+                "n_jobs": scns[0].n_jobs,
+                "fluid_traces_per_sec": traces_per_sec,
+                "fluid_wall_s_per_batch": wall,
+                "fluid_avg_jct": fluid_avg,
+                "event_avg_jct": ev.avg_jct(),
+                "event_wall_s": ev_wall,
+                "rack_aware_makespan_speedup": speedup,
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (from the dry-run artifact)
 # ---------------------------------------------------------------------------
 
@@ -289,6 +372,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "table5": bench_table5,
     "chunked": bench_chunked,
     "scenarios": bench_scenarios,
+    "topology": bench_topology,
     "roofline": bench_roofline,
 }
 
@@ -316,9 +400,10 @@ def main() -> None:
         "--placement",
         nargs="+",
         default=["lwf"],
-        choices=["rand", "ff", "ls", "lwf"],
+        choices=["rand", "ff", "ls", "lwf", "lwf_rack"],
         help="placement policies for --scenario (fluid maps lwf->consolidate,"
-        " ff->first_fit, ls->least_loaded gang modes; rand is event-only)",
+        " ff->first_fit, ls->least_loaded, rand->random, lwf_rack->rack_pack"
+        " gang modes)",
     )
     ap.add_argument(
         "--backend",

@@ -67,6 +67,21 @@ def main() -> None:
             f"({c.n_seeds} seeds, finished {c.finished_frac:.0%})"
         )
 
+    # -- network-fabric topology: rack-aware vs topology-blind placement ----
+    # rack_locality puts rack-sized jobs behind 6x-oversubscribed uplinks;
+    # lwf_rack (event) / rack_pack (fluid gang mode) keep them inside one
+    # rack, plain LWF splits them across racks and pays the oversub rate.
+    from repro.scenarios import run_scenario_event
+
+    rack = get_scenario("rack_locality", seed=1)
+    blind = run_scenario_event(rack, comm="ada", placement="lwf")
+    aware = run_scenario_event(rack, comm="ada", placement="lwf_rack")
+    print(
+        f"\nrack_locality (2-server racks, 6x oversub uplinks): makespan "
+        f"LWF={blind.makespan:.0f}s vs LWF_RACK={aware.makespan:.0f}s "
+        f"({blind.makespan / aware.makespan:.1f}x from locality alone)"
+    )
+
 
 if __name__ == "__main__":
     main()

@@ -18,6 +18,7 @@ from repro.core.contention import (
 )
 from repro.core.netmodel import PolicySpec, may_start, parse_policy
 from repro.core.placement import PlacementPolicy
+from repro.core.topology import Domain, Topology, nic_topology, two_tier, uplink_only
 from repro.core.simulator import (
     AdaDual,
     ClusterSimulator,
@@ -48,6 +49,11 @@ __all__ = [
     "may_start",
     "parse_policy",
     "PlacementPolicy",
+    "Domain",
+    "Topology",
+    "nic_topology",
+    "two_tier",
+    "uplink_only",
     "AdaDual",
     "ClusterSimulator",
     "CommPolicy",

@@ -109,18 +109,21 @@ class ContentionParams:
             raise ValueError(f"k must be >= 1, got {k}")
         return self.a + (k * self.b + (k - 1) * self.eta) * message_bytes
 
-    def rate(self, k: int) -> float:
+    def rate(self, k: float) -> float:
         """Instantaneous drain rate [B/s] of one task under k-way contention.
 
         Derived from Eq. (5): transferring M bytes takes
         ``(k*b + (k-1)*eta) * M`` seconds (excluding the one-off latency a),
-        so each byte costs ``k*b + (k-1)*eta`` seconds.
+        so each byte costs ``k*b + (k-1)*eta`` seconds.  ``k`` may be a
+        float >= 1: the topology layer (``core/topology.py``) evaluates
+        Eq. (5) at the *effective* contention ``k_raw * oversub`` of an
+        oversubscribed domain.
         """
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         return 1.0 / (k * self.b + (k - 1) * self.eta)
 
-    def seconds_per_byte(self, k: int) -> float:
+    def seconds_per_byte(self, k: float) -> float:
         return k * self.b + (k - 1) * self.eta
 
     # -- AdaDUAL threshold (Theorem 2) --------------------------------------

@@ -16,8 +16,15 @@ machine around it.  Feature parity with the event backend:
   (documented approximation);
 * per-server heterogeneous NIC bandwidth: each communication task drains
   at the rate of its slowest member server (no cluster-mean collapse);
+* fabric contention domains (``core/topology.py``): the topology's cut
+  load-rule lowers to a static ``[domains, servers]`` incidence matrix
+  (``netmodel.domain_loads`` — two matmuls, no branching), and drain rates
+  use the oversub-weighted effective k; the NIC-only topology is
+  bit-identical to the pre-topology backend;
 * pluggable gang placement: ``consolidate`` (LWF-1 shape), ``first_fit``
-  (FF shape), ``least_loaded`` (LS/LWF L_S ordering).
+  (FF shape), ``least_loaded`` (LS/LWF L_S ordering), ``random`` (RAND
+  shape: fresh uniform server order per admission), ``rack_pack``
+  (LWF_RACK shape: pack the emptiest rack, stay off the uplinks).
 
 Remaining approximations vs the event simulator (``core/simulator.py``),
 all documented and tested for *qualitative* agreement:
@@ -43,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +59,7 @@ import numpy as np
 from repro.core import netmodel
 from repro.core.cluster import TABLE_III
 from repro.core.contention import ContentionParams
+from repro.core.topology import Topology, nic_topology
 from repro.core.trace import PAPER_GPU_DISTRIBUTION
 
 # job phases
@@ -65,7 +73,8 @@ class JaxSimConfig:
     dt: float = 0.05          # [s]
     max_steps: int = 400_000  # dt * max_steps = simulated horizon cap
     policy: str = "ada"       # ada | srsfN | kwayK (netmodel.parse_policy)
-    placement: str = "consolidate"  # consolidate | first_fit | least_loaded
+    #: consolidate | first_fit | least_loaded | random | rack_pack
+    placement: str = "consolidate"
     a: float = ContentionParams().a
     b: float = ContentionParams().b
     eta: float = ContentionParams().eta
@@ -73,6 +82,13 @@ class JaxSimConfig:
     #: per-server relative NIC bandwidth multipliers (1.0 = nominal);
     #: servers beyond the tuple are nominal, () = homogeneous network.
     server_bandwidth: Tuple[float, ...] = ()
+    #: fabric contention domains (core/topology.py); None = the paper's
+    #: NIC-only model (bit-identical to pre-topology behaviour).  Topology
+    #: is frozen/hashable, so it rides along as part of this jit-static
+    #: config and lowers to *static* incidence/oversub matrices.
+    topology: Optional[Topology] = None
+    #: PRNG seed for the ``random`` gang placement mode (fold_in per step).
+    placement_seed: int = 0
 
 
 def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
@@ -126,6 +142,19 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     bw = jnp.asarray(
         netmodel.server_bandwidth_array(cfg.server_bandwidth, ns), jnp.float32
     )
+    # Fabric topology as STATIC matrices (cfg is jit-static, so these are
+    # compile-time constants): domain incidence (n_domains, n_servers),
+    # per-domain oversubscription, and each server's rack for rack_pack.
+    topo = cfg.topology if cfg.topology is not None else nic_topology(ns)
+    if topo.n_servers != ns:
+        raise ValueError(
+            f"topology covers {topo.n_servers} servers, config has {ns}"
+        )
+    incidence = jnp.asarray(topo.incidence(), jnp.float32)
+    oversub = jnp.asarray(topo.oversub_array(), jnp.float32)
+    server_rack = jnp.asarray(topo.server_rack(), jnp.int32)
+    n_racks = len(topo.rack_groups())
+    place_key = jax.random.PRNGKey(cfg.placement_seed)
     server_index = jnp.arange(ns, dtype=jnp.float32)
     valid = trace.get("valid")
     if valid is None:
@@ -150,7 +179,7 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
         return jnp.where(st["phase"] == QUEUED, rem_service, jnp.inf)
 
-    def step(st, _):
+    def step(st, step_i):
         t = st["t"] + cfg.dt
         phase, rem = st["phase"], st["rem"]
 
@@ -172,7 +201,21 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         arrived = (phase == QUEUED) & (trace["arrival"] <= t) & fits
         pick = jnp.argmin(jnp.where(arrived, srsf_key(st), jnp.inf))
         can_pick = arrived[pick]
-        rank_key = netmodel.placement_rank(placement, st["free"], load, server_index)
+        if placement == "random":
+            # fresh uniform server order per step: the gang analogue of the
+            # event backend's per-GPU RAND placement
+            rank_extra = jax.random.uniform(
+                jax.random.fold_in(place_key, step_i), (ns,)
+            )
+        elif placement == "rack_pack":
+            rank_extra = netmodel.rack_pack_rank(
+                st["free"], server_rack, n_racks, cfg.gpus_per_server
+            )
+        else:
+            rank_extra = None
+        rank_key = netmodel.placement_rank(
+            placement, st["free"], load, server_index, rank_extra
+        )
         take, feasible = _place(st["free"], trace["n_gpus"][pick], rank_key)
         admit = can_pick & feasible
         free = st["free"] - jnp.where(admit, take, 0)
@@ -191,11 +234,15 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         # barrier but is still gated must not count toward contention (it
         # would otherwise see itself and deadlock under ada/srsf1).
         active = in_comm & started & (rem > 0)
-        comm_on_server = ((servers > 0) & active[:, None]).astype(jnp.int32).sum(0)  # (ns,)
-        k_per_job = jnp.max(
-            jnp.where(servers > 0, comm_on_server[None, :], 0), axis=1
-        )
-        k_per_job = jnp.maximum(k_per_job, 1)
+        # Which fabric domains each job's ring crosses (static incidence,
+        # branchless): for the NIC-only topology this is exactly the old
+        # per-server membership of spanning jobs.
+        member = (servers > 0).astype(jnp.float32)  # (jobs, ns)
+        loads = netmodel.domain_loads(member, incidence)  # (jobs, n_domains)
+        counts = netmodel.domain_counts(loads, active)  # (n_domains,)
+        # Effective contention for the Eq. (5) rate: per-domain count scaled
+        # by that domain's oversubscription (float; NIC-only => raw count).
+        k_eff = netmodel.domain_k(loads, counts.astype(jnp.float32) * oversub)
 
         # ---- drain compute ---------------------------------------------------
         is_comp = phase == COMPUTE
@@ -208,15 +255,16 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
 
         # ---- comm gating (on jobs in COMM with rem == full, i.e. waiting) ---
         waiting = in_comm & ~started
-        # contention the job would see if it started now
-        k_would = jnp.max(
-            jnp.where(servers > 0, comm_on_server[None, :] + 1, 0), axis=1
-        )
+        # raw contention the job would see if it started now (gating counts
+        # contenders, not link capacity — oversub only reshapes the rate)
+        k_would = netmodel.domain_k(loads, counts, extra=1)
         # Remaining size of the single most-finished overlapping in-flight
         # task ~ min rem of overlapping started jobs (Theorem 2's M_old;
         # conservative when several olds overlap, matching the event
-        # backend's all()-quantified Alg. 2 reading).
-        overlap = (servers @ servers.T) > 0  # (jobs, jobs) share a server
+        # backend's all()-quantified Alg. 2 reading).  Two tasks overlap iff
+        # they load a common contention domain.
+        loads_f = loads.astype(jnp.float32)
+        overlap = (loads_f @ loads_f.T) > 0  # (jobs, jobs) share a domain
         min_old_rem = jnp.where(
             overlap & active[None, :], rem[None, :], jnp.inf
         ).min(axis=1)
@@ -239,10 +287,11 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
             jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
         )
         started = started | start_now
-        # ---- drain comm (started only), at the Eq. 5 rate scaled by the
-        # slowest member server's NIC (per-server heterogeneity) --------------
+        # ---- drain comm (started only), at the Eq. 5 rate evaluated at the
+        # effective (oversub-weighted) contention and scaled by the slowest
+        # member server's NIC (per-server heterogeneity) ----------------------
         scale = netmodel.slowest_member_scale(bw, servers > 0)
-        ratio = scale * netmodel.rate_ratio(k_per_job, cfg.b, cfg.eta)
+        ratio = scale * netmodel.rate_ratio(k_eff, cfg.b, cfg.eta)
         draining = in_comm & started
         rem = jnp.where(draining, rem - cfg.dt * ratio, rem)
         comm_done = draining & (rem <= 0)
@@ -284,7 +333,7 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
 
     def body(carry):
         st, i = carry
-        st, _ = step(st, None)
+        st, _ = step(st, i)
         return (st, i + 1)
 
     final, _ = jax.lax.while_loop(cond, body, (state, jnp.asarray(0)))

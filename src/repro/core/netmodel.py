@@ -47,6 +47,39 @@ def rate(k, b: float, eta: float):
     return 1.0 / (k * b + (k - 1) * eta)
 
 
+def domain_loads(member_mask, incidence):
+    """Which contention domains each task loads, as a boolean
+    ``(..., n_domains)`` array: a task's ring crosses domain d's cut iff it
+    has member servers both inside and outside d (``core/topology.py``'s
+    one load rule, lowered to mask algebra).
+
+    ``member_mask`` is a numeric {0,1} ``(..., n_servers)`` array;
+    ``incidence`` a numeric {0,1} ``(n_domains, n_servers)`` matrix
+    (:meth:`Topology.incidence`).  Works on numpy and jax arrays — two
+    matmuls against static matrices, no branching.  For the NIC-only
+    incidence (identity) this reduces to ``member & spans_multiple``,
+    exactly the paper's per-server rule."""
+    inside = member_mask @ incidence.T
+    outside = member_mask @ (1.0 - incidence).T
+    return (inside > 0) & (outside > 0)
+
+
+def domain_counts(loads, active):
+    """Per-domain count of in-flight tasks: ``loads`` is ``(jobs,
+    n_domains)`` boolean, ``active`` ``(jobs,)`` boolean; returns
+    ``(n_domains,)``."""
+    return (loads & active[..., None]).sum(axis=-2)
+
+
+def domain_k(loads, weighted_counts, extra=0):
+    """Each task's contention level: the max of ``weighted_counts + extra``
+    over the domains the task loads, clamped to >= 1 (a task loading no
+    domain is uncontended).  Pass raw counts for the gating-side k, or
+    ``counts * oversub`` for the Eq. (5) effective k (float)."""
+    k = (loads * (weighted_counts + extra)[..., None, :]).max(axis=-1)
+    return k.clip(1)
+
+
 def server_bandwidth_array(
     server_bandwidth: Sequence[float], n_servers: int
 ) -> np.ndarray:
@@ -160,7 +193,7 @@ def may_start(
 
 #: Gang placement modes of the fluid backend and the event-backend
 #: placement each one mirrors (see docs/scenarios.md parity matrix).
-PLACEMENT_MODES = ("consolidate", "first_fit", "least_loaded")
+PLACEMENT_MODES = ("consolidate", "first_fit", "least_loaded", "random", "rack_pack")
 
 #: Event-backend placement names -> fluid gang analogue.
 FLUID_PLACEMENT_ALIASES = {
@@ -171,12 +204,16 @@ FLUID_PLACEMENT_ALIASES = {
     "first_fit": "first_fit",
     "ls": "least_loaded",
     "least_loaded": "least_loaded",
+    "rand": "random",
+    "random": "random",
+    "lwf_rack": "rack_pack",
+    "rack_pack": "rack_pack",
 }
 
 
 def canonical_placement(name: str) -> str:
-    """Map an event-backend placement name ('lwf', 'ff', 'ls', ...) to the
-    fluid gang placement mode; raises for unsupported ones ('rand')."""
+    """Map an event-backend placement name ('lwf', 'ff', 'ls', 'rand',
+    'lwf_rack', ...) to the fluid gang placement mode."""
     try:
         return FLUID_PLACEMENT_ALIASES[name.lower()]
     except KeyError:
@@ -186,7 +223,24 @@ def canonical_placement(name: str) -> str:
         ) from None
 
 
-def placement_rank(mode: str, free, load, server_index):
+def rack_pack_rank(free, server_rack, n_racks: int, gpus_per_server: int):
+    """Rank key for the ``rack_pack`` gang mode: fill the rack with the most
+    free GPUs first (locality — a job that fits in one rack lands entirely
+    inside it and never crosses the rack uplink), servers within a rack by
+    most-free (the consolidate shape).  Both terms are small bounded
+    integers, so the composite key is exact in float32.
+
+    ``free`` is ``(n_servers,)``; ``server_rack`` the ``(n_servers,)`` rack
+    index of each server (:meth:`Topology.server_rack`)."""
+    one_hot = (server_rack[..., None] == np.arange(n_racks)).astype(
+        free.dtype
+    )  # (n_servers, n_racks); the numpy constant broadcasts under jax too
+    rack_free = (one_hot * free[..., None]).sum(axis=-2)  # (n_racks,)
+    rack_free_per_server = (one_hot * rack_free[..., None, :]).sum(axis=-1)
+    return -(rack_free_per_server * (gpus_per_server + 1) + free)
+
+
+def placement_rank(mode: str, free, load, server_index, rank_extra=None):
     """Primary sort key per server for gang placement — servers are filled
     in ascending key order (stable sort; ties break by server index):
 
@@ -194,7 +248,12 @@ def placement_rank(mode: str, free, load, server_index):
       first, the LWF-1 consolidation shape;
     * ``first_fit``    — server index order, regardless of load;
     * ``least_loaded`` — smallest remaining-service workload first
-      (Algorithm 1's L_S ordering, the LWF/LS shape).
+      (Algorithm 1's L_S ordering, the LWF/LS shape);
+    * ``random``       — caller-supplied random key (``rank_extra``): a
+      uniformly random server order per admission (the gang analogue of
+      the event backend's per-GPU RAND);
+    * ``rack_pack``    — caller-supplied :func:`rack_pack_rank` key
+      (``rank_extra``): emptiest rack first, then consolidate within it.
 
     ``free``/``load``/``server_index`` are ``(n_servers,)`` arrays (numpy
     or jax); ``mode`` is static.
@@ -205,6 +264,10 @@ def placement_rank(mode: str, free, load, server_index):
         return server_index
     if mode == "least_loaded":
         return load
+    if mode in ("random", "rack_pack"):
+        if rank_extra is None:
+            raise ValueError(f"mode {mode!r} needs a caller-supplied rank_extra key")
+        return rank_extra
     raise ValueError(f"unknown placement mode {mode!r}; expected {PLACEMENT_MODES}")
 
 
@@ -213,9 +276,13 @@ __all__ = [
     "PLACEMENT_MODES",
     "PolicySpec",
     "canonical_placement",
+    "domain_counts",
+    "domain_k",
+    "domain_loads",
     "may_start",
     "parse_policy",
     "placement_rank",
+    "rack_pack_rank",
     "rate",
     "rate_ratio",
     "server_bandwidth_array",

@@ -10,6 +10,12 @@ set G(J):
               n  > kappa  ->  sort *servers* by total workload L_S and take
               feasible GPUs server-by-server (consolidation), Alg. 1 lines
               10-21.
+* ``LWF_RACK-k`` — beyond-paper, topology-aware LWF: racks (from
+              ``core/topology.py``) are ordered by total rack workload and
+              filled one at a time, servers within a rack in LWF order, so
+              a job that fits inside a rack never crosses its (possibly
+              oversubscribed) uplink.  Without a topology it degenerates to
+              plain LWF (one rack = the whole cluster).
 
 All functions return a list of GpuIds (len == n) or ``None`` when the job
 cannot be admitted (Alg. 1 line 22 returns the empty set).  They never
@@ -19,9 +25,10 @@ mutate the cluster — the simulator commits via ``Cluster.place``.
 from __future__ import annotations
 
 import random
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.cluster import Cluster, GpuId, GpuState, JobSpec
+from repro.core.topology import Topology
 
 
 def _feasible(cluster: Cluster, job: JobSpec) -> List[GpuState]:
@@ -51,40 +58,71 @@ def place_list_scheduling(cluster: Cluster, job: JobSpec) -> Optional[List[GpuId
 
 
 def place_lwf(cluster: Cluster, job: JobSpec, kappa: int = 1) -> Optional[List[GpuId]]:
-    """Algorithm 1 (LWF-kappa)."""
+    """Algorithm 1 (LWF-kappa): the one-rack special case of
+    :func:`place_lwf_rack` — least-loaded servers first (lines 10-21),
+    global least-workload-first for small jobs (lines 2-9)."""
+    return place_lwf_rack(cluster, job, (tuple(range(cluster.n_servers)),), kappa)
+
+
+def place_lwf_rack(
+    cluster: Cluster,
+    job: JobSpec,
+    racks: Sequence[Sequence[int]],
+    kappa: int = 1,
+) -> Optional[List[GpuId]]:
+    """Rack-locality-aware LWF-kappa: least-loaded *racks* first, then LWF
+    server order within each rack.  Filling a whole rack before touching the
+    next keeps jobs that fit inside one rack off the rack uplink — the
+    placement-side answer to oversubscribed two-tier fabrics."""
     n = job.n_gpus
     if n <= kappa:
-        # Lines 2-9: global least-workload-first (identical to LS).
         return place_list_scheduling(cluster, job)
-    # Lines 10-21: consolidate — least-loaded servers first, then their
-    # feasible GPUs sorted by workload, appended server by server.
-    servers = sorted(
-        range(cluster.n_servers), key=lambda s: (cluster.server_workload(s), s)
+    rack_order = sorted(
+        range(len(racks)),
+        key=lambda r: (sum(cluster.server_workload(s) for s in racks[r]), r),
     )
     ordered: List[GpuState] = []
-    for s in servers:
-        gpus = [
-            g
-            for g in cluster.gpus_of_server(s)
-            if g.mem_free_mb() >= job.model.mem_mb
-        ]
-        gpus.sort(key=lambda g: (g.workload, g.gpu_id))
-        ordered.extend(gpus)
+    for r in rack_order:
+        servers = sorted(racks[r], key=lambda s: (cluster.server_workload(s), s))
+        for s in servers:
+            gpus = [
+                g
+                for g in cluster.gpus_of_server(s)
+                if g.mem_free_mb() >= job.model.mem_mb
+            ]
+            gpus.sort(key=lambda g: (g.workload, g.gpu_id))
+            ordered.extend(gpus)
     if len(ordered) < n:
         return None
     return [g.gpu_id for g in ordered[:n]]
 
 
 class PlacementPolicy:
-    """Callable wrapper so the simulator takes one pluggable object."""
+    """Callable wrapper so the simulator takes one pluggable object.
 
-    def __init__(self, name: str, kappa: int = 1, seed: int = 0) -> None:
+    ``topology`` supplies the rack grouping for ``lwf_rack``; without one,
+    every server shares one rack and ``lwf_rack`` degenerates to ``lwf``.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        kappa: int = 1,
+        seed: int = 0,
+        topology: Optional[Topology] = None,
+    ) -> None:
         name = name.lower()
-        if name not in ("rand", "ff", "ls", "lwf"):
+        if name not in ("rand", "ff", "ls", "lwf", "lwf_rack"):
             raise ValueError(f"unknown placement policy {name!r}")
         self.name = name
         self.kappa = kappa
+        self.topology = topology
         self._rng = random.Random(seed)
+
+    def _racks(self, cluster: Cluster) -> Tuple[Tuple[int, ...], ...]:
+        if self.topology is not None:
+            return self.topology.rack_groups()
+        return (tuple(range(cluster.n_servers)),)
 
     def __call__(self, cluster: Cluster, job: JobSpec) -> Optional[List[GpuId]]:
         if self.name == "rand":
@@ -93,9 +131,13 @@ class PlacementPolicy:
             return place_first_fit(cluster, job)
         if self.name == "ls":
             return place_list_scheduling(cluster, job)
+        if self.name == "lwf_rack":
+            return place_lwf_rack(cluster, job, self._racks(cluster), self.kappa)
         return place_lwf(cluster, job, self.kappa)
 
     def __repr__(self) -> str:
         if self.name == "lwf":
             return f"LWF-{self.kappa}"
+        if self.name == "lwf_rack":
+            return f"LWF_RACK-{self.kappa}"
         return self.name.upper()

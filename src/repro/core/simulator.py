@@ -36,6 +36,7 @@ from repro.core.adadual import (
 from repro.core.cluster import Cluster, GpuId, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.placement import PlacementPolicy
+from repro.core.topology import Topology, nic_topology
 
 _EPS = 1e-9
 
@@ -108,9 +109,10 @@ class CommTask:
     servers: Set[int]
     remaining_bytes: float
     latency_left: float  # the fixed 'a' consumed in wall time before draining
-    #: contention domains this task occupies: the servers themselves
-    #: (NIC-bottleneck model, default) or the ring links between them
-    #: (the paper's "each link between two nodes" wording)
+    #: contention domains this task loads: topology domain indices (the
+    #: fabric cuts its ring crosses — NICs, rack uplinks, ...; see
+    #: core/topology.py) or, under the legacy "link" reading, the ring
+    #: edges themselves (the paper's "each link between two nodes" wording)
     domains: frozenset = frozenset()
 
 
@@ -224,6 +226,7 @@ class ClusterSimulator:
         contention_domain: str = "server",  # server (NIC) | link (ring edges)
         exclusive_gpus: bool = False,  # paper assumption 3 reading
         bandwidth_aware_srsf: bool = False,  # hetero-aware remaining-service
+        topology: Optional[Topology] = None,  # fabric contention domains
     ) -> None:
         self.jobs = {j.job_id: j for j in jobs}
         self.cluster = cluster or Cluster()
@@ -249,6 +252,20 @@ class ClusterSimulator:
         if contention_domain not in ("server", "link"):
             raise ValueError(f"unknown contention domain {contention_domain!r}")
         self.contention_domain = contention_domain
+        # An explicit fabric topology (core/topology.py) supersedes the
+        # contention_domain string; the default NIC-only topology is the
+        # identical computation as "server" (one domain per server, all
+        # oversub 1.0), so behaviour is bit-for-bit unchanged.  The legacy
+        # ring-edge "link" reading keeps its dynamic per-task domains
+        # (topology cuts are static; ring edges depend on the member set).
+        if topology is not None and topology.n_servers != self.cluster.n_servers:
+            raise ValueError(
+                f"topology covers {topology.n_servers} servers, cluster has "
+                f"{self.cluster.n_servers}"
+            )
+        if topology is None and contention_domain == "server":
+            topology = nic_topology(self.cluster.n_servers)
+        self.topology = topology
         self.cluster.exclusive = exclusive_gpus
         # SRSF priority estimate under server_bandwidth heterogeneity: the
         # paper's nominal homogeneous comm time (False, default) or scaled
@@ -288,19 +305,29 @@ class ClusterSimulator:
 
     # -- communication bookkeeping --------------------------------------------
     def _domains_of(self, servers: Set[int]) -> frozenset:
-        if self.contention_domain == "server" or len(servers) < 2:
+        """Contention domains a comm task over ``servers`` loads: the
+        topology cuts its ring crosses (domain indices), or — legacy "link"
+        reading without a topology — the ring edges themselves."""
+        if self.topology is not None:
+            return self.topology.loaded_domains(servers)
+        if len(servers) < 2:
             return frozenset(servers)
         ring = sorted(servers)
         return frozenset(
             (ring[i], ring[(i + 1) % len(ring)]) for i in range(len(ring))
         )
 
-    def _comm_k(self, task: CommTask) -> int:
-        """k of Eq. (5): max concurrent comm tasks over the task's
-        contention domains (servers or ring links)."""
-        k = 1
+    def _comm_k_eff(self, task: CommTask) -> float:
+        """Effective contention for the Eq. (5) *rate*: per-domain count
+        scaled by that domain's oversubscription factor (an uplink with
+        oversub f delivers 1/f of nominal bandwidth, so k tasks crossing it
+        drain like k*f tasks on a NIC).  All-1.0 oversub (the NIC-only
+        topology, and the legacy ring-link reading) reduces to the raw k."""
+        k = 1.0
         for d in task.domains:
             c = sum(1 for t in self._active_comm.values() if d in t.domains)
+            if self.topology is not None:
+                c = c * self.topology.oversub_of(d)
             k = max(k, c)
         return k
 
@@ -313,8 +340,10 @@ class ClusterSimulator:
         if dt <= 0 or not self._active_comm:
             return finished
         # Rates are piecewise constant between events because the active set
-        # only changes at events; use the rate as of the window start.
-        ks = {jid: self._comm_k(t) for jid, t in self._active_comm.items()}
+        # only changes at events (domain loads are a pure function of the
+        # active set); use the rate as of the window start — this stays an
+        # exact piecewise-rate integration under any topology.
+        ks = {jid: self._comm_k_eff(t) for jid, t in self._active_comm.items()}
         for jid, task in list(self._active_comm.items()):
             lat = min(task.latency_left, dt)
             task.latency_left -= lat
@@ -337,7 +366,7 @@ class ClusterSimulator:
             return None
         t_min = math.inf
         for task in self._active_comm.values():
-            k = self._comm_k(task)
+            k = self._comm_k_eff(task)
             rate = self.params.rate(k) * self.params.bandwidth_scale(task.servers)
             t = self._last_comm_update + task.latency_left + task.remaining_bytes / rate
             t_min = min(t_min, t)
@@ -664,13 +693,17 @@ def simulate(
     contention_domain: str = "server",
     exclusive_gpus: bool = False,
     bandwidth_aware_srsf: bool = False,
+    topology: Optional[Topology] = None,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
 
     comm: 'ada' (AdaDUAL), 'srsf1'/'srsf2'/'srsf3', or 'kway2'/'kway3'/'kway4'.
-    placement: 'rand' | 'ff' | 'ls' | 'lwf'.
+    placement: 'rand' | 'ff' | 'ls' | 'lwf' | 'lwf_rack'.
     comm_chunks > 1 enables the beyond-paper chunked/preemptible all-reduce.
     contention_domain: 'server' (NIC bottleneck) or 'link' (paper's wording).
+    topology (core/topology.py) supersedes contention_domain with explicit
+    fabric contention domains (NIC / rack uplink / oversubscribed two-tier)
+    and supplies the rack grouping for the 'lwf_rack' placement.
     bandwidth_aware_srsf scales the SRSF remaining-service estimate by each
     job's slowest member NIC under server_bandwidth heterogeneity (default
     False = the paper-faithful nominal estimate).
@@ -679,7 +712,7 @@ def simulate(
     sim = ClusterSimulator(
         jobs,
         cluster=Cluster(n_servers=n_servers, gpus_per_server=gpus_per_server),
-        placement=PlacementPolicy(placement, kappa=kappa, seed=seed),
+        placement=PlacementPolicy(placement, kappa=kappa, seed=seed, topology=topology),
         comm_policy=policy,
         params=params,
         fuse_fb=fuse_fb,
@@ -688,5 +721,6 @@ def simulate(
         contention_domain=contention_domain,
         exclusive_gpus=exclusive_gpus,
         bandwidth_aware_srsf=bandwidth_aware_srsf,
+        topology=topology,
     )
     return sim.run()

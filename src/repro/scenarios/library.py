@@ -1,6 +1,6 @@
 """The scenario library.
 
-Eight named scenarios (importing this module registers them):
+Ten named scenarios (importing this module registers them):
 
 * ``paper``              — the paper's Section V-A Microsoft-like 160-job trace.
 * ``philly_heavy_tail``  — Philly-derived heavy tails: mostly small jobs plus
@@ -17,6 +17,10 @@ Eight named scenarios (importing this module registers them):
                            leaves a cross-server residue, so concurrent jobs
                            share servers and all-reduces persistently collide
                            even under exclusive (fluid) placement.
+* ``oversub_fabric``     — paper workload on a blocking two-tier fabric with
+                           oversubscribed rack uplinks (``core/topology.py``).
+* ``rack_locality``      — rack-sized jobs behind heavily oversubscribed
+                           uplinks; rack-aware placement avoids the crossings.
 * ``smoke``              — tiny, fully deterministic; for differential and CI
                            tests (seconds on one CPU, no RNG at all).
 
@@ -27,11 +31,13 @@ fixed-seed regression tests in ``tests/test_scenarios.py`` rely on.
 
 from __future__ import annotations
 
+import math
 import random
 from typing import List, Optional, Sequence
 
 from repro.core.cluster import TABLE_III, JobSpec, ModelProfile
 from repro.core.contention import ContentionParams
+from repro.core.topology import two_tier
 from repro.core.trace import paper_trace
 from repro.scenarios.registry import Scenario, register
 
@@ -49,6 +55,8 @@ QUICK_OVERRIDES = {
     "large_job_dominated": dict(n_jobs=14, min_iters=100, max_iters=500),
     "adversarial_allbig": dict(n_jobs=8, base_iters=120),
     "contended_residue": {},
+    "oversub_fabric": dict(n_jobs=32, min_iters=100, max_iters=600),
+    "rack_locality": {},
     "smoke": {},
 }
 
@@ -96,23 +104,47 @@ def paper_scenario(
 
 
 # ---------------------------------------------------------------------------
-# 2. Philly-like heavy tail
+# 2. Philly-like heavy tail — calibrated against published trace statistics
 # ---------------------------------------------------------------------------
 
-PHILLY_GPU_WEIGHTS = ((1, 0.58), (2, 0.12), (4, 0.12), (8, 0.10), (16, 0.05), (32, 0.03))
+#: Published Philly-trace job statistics (Jeon et al., "Analysis of
+#: Large-Scale Multi-Tenant GPU Clusters for DNN Training Workloads",
+#: USENIX ATC 2019; approximate values read off the duration CDF and the
+#: GPU-request distribution).  We calibrate the *shape* of the generator
+#: against the scale-free duration-quantile ratios (median ~13 min,
+#: p90 ~3.8 h, p95 ~12 h) rather than absolute seconds, since every
+#: scenario here is rescaled for simulation budget anyway.  Locked by the
+#: fixed-seed quantile test in tests/test_scenarios.py.
+PHILLY_DURATION_P90_OVER_P50 = 17.5
+PHILLY_DURATION_P95_OVER_P50 = 55.0
+#: Pareto tail index alpha solving the untruncated-Pareto identity
+#: p90/p50 = 5**(1/alpha) for the published ratio (~0.56: much heavier
+#: than the previous hand-picked 1.2 — the real trace's mean is dominated
+#: by the rare day-long jobs).
+PHILLY_PARETO_ALPHA = math.log(5.0) / math.log(PHILLY_DURATION_P90_OVER_P50)
+#: GPU-request mix (same source): single-GPU jobs dominate.
+PHILLY_GPU_WEIGHTS = (
+    (1, 0.80),
+    (2, 0.055),
+    (4, 0.065),
+    (8, 0.06),
+    (16, 0.015),
+    (32, 0.005),
+)
 
 
 @register(
     "philly_heavy_tail",
-    "Philly-derived heavy-tailed job sizes: Pareto iterations, rare huge jobs",
+    "Philly-calibrated heavy tails: Pareto iterations matching the published "
+    "duration-quantile ratios, single-GPU-dominated request mix",
 )
 def philly_heavy_tail(
     seed: int = 0,
     n_jobs: int = 120,
     horizon_s: float = 1200.0,
-    min_iters: int = 300,
-    max_iters: int = 20000,
-    pareto_alpha: float = 1.2,
+    min_iters: int = 100,
+    max_iters: int = 35000,
+    pareto_alpha: float = PHILLY_PARETO_ALPHA,
     n_servers: int = 16,
     gpus_per_server: int = 4,
 ) -> Scenario:
@@ -374,7 +406,100 @@ def contended_residue(
 
 
 # ---------------------------------------------------------------------------
-# 8. Smoke (deterministic, tiny)
+# 8. Oversubscribed two-tier fabric
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "oversub_fabric",
+    "Paper workload on a blocking two-tier fabric: per-server NICs plus "
+    "oversubscribed rack (ToR) uplinks — cross-rack all-reduces drain at the "
+    "oversub-weighted Eq. (5) rate, so topology-blind placement pays",
+)
+def oversub_fabric(
+    seed: int = 0,
+    n_jobs: int = 120,
+    horizon_s: float = 1200.0,
+    min_iters: int = 1000,
+    max_iters: int = 6000,
+    n_servers: int = 16,
+    gpus_per_server: int = 4,
+    servers_per_rack: int = 4,
+    oversub: float = 3.0,
+) -> Scenario:
+    jobs = paper_trace(
+        seed=seed,
+        n_jobs=n_jobs,
+        horizon_s=horizon_s,
+        min_iters=min_iters,
+        max_iters=max_iters,
+    )
+    return Scenario(
+        name="oversub_fabric",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=tuple(jobs),
+        params=ContentionParams(),
+        topology=two_tier(n_servers, servers_per_rack, oversub=oversub),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 9. Rack locality: placement quality decides uplink crossings
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "rack_locality",
+    "Small racks behind heavily oversubscribed uplinks, with a job mix of "
+    "rack-sized multi-server jobs plus fragmenting small jobs: rack-aware "
+    "placement (lwf_rack / rack_pack) keeps the big jobs off the uplinks, "
+    "topology-blind placement splits them across racks",
+)
+def rack_locality(
+    seed: int = 0,
+    n_jobs: int = 24,
+    horizon_s: float = 240.0,
+    min_iters: int = 60,
+    max_iters: int = 300,
+    n_servers: int = 8,
+    gpus_per_server: int = 4,
+    servers_per_rack: int = 2,
+    oversub: float = 6.0,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = []
+    for k in range(n_jobs):
+        if rng.random() < 0.5:
+            # fragmenters: odd-sized small jobs that leave partial servers
+            gpus = rng.choice([1, 2, 3])
+        else:
+            # rack-sized: spans servers but fits inside one 2-server rack
+            # (8 GPUs) when placed with locality in mind
+            gpus = rng.choice([6, 8])
+        jobs.append(
+            JobSpec(
+                job_id=k,
+                arrival=float(int(rng.uniform(0.0, horizon_s))),
+                n_gpus=gpus,
+                iterations=rng.randint(min_iters, max_iters),
+                model=_sample_models(rng),
+            )
+        )
+    return Scenario(
+        name="rack_locality",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        topology=two_tier(n_servers, servers_per_rack, oversub=oversub),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 10. Smoke (deterministic, tiny)
 # ---------------------------------------------------------------------------
 
 

@@ -20,10 +20,11 @@ benchmark.  Both simulation backends — the exact event simulator
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, JobSpec
 from repro.core.contention import ContentionParams
+from repro.core.topology import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +39,10 @@ class Scenario:
     params: ContentionParams
     gpu_mem_mb: float = 16160.0
     description: str = ""
+    #: network fabric (core/topology.py); None = the paper's NIC-only model.
+    #: Both backends consume it: the event simulator via per-task domain
+    #: sets, the fluid simulator via a static incidence matrix.
+    topology: Optional[Topology] = None
 
     def make_cluster(self) -> Cluster:
         """A fresh (mutable) cluster — one per simulation run."""

@@ -65,9 +65,12 @@ def run_scenario_event(
     sim = ClusterSimulator(
         jobs,
         cluster=cluster,
-        placement=PlacementPolicy(placement, kappa=kappa, seed=scenario.seed),
+        placement=PlacementPolicy(
+            placement, kappa=kappa, seed=scenario.seed, topology=scenario.topology
+        ),
         comm_policy=comm_policy_from_name(canonical_comm(comm)),
         params=params,
+        topology=scenario.topology,
         **sim_kw,
     )
     return sim.run()
@@ -80,10 +83,12 @@ def fluid_config(
     dt: float = 0.05,
     max_steps: int = 400_000,
 ):
-    """JaxSimConfig for a scenario: per-server bandwidth passes through
-    verbatim (the fluid backend drains each transfer at its slowest member
-    server — no cluster-mean collapse); event placement names map to their
-    gang analogues (lwf->consolidate, ff->first_fit, ls->least_loaded)."""
+    """JaxSimConfig for a scenario: per-server bandwidth and the fabric
+    topology pass through verbatim (the fluid backend drains each transfer
+    at its slowest member server and at the oversub-weighted per-domain
+    contention); event placement names map to their gang analogues
+    (lwf->consolidate, ff->first_fit, ls->least_loaded, rand->random,
+    lwf_rack->rack_pack)."""
     from repro.core.jaxsim import JaxSimConfig
 
     comm = canonical_comm(comm)
@@ -92,18 +97,23 @@ def fluid_config(
             f"fluid backend supports {FLUID_POLICIES}, got {comm!r}"
         )
     p = scenario.params
+    gang_mode = netmodel.canonical_placement(placement)
     return JaxSimConfig(
         n_servers=scenario.n_servers,
         gpus_per_server=scenario.gpus_per_server,
         dt=dt,
         max_steps=max_steps,
         policy=comm,
-        placement=netmodel.canonical_placement(placement),
+        placement=gang_mode,
         a=p.a,
         b=p.b,
         eta=p.eta,
         dual_threshold=p.dual_threshold,
         server_bandwidth=tuple(p.server_bandwidth),
+        topology=scenario.topology,
+        # the seed is jit-static config: keep it constant unless the
+        # placement actually consumes it, so seed sweeps share one compile
+        placement_seed=scenario.seed if gang_mode == "random" else 0,
     )
 
 

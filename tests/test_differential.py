@@ -12,11 +12,13 @@ Coverage (per the shared ``core/netmodel.py`` layer):
 
 * every fluid-supported gating policy (``FLUID_POLICIES``: ada, srsf1-3,
   kway2/kway3) on the deterministic ``smoke`` scenario, the
-  policy-differentiating ``contended_residue`` scenario, and a downsized
+  policy-differentiating ``contended_residue`` scenario, a downsized
   ``hetero_bandwidth`` cell with true per-server (not cluster-mean)
-  bandwidth;
-* the three gang placement modes vs their event analogues (LWF-1 <= FF on
-  a fragmentation-sensitive workload, on both backends).
+  bandwidth, and a downsized multi-tier ``oversub_fabric`` cell
+  (``core/topology.py`` contention domains on both backends);
+* the gang placement modes vs their event analogues (LWF-1 <= FF on a
+  fragmentation-sensitive workload, RAND on smoke, and rack-aware
+  lwf_rack/rack_pack <= plain LWF on ``rack_locality``, on both backends).
 
 This harness is what caught the fluid gating self-deadlock (a waiting
 all-reduce counted itself as an active transfer and never started under
@@ -43,6 +45,10 @@ RATIO = 2.0
 #: Downsized hetero_bandwidth cell: small enough for tier-1, large enough
 #: that half the servers being 0.4x slow actually shapes the schedule.
 HETERO_KW = dict(seed=1, n_jobs=16, min_iters=60, max_iters=300)
+
+#: Downsized oversub_fabric cell (same sizing): 16-server two-tier fabric,
+#: racks of 4 behind 3x-oversubscribed uplinks.
+OVERSUB_KW = dict(seed=1, n_jobs=16, min_iters=60, max_iters=300)
 
 
 @pytest.fixture(scope="module")
@@ -150,6 +156,85 @@ class TestHeteroBandwidth:
         slow = run_scenario_fluid(hetero, comm="ada", dt=0.05)
         fast = run_scenario_fluid(homog, comm="ada", dt=0.05)
         assert fluid_avg(slow) > fluid_avg(fast)
+
+
+class TestOversubFabric:
+    """Every fluid-supported gating policy on a multi-tier topology: the
+    per-domain contention state (NIC + oversubscribed rack uplinks) must
+    keep the two backends in qualitative agreement."""
+
+    @pytest.fixture(scope="class")
+    def oversub(self):
+        return get_scenario("oversub_fabric", **OVERSUB_KW)
+
+    @pytest.mark.parametrize("comm", FLUID_POLICIES)
+    def test_agrees_with_event(self, oversub, comm):
+        ev = run_scenario_event(oversub, comm=comm)
+        fl = run_scenario_fluid(oversub, comm=comm, dt=0.05)
+        assert len(ev.jct) == oversub.n_jobs
+        assert int(fl["finished"].sum()) == oversub.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_oversub_slows_both_backends(self, oversub):
+        """Same workload without the fabric (NIC-only): the oversubscribed
+        uplinks must not make anything faster — proves the topology reaches
+        the drain loop of each backend, not just the config."""
+        import dataclasses
+
+        flat = dataclasses.replace(oversub, topology=None)
+        assert run_scenario_event(oversub, comm="ada").avg_jct() >= (
+            run_scenario_event(flat, comm="ada").avg_jct() * (1 - 1e-9)
+        )
+        assert fluid_avg(run_scenario_fluid(oversub, comm="ada", dt=0.05)) >= (
+            fluid_avg(run_scenario_fluid(flat, comm="ada", dt=0.05)) * (1 - 1e-9)
+        )
+
+
+class TestRandPlacement:
+    """RAND on the fluid backend (gang-random server order vs the event
+    backend's per-GPU uniform sample) — closes the parity-matrix gap."""
+
+    def test_agrees_with_event_on_smoke(self, smoke):
+        ev = run_scenario_event(smoke, comm="ada", placement="rand")
+        fl = run_scenario_fluid(smoke, comm="ada", placement="rand", dt=DT)
+        assert len(ev.jct) == smoke.n_jobs
+        assert int(fl["finished"].sum()) == smoke.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_deterministic_given_seed(self, smoke):
+        a = run_scenario_fluid(smoke, comm="ada", placement="rand", dt=DT)
+        b = run_scenario_fluid(smoke, comm="ada", placement="rand", dt=DT)
+        np.testing.assert_array_equal(a["jct"], b["jct"])
+
+    def test_every_policy_completes_under_rand(self, smoke):
+        for comm in FLUID_POLICIES:
+            out = run_scenario_fluid(smoke, comm=comm, placement="rand", dt=DT)
+            assert int(out["finished"].sum()) == smoke.n_jobs, comm
+
+
+class TestRackAwarePlacement:
+    """rack_locality: rack-sized jobs behind 6x-oversubscribed uplinks.
+    Rack-aware placement (event lwf_rack / fluid rack_pack) must beat the
+    topology-blind LWF on both backends — the placement-side payoff of the
+    fabric layer."""
+
+    @pytest.fixture(scope="class")
+    def rack(self):
+        return get_scenario("rack_locality", seed=1)
+
+    def test_rack_aware_beats_plain_lwf_event(self, rack):
+        plain = run_scenario_event(rack, comm="ada", placement="lwf")
+        aware = run_scenario_event(rack, comm="ada", placement="lwf_rack")
+        assert len(aware.jct) == rack.n_jobs
+        assert aware.makespan <= plain.makespan * 1.005
+        assert aware.avg_jct() <= plain.avg_jct() * 1.005
+
+    def test_rack_aware_beats_plain_lwf_fluid(self, rack):
+        plain = run_scenario_fluid(rack, comm="ada", placement="lwf", dt=0.05)
+        aware = run_scenario_fluid(rack, comm="ada", placement="lwf_rack", dt=0.05)
+        assert int(aware["finished"].sum()) == rack.n_jobs
+        assert float(aware["makespan"]) <= float(plain["makespan"]) * 1.005
+        assert fluid_avg(aware) <= fluid_avg(plain) * 1.005
 
 
 class TestPlacementModes:

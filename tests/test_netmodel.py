@@ -146,12 +146,22 @@ class TestPlacementRank:
 
     def test_unknown_mode_raises(self):
         with pytest.raises(ValueError, match="unknown placement mode"):
-            netmodel.placement_rank("rand", self.FREE, self.LOAD, self.IDX)
+            netmodel.placement_rank("nope", self.FREE, self.LOAD, self.IDX)
+
+    def test_extra_key_modes_require_rank_extra(self):
+        for mode in ("random", "rack_pack"):
+            with pytest.raises(ValueError, match="rank_extra"):
+                netmodel.placement_rank(mode, self.FREE, self.LOAD, self.IDX)
+        key = np.array([3.0, 0.0, 2.0, 1.0])
+        out = netmodel.placement_rank("random", self.FREE, self.LOAD, self.IDX, key)
+        np.testing.assert_array_equal(out, key)
 
     def test_canonical_placement(self):
         assert netmodel.canonical_placement("lwf") == "consolidate"
         assert netmodel.canonical_placement("FF") == "first_fit"
         assert netmodel.canonical_placement("ls") == "least_loaded"
         assert netmodel.canonical_placement("consolidate") == "consolidate"
+        assert netmodel.canonical_placement("rand") == "random"
+        assert netmodel.canonical_placement("lwf_rack") == "rack_pack"
         with pytest.raises(ValueError, match="fluid backend supports"):
-            netmodel.canonical_placement("rand")
+            netmodel.canonical_placement("nope")

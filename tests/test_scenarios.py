@@ -30,6 +30,8 @@ REGRESSION_SEEDS = {
     "large_job_dominated": 1,
     "adversarial_allbig": 1,
     "contended_residue": 1,
+    "oversub_fabric": 1,
+    "rack_locality": 1,
     "smoke": 0,
 }
 REGRESSION_CELLS = {
@@ -122,6 +124,67 @@ class TestScenarioInvariants:
         fast = run_scenario_event(homog, comm="ada")
         assert slow.avg_jct() >= fast.avg_jct() * (1 - RTOL)
         assert slow.makespan >= fast.makespan * (1 - RTOL)
+
+    def test_topology_scenarios_carry_a_fabric(self):
+        for name in ("oversub_fabric", "rack_locality"):
+            scn = small(name)
+            assert scn.topology is not None
+            assert scn.topology.n_servers == scn.n_servers
+            assert max(d.oversub for d in scn.topology.domains) > 1.0
+            assert len(scn.topology.racks) >= 2
+
+
+class TestPhillyCalibration:
+    """philly_heavy_tail is calibrated against the published Philly-trace
+    statistics (Jeon et al., ATC'19): the scale-free duration-quantile
+    ratios and the single-GPU-dominated request mix.  Fixed seed so any
+    change to the generator's shape parameters trips this lock."""
+
+    def _durations_and_gpus(self, seed):
+        import numpy as np
+
+        scn = get_scenario("philly_heavy_tail", seed=seed, n_jobs=4000)
+        dur = np.asarray([j.iterations * j.model.t_iter_compute for j in scn.jobs])
+        gpus = np.asarray([j.n_gpus for j in scn.jobs])
+        return dur, gpus
+
+    def test_duration_tail_ratios_match_published(self):
+        import numpy as np
+
+        from repro.scenarios.library import (
+            PHILLY_DURATION_P90_OVER_P50,
+            PHILLY_DURATION_P95_OVER_P50,
+        )
+
+        dur, _ = self._durations_and_gpus(seed=7)
+        p50, p90, p95 = np.percentile(dur, [50, 90, 95])
+        assert p90 / p50 == pytest.approx(PHILLY_DURATION_P90_OVER_P50, rel=0.25)
+        assert p95 / p50 == pytest.approx(PHILLY_DURATION_P95_OVER_P50, rel=0.30)
+
+    def test_gpu_request_mix_matches_published(self):
+        import numpy as np
+
+        from repro.scenarios.library import PHILLY_GPU_WEIGHTS
+
+        _, gpus = self._durations_and_gpus(seed=7)
+        weights = dict(PHILLY_GPU_WEIGHTS)
+        assert float(np.mean(gpus == 1)) == pytest.approx(weights[1], abs=0.03)
+        assert float(np.mean(gpus >= 8)) == pytest.approx(
+            weights[8] + weights[16] + weights[32], abs=0.02
+        )
+
+    def test_alpha_solves_the_p90_identity(self):
+        import math
+
+        from repro.scenarios.library import (
+            PHILLY_DURATION_P90_OVER_P50,
+            PHILLY_PARETO_ALPHA,
+        )
+
+        # p90/p50 of a Pareto(alpha) is 5**(1/alpha)
+        assert 5.0 ** (1.0 / PHILLY_PARETO_ALPHA) == pytest.approx(
+            PHILLY_DURATION_P90_OVER_P50, rel=1e-12
+        )
 
 
 class TestPaperOrderings:
