@@ -205,29 +205,37 @@ def bench_chunked(full: bool) -> None:
 # ---------------------------------------------------------------------------
 
 def _scenario_sweep(
-    names, policies, placements, seeds, backend, processes, full, ci=False
+    names, policies, placements, seeds, backend, processes, full, ci=False,
+    kappas=(1,),
 ) -> None:
     from repro.scenarios import QUICK_OVERRIDES, metrics as metrics_mod
     from repro.scenarios import scenario_names, sweep, sweep_ci
 
     if names == ["all"]:
         names = scenario_names()
-    kw = dict(
-        comms=policies,
-        placements=placements,
-        seeds=seeds,
-        backend=backend,
-        per_scenario_overrides={} if full else QUICK_OVERRIDES,
-        processes=processes,
-    )
-    if ci:
-        print(metrics_mod.CellCI.csv_header(), flush=True)
-        for r in sweep_ci(names, **kw):
+    header_done = False
+    for kappa in kappas:
+        kw = dict(
+            comms=policies,
+            placements=placements,
+            kappa=kappa,
+            seeds=seeds,
+            backend=backend,
+            per_scenario_overrides={} if full else QUICK_OVERRIDES,
+            processes=processes,
+        )
+        if ci:
+            if not header_done:
+                print(metrics_mod.CellCI.csv_header(), flush=True)
+                header_done = True
+            for r in sweep_ci(names, **kw):
+                print(r.as_csv_row(), flush=True)
+            continue
+        if not header_done:
+            print(metrics_mod.RunMetrics.csv_header(), flush=True)
+            header_done = True
+        for r in sweep(names, **kw):
             print(r.as_csv_row(), flush=True)
-        return
-    print(metrics_mod.RunMetrics.csv_header(), flush=True)
-    for r in sweep(names, **kw):
-        print(r.as_csv_row(), flush=True)
 
 
 def bench_scenarios(full: bool) -> None:
@@ -337,6 +345,108 @@ def bench_topology(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# WFBP layer-granular communication subsystem (repro.workloads + fusion)
+# ---------------------------------------------------------------------------
+
+
+def bench_wfbp(full: bool) -> None:
+    """The fusion threshold x policy grid on the event backend (the
+    acceptance cell: finite fusion vs 'all' vs 'none' under Ada-SRSF), the
+    model_zoo cell on both backends, and the fluid batched throughput over
+    bucketed traces; key numbers persist to ``BENCH_wfbp.json`` (path
+    override: ``REPRO_BENCH_WFBP_JSON``) for nightly trend tracking."""
+    import dataclasses as _dc
+
+    import numpy as np
+
+    from repro.core.jaxsim import (
+        simulate_traces_batched,
+        stack_traces,
+        trace_from_jobs,
+    )
+    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    from repro.scenarios.sweep import fluid_config, run_scenario_event
+
+    # fusion threshold x policy grid on the regression cell
+    base = get_scenario("fusion_sweep", seed=1,
+                        base_iters=80 if full else 40)
+    grid: Dict[str, Dict[str, float]] = {}
+    for fusion in ("all", "none", 16e6, 32e6, 128e6):
+        tag = fusion if isinstance(fusion, str) else f"{int(fusion/1e6)}MB"
+        scn = _dc.replace(base, fusion=fusion)
+        grid[tag] = {}
+        for comm in ("ada", "srsf1", "srsf2"):
+            t0 = time.time()
+            res = run_scenario_event(scn, comm=comm)
+            dt = (time.time() - t0) * 1e6
+            grid[tag][comm] = res.avg_jct()
+            emit(
+                f"wfbp/fusion={tag}/{comm}",
+                dt,
+                f"avg_jct={res.avg_jct():.2f};makespan={res.makespan:.2f};"
+                f"contended={res.comm_started_contended};finished={len(res.jct)}",
+            )
+    finite_vs_all = grid["all"]["ada"] / grid["32MB"]["ada"]
+    finite_vs_none = grid["none"]["ada"] / grid["32MB"]["ada"]
+    emit("wfbp/finite_vs_all", 0.0, f"speedup={finite_vs_all:.3f}")
+    emit("wfbp/finite_vs_none", 0.0, f"speedup={finite_vs_none:.3f}")
+
+    # model_zoo on the event backend + fluid batched throughput
+    overrides = {} if full else QUICK_OVERRIDES["model_zoo"]
+    seeds = list(range(4))
+    scns = [get_scenario("model_zoo", seed=s, **overrides) for s in seeds]
+    t0 = time.time()
+    ev = run_scenario_event(scns[0], comm="ada")
+    ev_wall = time.time() - t0
+    emit(
+        "wfbp/event_model_zoo",
+        ev_wall * 1e6,
+        f"avg_jct={ev.avg_jct():.1f};finished={len(ev.jct)}",
+    )
+    cfg = fluid_config(scns[0], comm="ada", dt=0.01)
+    batch = stack_traces(
+        [trace_from_jobs(s.job_list(), fusion=s.fusion) for s in scns]
+    )
+    np.asarray(simulate_traces_batched(batch, cfg)["makespan"])  # compile
+    n_rep = 3
+    t0 = time.time()
+    for _ in range(n_rep):
+        out = simulate_traces_batched(batch, cfg)
+        np.asarray(out["makespan"])
+    wall = (time.time() - t0) / n_rep
+    traces_per_sec = len(seeds) / wall
+    jct = np.asarray(out["jct"])
+    fin = np.asarray(out["finished"])
+    fluid_avg = float(np.mean([jct[i][fin[i]].mean() for i in range(len(seeds))]))
+    emit(
+        "wfbp/fluid_batched",
+        wall * 1e6,
+        f"traces_per_sec={traces_per_sec:.2f};avg_jct={fluid_avg:.1f};"
+        f"n_seeds={len(seeds)};buckets={int(batch['bucket_bytes'].shape[-1])}",
+    )
+
+    path = os.environ.get("REPRO_BENCH_WFBP_JSON", "BENCH_wfbp.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "full": full,
+                "fusion_grid_avg_jct": grid,
+                "finite_vs_all_speedup": finite_vs_all,
+                "finite_vs_none_speedup": finite_vs_none,
+                "model_zoo_event_avg_jct": ev.avg_jct(),
+                "model_zoo_event_wall_s": ev_wall,
+                "model_zoo_fluid_avg_jct": fluid_avg,
+                "fluid_traces_per_sec": traces_per_sec,
+                "n_seeds": len(seeds),
+                "n_jobs": scns[0].n_jobs,
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (from the dry-run artifact)
 # ---------------------------------------------------------------------------
 
@@ -373,6 +483,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "chunked": bench_chunked,
     "scenarios": bench_scenarios,
     "topology": bench_topology,
+    "wfbp": bench_wfbp,
     "roofline": bench_roofline,
 }
 
@@ -413,6 +524,15 @@ def main() -> None:
     )
     ap.add_argument("--seeds", nargs="+", type=int, default=[0])
     ap.add_argument(
+        "--kappa",
+        nargs="+",
+        type=int,
+        default=[1],
+        help="LWF consolidation thresholds for --scenario; several values "
+        "run the whole matrix once per kappa (the placement column carries "
+        "the kappa, e.g. LWF_RACK-4)",
+    )
+    ap.add_argument(
         "--ci",
         action="store_true",
         help="with --scenario: aggregate seeds into mean +/- std CellCI rows"
@@ -435,6 +555,7 @@ def main() -> None:
             args.processes,
             args.full,
             ci=args.ci,
+            kappas=args.kappa,
         )
         return
     print("name,us_per_call,derived")

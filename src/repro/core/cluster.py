@@ -25,6 +25,16 @@ class ModelProfile:
     ``t_f``/``t_b`` are seconds per iteration at the listed batch size;
     ``size_bytes`` is the model (gradient message) size; ``mem_mb`` the GPU
     memory footprint used for admission.
+
+    ``layer_grad_bytes``/``layer_t_b`` (beyond-paper, WFBP subsystem)
+    optionally resolve the gradient message and the backward pass to layer
+    granularity, in *backward-ready* order (output layer first — the order
+    gradients materialize during backprop), so the simulators can overlap
+    per-bucket all-reduces with the remaining backward compute
+    (``repro.workloads`` derives them from real model configs).  Empty
+    tuples (the paper's Table III profiles) mean the monolithic
+    iteration-level model.  Invariants when present:
+    ``sum(layer_grad_bytes) == size_bytes`` and ``sum(layer_t_b) == t_b``.
     """
 
     name: str
@@ -33,10 +43,23 @@ class ModelProfile:
     batch_size: int
     t_f: float
     t_b: float
+    layer_grad_bytes: Tuple[float, ...] = ()
+    layer_t_b: Tuple[float, ...] = ()
+
+    def __post_init__(self) -> None:
+        if len(self.layer_grad_bytes) != len(self.layer_t_b):
+            raise ValueError(
+                f"{self.name}: layer_grad_bytes ({len(self.layer_grad_bytes)}) "
+                f"and layer_t_b ({len(self.layer_t_b)}) must align"
+            )
 
     @property
     def t_iter_compute(self) -> float:
         return self.t_f + self.t_b
+
+    @property
+    def has_layers(self) -> bool:
+        return bool(self.layer_grad_bytes)
 
 
 # Paper Table III.

@@ -36,8 +36,17 @@ all documented and tested for *qualitative* agreement:
   set is unchanged, so dt only quantizes *transition* times);
 * at most one queued job is admitted and one gated all-reduce started per
   step (admissions/starts are rare relative to dt, so this rarely binds);
+  bucketed WFBP traces get several gating rounds per step instead — one
+  start per dt would throttle the per-bucket streams artificially;
+* WFBP tensor-fusion buckets (``trace_from_jobs(..., fusion=...)``) drain
+  as a chunked FIFO stream over a static ``[jobs, buckets]`` size matrix,
+  each bucket gated afresh; the event backend's *overlap* of transfers
+  with the remaining backward compute is NOT modeled — the fluid backend
+  charges full compute, then the bucket stream (documented pessimism,
+  bounded by the differential harness);
 * the fixed all-reduce latency ``a`` is folded into the bandwidth term, so
-  a slow server also stretches ``a`` (a ≪ dt, negligible).
+  a slow server also stretches ``a`` (a ≪ dt, negligible; under WFBP it is
+  charged once per bucket, the real cost of finer granularity).
 
 State is a struct-of-arrays over jobs plus per-server occupancy; policies
 are branchless masks parameterized by the shared layer.  Traces may carry
@@ -160,7 +169,24 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     if valid is None:
         valid = jnp.ones((n_jobs,), bool)
 
-    comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free seconds
+    # WFBP tensor-fusion buckets (layer-granular comm subsystem): a static
+    # ``(jobs, B)`` size matrix plus a per-job bucket count.  ``wfbp`` is a
+    # COMPILE-TIME flag: without multi-bucket planes (fusion="all" / legacy
+    # traces, and (jobs, 1) planes) the emitted graph is exactly the
+    # pre-bucket backend's — bit-identical results AND compile
+    # (regression-locked in tests/test_wfbp.py).
+    bucket_bytes = trace.get("bucket_bytes")
+    b_max = 1 if bucket_bytes is None else int(bucket_bytes.shape[-1])
+    wfbp = b_max > 1
+    if wfbp:
+        n_buckets = trace["n_buckets"].astype(jnp.int32)
+        # per-bucket contention-free seconds; the latency `a` is paid per
+        # bucket (the real cost of finer granularity), folded into the drain
+        bucket_t = cfg.a + cfg.b * bucket_bytes  # (jobs, B)
+        bucket_live = jnp.arange(b_max) < n_buckets[:, None]
+        comm_total = jnp.where(bucket_live, bucket_t, 0.0).sum(axis=-1)
+    else:
+        comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free s
 
     state = {
         "phase": jnp.where(valid, QUEUED, DONE).astype(jnp.int32),
@@ -254,39 +280,61 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         iter_done_direct = comp_done & ~spans
 
         # ---- comm gating (on jobs in COMM with rem == full, i.e. waiting) ---
-        waiting = in_comm & ~started
-        # raw contention the job would see if it started now (gating counts
-        # contenders, not link capacity — oversub only reshapes the rate)
-        k_would = netmodel.domain_k(loads, counts, extra=1)
-        # Remaining size of the single most-finished overlapping in-flight
-        # task ~ min rem of overlapping started jobs (Theorem 2's M_old;
-        # conservative when several olds overlap, matching the event
-        # backend's all()-quantified Alg. 2 reading).  Two tasks overlap iff
-        # they load a common contention domain.
-        loads_f = loads.astype(jnp.float32)
-        overlap = (loads_f @ loads_f.T) > 0  # (jobs, jobs) share a domain
-        min_old_rem = jnp.where(
-            overlap & active[None, :], rem[None, :], jnp.inf
-        ).min(axis=1)
-        may_start = netmodel.may_start(
-            k_would,
-            comm_total,  # proportional to M_new — ratio test is unit-free
-            min_old_rem,
-            max_ways=spec.max_ways,
-            threshold_gated=spec.threshold_gated,
-            dual_threshold=cfg.dual_threshold,
-        )
-        start_ok = waiting & may_start
-        # At most one comm start per step, smallest remaining service first —
+        # One start per gating round, smallest remaining service first —
         # mirrors the event sim's sorted re-evaluate-after-each-start loop.
         # Without this, barriers landing on the same step would all start
         # against a contention state that excludes their co-starters,
-        # violating the srsf1/ada caps.
-        pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
-        start_now = (
-            jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
-        )
-        started = started | start_now
+        # violating the srsf1/ada caps.  Each round recomputes the
+        # contention state including the jobs started in earlier rounds.
+        # Monolithic traces keep the single legacy round (bit-exact);
+        # bucketed WFBP traces get several rounds per step, since per-bucket
+        # starts are far more frequent than whole-message starts and one
+        # start per dt would throttle the bucket streams artificially.
+        loads_f = loads.astype(jnp.float32)
+        overlap = (loads_f @ loads_f.T) > 0  # (jobs, jobs) share a domain
+
+        def one_start_round(started_now, active_now=None, counts_now=None):
+            waiting_now = in_comm & ~started_now
+            if active_now is None:  # later rounds: refresh the contention state
+                active_now = in_comm & started_now & (rem > 0)
+                counts_now = netmodel.domain_counts(loads, active_now)
+            # raw contention the job would see if it started now (gating
+            # counts contenders, not link capacity — oversub only reshapes
+            # the rate)
+            k_would = netmodel.domain_k(loads, counts_now, extra=1)
+            # Remaining size of the single most-finished overlapping
+            # in-flight task ~ min rem of overlapping started jobs (Theorem
+            # 2's M_old; conservative when several olds overlap, matching
+            # the event backend's all()-quantified Alg. 2 reading).  Two
+            # tasks overlap iff they load a common contention domain.
+            min_old_rem = jnp.where(
+                overlap & active_now[None, :], rem[None, :], jnp.inf
+            ).min(axis=1)
+            may_start = netmodel.may_start(
+                k_would,
+                # proportional to M_new — the ratio test is unit-free.  For
+                # a waiting WFBP job ``rem`` is the current *bucket's* size
+                # (equal to comm_total while a monolithic job waits), so
+                # gating decides per bucket like the event backend.
+                rem if wfbp else comm_total,
+                min_old_rem,
+                max_ways=spec.max_ways,
+                threshold_gated=spec.threshold_gated,
+                dual_threshold=cfg.dual_threshold,
+            )
+            start_ok = waiting_now & may_start
+            pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
+            start_now = (
+                jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
+            )
+            return started_now | start_now
+
+        # round 1 reuses the contention state already computed for the
+        # drain rates (the exact legacy graph); later WFBP rounds refresh
+        started = one_start_round(started, active, counts)
+        if wfbp:
+            for _ in range(3):
+                started = one_start_round(started)
         # ---- drain comm (started only), at the Eq. 5 rate evaluated at the
         # effective (oversub-weighted) contention and scaled by the slowest
         # member server's NIC (per-server heterogeneity) ----------------------
@@ -297,14 +345,34 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
         comm_done = draining & (rem <= 0)
 
         # ---- iteration bookkeeping ------------------------------------------
-        iter_done = iter_done_direct | comm_done
+        # WFBP bucket stream: a finished bucket with buckets left hands the
+        # next one to gating afresh (started resets — the FIFO comm stream
+        # competes for the fabric per bucket, like the event backend);
+        # only the LAST bucket's completion ends the iteration.  All of
+        # this is gated on the static ``wfbp`` flag, so monolithic traces
+        # compile the exact legacy graph.
+        if wfbp:
+            next_b = st["bucket"] + 1
+            more_buckets = comm_done & (next_b < n_buckets)
+            iter_done = iter_done_direct | (comm_done & ~more_buckets)
+        else:
+            iter_done = iter_done_direct | comm_done
         iters_left = st["iters_left"] - iter_done.astype(jnp.float32)
         job_done = iter_done & (iters_left <= 0)
         next_compute = iter_done & ~job_done
 
         phase = jnp.where(to_comm, COMM, phase)
-        rem = jnp.where(to_comm, comm_total, rem)
-        started = started & ~(to_comm | iter_done)
+        rem = jnp.where(to_comm, bucket_t[:, 0] if wfbp else comm_total, rem)
+        if wfbp:
+            bucket = jnp.where(to_comm, 0, st["bucket"])
+            next_t = jnp.take_along_axis(
+                bucket_t, jnp.clip(next_b, 0, b_max - 1)[:, None], axis=-1
+            )[:, 0]
+            rem = jnp.where(more_buckets, next_t, rem)
+            bucket = jnp.where(more_buckets, next_b, bucket)
+            started = started & ~(to_comm | iter_done | more_buckets)
+        else:
+            started = started & ~(to_comm | iter_done)
         phase = jnp.where(next_compute, COMPUTE, phase)
         rem = jnp.where(next_compute, trace["t_iter"], rem)
         phase = jnp.where(job_done, DONE, phase)
@@ -323,9 +391,13 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
             "n_done": (phase == DONE).sum().astype(jnp.int32),
             "started": started,
         }
+        if wfbp:
+            new_state["bucket"] = bucket
         return new_state, None
 
     state["started"] = jnp.zeros((n_jobs,), bool)
+    if wfbp:
+        state["bucket"] = jnp.zeros((n_jobs,), jnp.int32)
 
     def cond(carry):
         st, i = carry
@@ -367,29 +439,65 @@ def simulate_traces_batched(traces: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     return jax.vmap(lambda tr: _simulate(tr, cfg))(traces)
 
 
-def trace_from_jobs(jobs) -> Dict[str, jnp.ndarray]:
+def trace_from_jobs(jobs, fusion: object = "all") -> Dict[str, jnp.ndarray]:
     """Convert ``JobSpec`` lists (trace generator / scenario engine output)
-    into the struct-of-arrays layout the fluid simulator consumes."""
-    return {
+    into the struct-of-arrays layout the fluid simulator consumes.
+
+    ``fusion`` ('all' | 'none' | a byte threshold) adds the WFBP bucket
+    planes: a static ``(jobs, B)`` ``bucket_bytes`` matrix (zero-padded)
+    plus per-job ``n_buckets``, from ``netmodel.fusion_plan`` over each
+    model's layer data.  Models without layer data (the paper's Table III
+    profiles) stay one monolithic bucket; ``fusion="all"`` omits the
+    planes entirely, which is bit-identical to the legacy trace."""
+    tr = {
         "arrival": jnp.asarray([j.arrival for j in jobs], jnp.float32),
         "iters": jnp.asarray([j.iterations for j in jobs], jnp.float32),
         "t_iter": jnp.asarray([j.model.t_iter_compute for j in jobs], jnp.float32),
         "msg_bytes": jnp.asarray([j.model.size_bytes for j in jobs], jnp.float32),
         "n_gpus": jnp.asarray([j.n_gpus for j in jobs], jnp.int32),
     }
+    thr = netmodel.fusion_threshold(fusion)
+    if thr == float("inf"):
+        return tr
+    plans = []
+    for j in jobs:
+        m = j.model
+        if getattr(m, "has_layers", False):
+            plans.append(netmodel.fusion_plan(m.layer_grad_bytes, m.layer_t_b, thr)[0])
+        else:
+            plans.append((m.size_bytes,))
+    b_max = max(len(p) for p in plans)
+    bb = np.zeros((len(plans), b_max), np.float32)
+    for i, p in enumerate(plans):
+        bb[i, : len(p)] = p
+    tr["bucket_bytes"] = jnp.asarray(bb)
+    tr["n_buckets"] = jnp.asarray([len(p) for p in plans], jnp.int32)
+    return tr
 
 
 def stack_traces(traces: Sequence[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndarray]:
     """Stack per-seed traces into one rectangular batch for
     :func:`simulate_traces_batched`, padding ragged job counts with inert
     jobs masked out by a boolean ``valid`` plane (padded lanes start DONE
-    and are excluded from ``finished``)."""
+    and are excluded from ``finished``).  WFBP bucket planes
+    (``bucket_bytes``/``n_buckets``, see :func:`trace_from_jobs`) are
+    padded along both the job and the bucket axis; lanes missing the
+    planes get monolithic ones when any lane carries them."""
     if not traces:
         raise ValueError("need at least one trace to stack")
     n_max = max(int(tr["arrival"].shape[0]) for tr in traces)
+    has_buckets = any("bucket_bytes" in tr for tr in traces)
+    b_max = max(
+        (int(tr["bucket_bytes"].shape[-1]) for tr in traces if "bucket_bytes" in tr),
+        default=1,
+    )
 
     def pad(x, fill):
         pad_n = n_max - x.shape[0]
+        if x.ndim == 2:  # (jobs, buckets): zero-fill both axes
+            return jnp.pad(
+                x, ((0, pad_n), (0, b_max - x.shape[1])), constant_values=fill
+            )
         return jnp.concatenate([x, jnp.full((pad_n,), fill, x.dtype)])
 
     out: Dict[str, List[jnp.ndarray]] = {}
@@ -397,16 +505,20 @@ def stack_traces(traces: Sequence[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndar
         n = int(tr["arrival"].shape[0])
         lane = dict(tr)
         lane.setdefault("valid", jnp.ones((n,), bool))
+        if has_buckets and "bucket_bytes" not in lane:
+            lane["bucket_bytes"] = lane["msg_bytes"][:, None]
+            lane["n_buckets"] = jnp.ones((n,), jnp.int32)
         fills = {"arrival": 0.0, "iters": 1.0, "t_iter": 1.0,
-                 "msg_bytes": 0.0, "n_gpus": 1, "valid": False}
+                 "msg_bytes": 0.0, "n_gpus": 1, "valid": False,
+                 "bucket_bytes": 0.0, "n_buckets": 1}
         for k, v in lane.items():
             out.setdefault(k, []).append(pad(v, fills[k]))
     return {k: jnp.stack(vs) for k, vs in out.items()}
 
 
-def simulate_jobs(jobs, cfg: JaxSimConfig) -> Dict[str, np.ndarray]:
+def simulate_jobs(jobs, cfg: JaxSimConfig, fusion: object = "all") -> Dict[str, np.ndarray]:
     """One fluid simulation of a fixed job list; numpy outputs."""
-    out = simulate_trace(trace_from_jobs(jobs), cfg)
+    out = simulate_trace(trace_from_jobs(jobs, fusion=fusion), cfg)
     return {
         "jct": np.asarray(out["jct"]),
         "finished": np.asarray(out["finished"]),

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -106,6 +106,90 @@ def slowest_member_scale(bw, member_mask):
     lo = masked.min(axis=-1)
     has_member = member_mask.any(axis=-1)
     return lo * has_member + 1.0 * (1 - has_member)
+
+
+# ---------------------------------------------------------------------------
+# Tensor fusion (wait-free backpropagation, WFBP)
+# ---------------------------------------------------------------------------
+
+#: ``fusion`` accepts ``"all"`` (one bucket = the paper's monolithic
+#: all-reduce, today's behaviour bit-for-bit), ``"none"`` (one bucket per
+#: layer, fully unfused WFBP), or a positive byte threshold (DDP-style
+#: ``bucket_cap``: greedily accumulate layers until the bucket reaches the
+#: threshold).
+FUSION_ALL = "all"
+FUSION_NONE = "none"
+
+
+def fusion_threshold(fusion) -> float:
+    """Normalize a fusion spec to a byte threshold: ``"all"`` -> inf,
+    ``"none"``/0 -> 0.0 (per-layer buckets), a positive number -> itself."""
+    if isinstance(fusion, str):
+        f = fusion.lower()
+        if f == FUSION_ALL:
+            return float("inf")
+        if f == FUSION_NONE:
+            return 0.0
+        raise ValueError(
+            f"unknown fusion spec {fusion!r}; expected 'all', 'none' or bytes"
+        )
+    thr = float(fusion)
+    if thr < 0:
+        raise ValueError(f"fusion threshold must be >= 0, got {fusion}")
+    return thr
+
+
+def fusion_plan(
+    layer_bytes: Sequence[float],
+    layer_t_b: Sequence[float],
+    threshold: float,
+) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+    """Greedy WFBP tensor fusion over layers in *backward-ready* order
+    (output layer first — the order gradients materialize during backprop).
+
+    Layers accumulate into the current bucket until its size reaches
+    ``threshold`` bytes, then the bucket seals (PyTorch-DDP ``bucket_cap``
+    semantics: the threshold is a *lower* bound on a sealed bucket, so
+    every bucket except possibly the last is >= threshold).  Returns
+    ``(bucket_bytes, bucket_t_b)``: per-bucket gradient bytes and the
+    backward-compute segment time that must elapse — beyond the previous
+    bucket's segment — before the bucket is ready to all-reduce.
+    ``threshold=inf`` yields one bucket (``fusion="all"``); ``threshold=0``
+    one bucket per layer (fully unfused).  Sums are preserved exactly:
+    ``sum(bucket_bytes) == sum(layer_bytes)`` and likewise for time.
+    """
+    if len(layer_bytes) != len(layer_t_b):
+        raise ValueError(
+            f"layer_bytes ({len(layer_bytes)}) and layer_t_b "
+            f"({len(layer_t_b)}) must align"
+        )
+    if not layer_bytes:
+        raise ValueError("fusion_plan needs at least one layer")
+    sizes: list = []
+    times: list = []
+    acc_b = acc_t = 0.0
+    for lb, lt in zip(layer_bytes, layer_t_b):
+        acc_b += float(lb)
+        acc_t += float(lt)
+        if acc_b >= threshold:
+            sizes.append(acc_b)
+            times.append(acc_t)
+            acc_b = acc_t = 0.0
+    if acc_b > 0.0 or acc_t > 0.0 or not sizes:
+        sizes.append(acc_b)
+        times.append(acc_t)
+    return tuple(sizes), tuple(times)
+
+
+def plan_for_model(model, fusion) -> Optional[Tuple[Tuple[float, ...], Tuple[float, ...]]]:
+    """The fusion plan of one ``ModelProfile`` under a fusion spec, or
+    ``None`` when the monolithic (legacy iteration-level) path applies:
+    ``fusion="all"``, or a model without per-layer data (the paper's
+    Table III profiles carry none)."""
+    thr = fusion_threshold(fusion)
+    if thr == float("inf") or not getattr(model, "layer_grad_bytes", ()):
+        return None
+    return fusion_plan(model.layer_grad_bytes, model.layer_t_b, thr)
 
 
 # ---------------------------------------------------------------------------
@@ -273,15 +357,20 @@ def placement_rank(mode: str, free, load, server_index, rank_extra=None):
 
 __all__ = [
     "FLUID_PLACEMENT_ALIASES",
+    "FUSION_ALL",
+    "FUSION_NONE",
     "PLACEMENT_MODES",
     "PolicySpec",
     "canonical_placement",
     "domain_counts",
     "domain_k",
     "domain_loads",
+    "fusion_plan",
+    "fusion_threshold",
     "may_start",
     "parse_policy",
     "placement_rank",
+    "plan_for_model",
     "rack_pack_rank",
     "rate",
     "rate_ratio",

@@ -16,7 +16,15 @@ DESIGN.md).  Semantics preserved:
   AdaDUAL — and drains under the Eq. (5) contention model with exact
   piecewise-constant-rate integration;
 * job priority everywhere is SRSF: smallest remaining service
-  ``(remaining iters) x (t_f + t_b + comm) x n_gpus`` first.
+  ``(remaining iters) x (t_f + t_b + comm) x n_gpus`` first;
+* beyond-paper (``fusion=``): wait-free backpropagation with tensor
+  fusion — for models carrying layer data (``repro.workloads``), the
+  backward pass runs in per-bucket segments and each bucket's all-reduce
+  is gated individually (same policy stack, the bucket's bytes, its own
+  topology domain set) on a FIFO per-job comm stream that OVERLAPS the
+  remaining backward compute; only the last bucket blocks the next
+  iteration's forward (the layer-granular DAG in ``core/dag.py``).
+  ``fusion="all"`` is the paper's monolithic model, bit-for-bit.
 """
 
 from __future__ import annotations
@@ -28,6 +36,7 @@ import math
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import dag as dag_mod
+from repro.core import netmodel
 from repro.core.adadual import (
     adadual_should_start,
     kway_adadual_should_start,
@@ -36,7 +45,7 @@ from repro.core.adadual import (
 from repro.core.cluster import Cluster, GpuId, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.placement import PlacementPolicy
-from repro.core.topology import Topology, nic_topology
+from repro.core.topology import RingEdgeTopology, Topology, nic_topology
 
 _EPS = 1e-9
 
@@ -111,9 +120,13 @@ class CommTask:
     latency_left: float  # the fixed 'a' consumed in wall time before draining
     #: contention domains this task loads: topology domain indices (the
     #: fabric cuts its ring crosses — NICs, rack uplinks, ...; see
-    #: core/topology.py) or, under the legacy "link" reading, the ring
-    #: edges themselves (the paper's "each link between two nodes" wording)
+    #: core/topology.py) or, under the legacy "link" reading
+    #: (``RingEdgeTopology``), the directed ring edges themselves (the
+    #: paper's "each link between two nodes" wording)
     domains: frozenset = frozenset()
+    #: WFBP bucket index this transfer carries (-1 = the monolithic
+    #: iteration-level all-reduce)
+    bucket: int = -1
 
 
 @dataclasses.dataclass
@@ -131,16 +144,31 @@ class JobRun:
     #: chunks of the current iteration's all-reduce still to send (beyond-
     #: paper: tensor-fusion-style chunked, hence preemptible, communication)
     comm_chunks_left: int = 0
+    #: WFBP fusion plan ``(bucket_bytes, bucket_t_b)`` from
+    #: ``netmodel.fusion_plan`` — None = the monolithic legacy path (the
+    #: paper's iteration-level all-reduce, bit-for-bit).
+    plan: Optional[Tuple[Tuple[float, ...], Tuple[float, ...]]] = None
+    #: WFBP per-worker backward progress: completed segments (len n_gpus).
+    b_prog: List[int] = dataclasses.field(default_factory=list)
+    #: WFBP comm pipeline: next bucket to hand to the (FIFO) comm stream
+    #: and buckets whose transfer already completed this iteration.
+    next_bucket: int = 0
+    buckets_done: int = 0
     finished_at: Optional[float] = None
 
     @property
     def has_comm(self) -> bool:
         return len(self.servers) > 1
 
+    @property
+    def n_buckets(self) -> int:
+        return len(self.plan[0]) if self.plan is not None else 1
+
     def per_iter_service(
         self, params: ContentionParams, bandwidth_aware: bool = False
     ) -> float:
-        """Per-iteration service time: compute + contention-free comm.
+        """Per-iteration service time: compute + contention-free comm (the
+        per-message latency ``a`` is paid once per WFBP bucket).
 
         ``bandwidth_aware`` (beyond-paper, ROADMAP item) divides the
         per-byte term by the slowest member server's NIC multiplier, so a
@@ -150,7 +178,7 @@ class JobRun:
         t = self.spec.model.t_iter_compute
         if self.has_comm:
             scale = params.bandwidth_scale(self.servers) if bandwidth_aware else 1.0
-            t += params.a + params.b * self.spec.model.size_bytes / scale
+            t += self.n_buckets * params.a + params.b * self.spec.model.size_bytes / scale
         return t
 
     def remaining_service(
@@ -227,6 +255,7 @@ class ClusterSimulator:
         exclusive_gpus: bool = False,  # paper assumption 3 reading
         bandwidth_aware_srsf: bool = False,  # hetero-aware remaining-service
         topology: Optional[Topology] = None,  # fabric contention domains
+        fusion: object = "all",  # WFBP tensor fusion: 'all' | 'none' | bytes
     ) -> None:
         self.jobs = {j.job_id: j for j in jobs}
         self.cluster = cluster or Cluster()
@@ -245,6 +274,21 @@ class ClusterSimulator:
         # communication effectively preemptible.  The per-message latency
         # `a` is charged per chunk (that is the real cost of chunking).
         self.comm_chunks = max(1, comm_chunks)
+        # WFBP tensor fusion (layer-granular communication subsystem):
+        # 'all' = one monolithic all-reduce per iteration (the paper's model
+        # and today's behaviour bit-for-bit); 'none' / a byte threshold =
+        # per-bucket transfers (netmodel.fusion_plan) that overlap the
+        # remaining backward pass, gated per bucket.  Only jobs whose
+        # ModelProfile carries layer data (repro.workloads) are affected;
+        # Table III profiles always run monolithic.
+        self._fusion_threshold = netmodel.fusion_threshold(fusion)
+        self.fusion = fusion
+        if self._fusion_threshold != math.inf and self.comm_chunks > 1:
+            raise ValueError(
+                "comm_chunks and WFBP fusion are mutually exclusive — the "
+                "fusion plan already chunks the all-reduce"
+            )
+        self._plan_cache: Dict[int, Optional[tuple]] = {}
         # "server": the server's NIC is the shared resource (conservative —
         # all flows through one 10GbE port contend).  "link": the paper's
         # wording — contention only between tasks sharing a ring edge
@@ -256,15 +300,20 @@ class ClusterSimulator:
         # contention_domain string; the default NIC-only topology is the
         # identical computation as "server" (one domain per server, all
         # oversub 1.0), so behaviour is bit-for-bit unchanged.  The legacy
-        # ring-edge "link" reading keeps its dynamic per-task domains
-        # (topology cuts are static; ring edges depend on the member set).
+        # ring-edge "link" reading is the dynamic RingEdgeTopology: the same
+        # per-task domains the old inline code produced (regression-locked
+        # in tests/test_chunked_comm.py), expressed as topology domains.
         if topology is not None and topology.n_servers != self.cluster.n_servers:
             raise ValueError(
                 f"topology covers {topology.n_servers} servers, cluster has "
                 f"{self.cluster.n_servers}"
             )
-        if topology is None and contention_domain == "server":
-            topology = nic_topology(self.cluster.n_servers)
+        if topology is None:
+            topology = (
+                nic_topology(self.cluster.n_servers)
+                if contention_domain == "server"
+                else RingEdgeTopology(self.cluster.n_servers)
+            )
         self.topology = topology
         self.cluster.exclusive = exclusive_gpus
         # SRSF priority estimate under server_bandwidth heterogeneity: the
@@ -306,16 +355,10 @@ class ClusterSimulator:
     # -- communication bookkeeping --------------------------------------------
     def _domains_of(self, servers: Set[int]) -> frozenset:
         """Contention domains a comm task over ``servers`` loads: the
-        topology cuts its ring crosses (domain indices), or — legacy "link"
-        reading without a topology — the ring edges themselves."""
-        if self.topology is not None:
-            return self.topology.loaded_domains(servers)
-        if len(servers) < 2:
-            return frozenset(servers)
-        ring = sorted(servers)
-        return frozenset(
-            (ring[i], ring[(i + 1) % len(ring)]) for i in range(len(ring))
-        )
+        topology cuts its ring crosses (domain indices), or — under the
+        legacy "link" reading, now ``RingEdgeTopology`` — the directed ring
+        edges themselves."""
+        return self.topology.loaded_domains(servers)
 
     def _comm_k_eff(self, task: CommTask) -> float:
         """Effective contention for the Eq. (5) *rate*: per-domain count
@@ -326,9 +369,7 @@ class ClusterSimulator:
         k = 1.0
         for d in task.domains:
             c = sum(1 for t in self._active_comm.values() if d in t.domains)
-            if self.topology is not None:
-                c = c * self.topology.oversub_of(d)
-            k = max(k, c)
+            k = max(k, c * self.topology.oversub_of(d))
         return k
 
     def _advance_comm(self, now: float) -> List[int]:
@@ -378,6 +419,37 @@ class ClusterSimulator:
         if t is not None:
             self._push(t, "comm_check", (self._comm_epoch,))
 
+    # -- WFBP fusion plans -------------------------------------------------------
+    def _assign_plan(self, run: JobRun) -> None:
+        """Attach the WFBP fusion plan to a freshly-placed run: per-bucket
+        (bytes, backward-segment seconds) when fusion is finite, the model
+        carries layer data, and the placement actually spans servers —
+        otherwise the monolithic legacy path (plan None)."""
+        if self._fusion_threshold == math.inf or not run.has_comm:
+            return
+        model = run.spec.model
+        if not getattr(model, "has_layers", False):
+            return
+        key = id(model)
+        if key not in self._plan_cache:
+            self._plan_cache[key] = netmodel.fusion_plan(
+                model.layer_grad_bytes, model.layer_t_b, self._fusion_threshold
+            )
+        run.plan = self._plan_cache[key]
+        run.b_prog = [0] * run.spec.n_gpus
+
+    def _maybe_enqueue_bucket(self, run: JobRun) -> None:
+        """Hand the next WFBP bucket to the gating queue once (a) all
+        workers have finished its backward segment and (b) the job's comm
+        stream is free (buckets serialize FIFO, the PyTorch-DDP model)."""
+        jid = run.spec.job_id
+        if run.comm_active or jid in self._waiting_comm:
+            return
+        if run.next_bucket >= run.n_buckets:
+            return
+        if run.next_bucket < min(run.b_prog):
+            self._waiting_comm.append(jid)
+
     # -- placement --------------------------------------------------------------
     def _refresh_workloads(self) -> None:
         """Alg. 3 line 3: recompute every GPU's remaining workload L_g as the
@@ -404,6 +476,7 @@ class ClusterSimulator:
                 continue  # no head-of-line blocking (Alg. 3 loops the queue)
             servers = self.cluster.servers_of(gpu_ids)
             run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
+            self._assign_plan(run)
             workload = run.remaining_service(self.params, self.bandwidth_aware_srsf)
             self.cluster.place(spec, gpu_ids, workload)
             self._runs[jid] = run
@@ -438,8 +511,16 @@ class ClusterSimulator:
                         max_conc,
                         sum(1 for t in self._active_comm.values() if d in t.domains),
                     )
+                # WFBP: the gating decision and the transfer carry the
+                # current *bucket's* bytes, not the whole message.
+                if run.plan is not None:
+                    bucket = run.next_bucket
+                    new_bytes = run.plan[0][bucket]
+                else:
+                    bucket = -1
+                    new_bytes = run.spec.model.size_bytes
                 ok = self.comm_policy.should_start(
-                    run.spec.model.size_bytes,
+                    new_bytes,
                     [t.remaining_bytes for t in olds],
                     max_conc,
                     self.params,
@@ -450,19 +531,28 @@ class ClusterSimulator:
                 self._active_comm[jid] = CommTask(
                     job_id=jid,
                     servers=set(servers),
-                    remaining_bytes=run.spec.model.size_bytes / self.comm_chunks,
+                    remaining_bytes=(
+                        new_bytes
+                        if run.plan is not None
+                        else run.spec.model.size_bytes / self.comm_chunks
+                    ),
                     latency_left=self.params.a,
                     domains=domains,
+                    bucket=bucket,
                 )
-                run.comm_chunks_left -= 1
+                if run.plan is not None:
+                    run.next_bucket += 1
+                else:
+                    run.comm_chunks_left -= 1
                 run.comm_active = True
                 if max_conc > 0:
                     self._comm_contended += 1
                 else:
                     self._comm_clean += 1
                 if self.record_trace:
+                    kind = "c" if bucket < 0 else f"c{bucket}"
                     self._trace.append(
-                        (jid, run.iter_done, "c", -1, now, None)
+                        (jid, run.iter_done, kind, -1, now, None)
                     )
                 started_any = True
                 any_started = True
@@ -475,6 +565,10 @@ class ClusterSimulator:
         run.b_done.clear()
         run.comm_ready_at = None
         run.comm_active = False
+        if run.plan is not None:
+            run.b_prog = [0] * run.spec.n_gpus
+            run.next_bucket = 0
+            run.buckets_done = 0
         self._dirty_gpus.update(run.gpus)
 
     def _complete_iteration(self, run: JobRun, now: float) -> None:
@@ -507,25 +601,36 @@ class ClusterSimulator:
 
     # -- GPU scheduling (Alg. 3 lines 22-30) -------------------------------------
     def _ready_compute_tasks(self, gid: GpuId):
-        """Yield (job_id, worker, kind, duration) ready on this GPU."""
+        """Yield (job_id, worker, kind, duration, segment) ready on this
+        GPU; segment is the WFBP backward-segment index (-1 = monolithic)."""
         g = self.cluster.gpus[gid]
         for jid in g.resident_jobs:
             run = self._runs.get(jid)
             if run is None or run.finished_at is not None:
                 continue
-            if run.comm_ready_at is not None or run.comm_active:
-                continue  # between barrier and next iteration
             try:
                 w = run.gpus.index(gid)
             except ValueError:
                 continue
+            if run.plan is not None:
+                # WFBP: backward runs in per-bucket segments that overlap
+                # in-flight transfers — comm never blocks compute within
+                # the iteration (only the iteration boundary barriers).
+                if w not in run.f_done:
+                    yield (jid, w, "f", run.spec.model.t_f, -1)
+                elif run.b_prog[w] < run.n_buckets:
+                    s = run.b_prog[w]
+                    yield (jid, w, "b", run.plan[1][s], s)
+                continue
+            if run.comm_ready_at is not None or run.comm_active:
+                continue  # between barrier and next iteration
             if w not in run.f_done:
                 if self.fuse_fb:
-                    yield (jid, w, "fb", run.spec.model.t_iter_compute)
+                    yield (jid, w, "fb", run.spec.model.t_iter_compute, -1)
                 else:
-                    yield (jid, w, "f", run.spec.model.t_f)
+                    yield (jid, w, "f", run.spec.model.t_f, -1)
             elif w not in run.b_done:
-                yield (jid, w, "b", run.spec.model.t_b)
+                yield (jid, w, "b", run.spec.model.t_b, -1)
 
     def _schedule_gpus(self, now: float) -> None:
         for gid in list(self._dirty_gpus):
@@ -543,18 +648,19 @@ class ClusterSimulator:
                 continue
             # SRSF among resident jobs' ready tasks.
             candidates.sort(key=lambda c: self._srsf_key_running(c[0]))
-            jid, w, kind, dur = candidates[0]
+            jid, w, kind, dur, seg = candidates[0]
             g.busy_until = now + dur
             g.busy_job = jid
             g.busy_accum += dur
-            self._push(now + dur, "gpu_done", (gid, jid, w, kind))
+            self._push(now + dur, "gpu_done", (gid, jid, w, kind, seg))
             if self.record_trace:
                 if kind == "fb":
                     run = self._runs[jid]
                     self._trace.append((jid, run.iter_done, "f", w, now, now + run.spec.model.t_f))
                     self._trace.append((jid, run.iter_done, "b", w, now + run.spec.model.t_f, now + dur))
                 else:
-                    self._trace.append((jid, self._runs[jid].iter_done, kind, w, now, now + dur))
+                    tkind = kind if seg < 0 else f"{kind}{seg}"
+                    self._trace.append((jid, self._runs[jid].iter_done, tkind, w, now, now + dur))
 
     # -- main loop ----------------------------------------------------------------
     def run(self, max_time: float = math.inf) -> SimResult:
@@ -577,13 +683,23 @@ class ClusterSimulator:
                 run.comm_active = False
                 comm_state_changed = True
                 if self.record_trace:
-                    # patch the open comm record
+                    # patch the open comm record ("c" or a WFBP "c<bucket>")
                     for i in range(len(self._trace) - 1, -1, -1):
                         r = self._trace[i]
-                        if r[0] == jid and r[2] == "c" and r[5] is None:
+                        if r[0] == jid and r[2].startswith("c") and r[5] is None:
                             self._trace[i] = (r[0], r[1], r[2], r[3], r[4], now)
                             break
-                if run.comm_chunks_left > 0:
+                if run.plan is not None:
+                    # WFBP: bucket done; the iteration completes with the
+                    # LAST bucket's transfer (earlier ones only overlapped
+                    # the remaining backward), else hand the next ready
+                    # bucket to the FIFO comm stream.
+                    run.buckets_done += 1
+                    if run.buckets_done >= run.n_buckets:
+                        self._complete_iteration(run, now)
+                    else:
+                        self._maybe_enqueue_bucket(run)
+                elif run.comm_chunks_left > 0:
                     # chunked comm: re-queue the next chunk (it competes for
                     # the link like a fresh task — preemption point)
                     self._waiting_comm.append(jid)
@@ -594,13 +710,19 @@ class ClusterSimulator:
                 self._queue.append(data[0])
                 self._try_place(now)
             elif kind == "gpu_done":
-                gid, jid, w, tkind = data
+                gid, jid, w, tkind, seg = data
                 g = self.cluster.gpus[gid]
                 g.busy_until = None
                 g.busy_job = None
                 self._dirty_gpus.add(gid)
                 run = self._runs[jid]
-                if tkind == "fb":
+                if run.plan is not None:
+                    if tkind == "f":
+                        run.f_done.add(w)
+                    else:  # backward segment `seg` of worker w
+                        run.b_prog[w] += 1
+                        self._maybe_enqueue_bucket(run)
+                elif tkind == "fb":
                     run.f_done.add(w)
                     run.b_done.add(w)
                     self._on_backward_done(run, now)
@@ -694,6 +816,8 @@ def simulate(
     exclusive_gpus: bool = False,
     bandwidth_aware_srsf: bool = False,
     topology: Optional[Topology] = None,
+    fusion: object = "all",
+    gpu_mem_mb: float = 16160.0,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
 
@@ -707,11 +831,19 @@ def simulate(
     bandwidth_aware_srsf scales the SRSF remaining-service estimate by each
     job's slowest member NIC under server_bandwidth heterogeneity (default
     False = the paper-faithful nominal estimate).
+    fusion ('all' | 'none' | a byte threshold) enables the WFBP
+    layer-granular communication subsystem for jobs whose model carries
+    layer data (repro.workloads); 'all' is the paper's monolithic
+    iteration-level all-reduce, bit-for-bit.
     """
     policy = comm_policy_from_name(comm)
     sim = ClusterSimulator(
         jobs,
-        cluster=Cluster(n_servers=n_servers, gpus_per_server=gpus_per_server),
+        cluster=Cluster(
+            n_servers=n_servers,
+            gpus_per_server=gpus_per_server,
+            gpu_mem_mb=gpu_mem_mb,
+        ),
         placement=PlacementPolicy(placement, kappa=kappa, seed=seed, topology=topology),
         comm_policy=policy,
         params=params,
@@ -722,5 +854,6 @@ def simulate(
         exclusive_gpus=exclusive_gpus,
         bandwidth_aware_srsf=bandwidth_aware_srsf,
         topology=topology,
+        fusion=fusion,
     )
     return sim.run()

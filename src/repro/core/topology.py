@@ -153,6 +153,66 @@ class Topology:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class RingEdgeTopology(Topology):
+    """The legacy ``contention_domain="link"`` reading — the paper's "each
+    link between two nodes" wording — expressed as *dynamic* topology
+    domains (closes the PR 3 ROADMAP leftover).
+
+    A comm task over member-server set ``S`` loads the edges of the ring
+    over ``sorted(S)``; two tasks contend iff they share a ring edge, so
+    transfers over disjoint edge sets proceed in parallel even when they
+    touch a common server.  Unlike the static fabric cuts above, the
+    domains depend on the member set itself (the ring over {0,1,2} uses
+    edge (0,2), the ring over {0,2,5} uses (0,5)), so there is no static
+    incidence matrix: :meth:`incidence` raises, and the fluid backend
+    cannot lower this reading (documented in the parity matrix).  Domains
+    are ``("edge", u, v)`` tuples at unit oversubscription.
+    """
+
+    def __init__(self, n_servers: int) -> None:
+        # bypass Topology's tuple-of-domains plumbing: domains are dynamic
+        object.__setattr__(self, "name", "ring_edges")
+        object.__setattr__(self, "n_servers", n_servers)
+        object.__setattr__(self, "domains", ())
+        object.__setattr__(self, "racks", ())
+        Topology.__post_init__(self)
+
+    @staticmethod
+    def ring_edges(servers: Iterable[int]) -> frozenset:
+        """The *directed* ring edges of a member-server set: consecutive
+        pairs of the sorted ring, wrap-around included — exactly the edge
+        set the event simulator used inline before this class existed.
+        Direction matters: a ring all-reduce sends one way around the ring,
+        so opposite directions of a full-duplex link are distinct domains
+        (a 2-server ring loads both)."""
+        ring = sorted(set(servers))
+        return frozenset(
+            ("edge", ring[i], ring[(i + 1) % len(ring)])
+            for i in range(len(ring))
+        )
+
+    def loaded_domains(self, servers: Iterable[int]) -> frozenset:
+        s = {x for x in servers if not 0 <= x < self.n_servers}
+        if s:
+            raise ValueError(f"servers {sorted(s)} outside [0, {self.n_servers})")
+        members = set(servers)
+        if len(members) < 2:
+            return frozenset()  # single-server task: no shared link loaded
+        return self.ring_edges(members)
+
+    def oversub_of(self, domain) -> float:
+        return 1.0  # every ring edge is a full-bandwidth link
+
+    def incidence(self) -> np.ndarray:
+        raise NotImplementedError(
+            "ring-edge domains depend on each task's member set; there is no "
+            "static [domains, servers] incidence matrix — the fluid backend "
+            "does not support the legacy 'link' reading (use uplink_only/"
+            "two_tier fabrics instead)"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Constructors
 # ---------------------------------------------------------------------------
@@ -224,6 +284,7 @@ def uplink_only(
 
 __all__ = [
     "Domain",
+    "RingEdgeTopology",
     "Topology",
     "nic_topology",
     "two_tier",

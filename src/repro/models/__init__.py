@@ -1,6 +1,19 @@
-"""Model substrate: configs, layers, and family-dispatched LMs."""
+"""Model substrate: configs, layers, and family-dispatched LMs.
+
+``LM``/``RunFlags`` resolve lazily (PEP 562): importing the analytic
+config layer (``repro.models.config``, pure dataclasses — consumed by the
+jax-free event-simulator path via ``repro.workloads``) must not pull in
+the jax-backed layer modules.
+"""
 
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
-from repro.models.lm import LM, RunFlags
 
 __all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "LM", "RunFlags"]
+
+
+def __getattr__(name):
+    if name in ("LM", "RunFlags"):
+        from repro.models import lm
+
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

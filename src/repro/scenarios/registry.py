@@ -43,6 +43,14 @@ class Scenario:
     #: Both backends consume it: the event simulator via per-task domain
     #: sets, the fluid simulator via a static incidence matrix.
     topology: Optional[Topology] = None
+    #: WFBP tensor fusion ('all' | 'none' | a byte threshold): how each
+    #: job's gradient exchange is bucketed (netmodel.fusion_plan) for
+    #: models that carry layer data (repro.workloads).  'all' = the
+    #: paper's monolithic iteration-level all-reduce, bit-for-bit.  Both
+    #: backends consume it: the event simulator overlaps per-bucket
+    #: transfers with the remaining backward pass, the fluid simulator
+    #: drains the static (jobs, buckets) size matrix per bucket.
+    fusion: object = "all"
 
     def make_cluster(self) -> Cluster:
         """A fresh (mutable) cluster — one per simulation run."""

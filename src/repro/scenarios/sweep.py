@@ -62,6 +62,7 @@ def run_scenario_event(
 ) -> SimResult:
     """Exact event-driven simulation of one scenario instance."""
     cluster, jobs, params = scenario.build()
+    sim_kw.setdefault("fusion", scenario.fusion)
     sim = ClusterSimulator(
         jobs,
         cluster=cluster,
@@ -124,13 +125,15 @@ def run_scenario_fluid(
     dt: float = 0.05,
     max_steps: int = 400_000,
 ) -> Dict[str, object]:
-    """Fluid (vectorized JAX) simulation of one scenario instance."""
+    """Fluid (vectorized JAX) simulation of one scenario instance (the
+    scenario's WFBP ``fusion`` spec shapes the bucket planes of the
+    trace — ``"all"`` leaves the legacy trace untouched, bit-for-bit)."""
     from repro.core.jaxsim import simulate_jobs
 
     cfg = fluid_config(
         scenario, comm=comm, placement=placement, dt=dt, max_steps=max_steps
     )
-    return simulate_jobs(scenario.job_list(), cfg)
+    return simulate_jobs(scenario.job_list(), cfg, fusion=scenario.fusion)
 
 
 def _dedupe_fluid_placements(placements: Sequence[str]) -> Tuple[str, ...]:
@@ -283,7 +286,9 @@ def monte_carlo_fluid(
         scns[0], comm=comm, placement=placement, dt=dt, max_steps=max_steps
     )
     t0 = time.time()
-    batch = stack_traces([trace_from_jobs(s.job_list()) for s in scns])
+    batch = stack_traces(
+        [trace_from_jobs(s.job_list(), fusion=s.fusion) for s in scns]
+    )
     out = simulate_traces_batched(batch, cfg)
     jct = np.asarray(out["jct"])
     fin = np.asarray(out["finished"])

@@ -1,0 +1,33 @@
+"""Model-derived workload profiles for the scheduling half of the repo.
+
+``repro.workloads`` turns the real architecture configs under
+``src/repro/configs/`` into layer-granular scheduling profiles
+(per-layer gradient bytes + roofline compute times) that the WFBP
+communication subsystem consumes — see ``profiles.py``.
+"""
+
+from repro.workloads.profiles import (
+    GRAD_BYTES_PER_PARAM,
+    LayerProfile,
+    MFU,
+    RESIDENT_BYTES_PER_PARAM,
+    TOKENS_PER_GPU,
+    ZOO_ARCHS,
+    ZOO_GPU_MEM_MB,
+    derive_layer_profiles,
+    model_profile_from_config,
+    zoo_profiles,
+)
+
+__all__ = [
+    "GRAD_BYTES_PER_PARAM",
+    "LayerProfile",
+    "MFU",
+    "RESIDENT_BYTES_PER_PARAM",
+    "TOKENS_PER_GPU",
+    "ZOO_ARCHS",
+    "ZOO_GPU_MEM_MB",
+    "derive_layer_profiles",
+    "model_profile_from_config",
+    "zoo_profiles",
+]

@@ -18,7 +18,11 @@ Coverage (per the shared ``core/netmodel.py`` layer):
   (``core/topology.py`` contention domains on both backends);
 * the gang placement modes vs their event analogues (LWF-1 <= FF on a
   fragmentation-sensitive workload, RAND on smoke, and rack-aware
-  lwf_rack/rack_pack <= plain LWF on ``rack_locality``, on both backends).
+  lwf_rack/rack_pack <= plain LWF on ``rack_locality``, on both backends);
+* the WFBP layer-granular cells: config-derived ``model_zoo`` profiles
+  with finite tensor fusion and the ``fusion_sweep`` regression cell
+  (per-bucket gating on the event side vs the static [jobs, buckets]
+  chunked drain on the fluid side).
 
 This harness is what caught the fluid gating self-deadlock (a waiting
 all-reduce counted itself as an active transfer and never started under
@@ -292,6 +296,45 @@ class TestPlacementModes:
         ev_ff = run_scenario_event(scn, comm="ada", placement="ff").makespan
         assert fl_lwf < fl_ff, (fl_lwf, fl_ff)
         assert ev_lwf < ev_ff, (ev_lwf, ev_ff)
+
+
+class TestModelZoo:
+    """The config-derived model zoo (repro.workloads) with WFBP tensor
+    fusion, event-vs-fluid: layer-granular profiles, per-bucket gating and
+    the static [jobs, buckets] fluid drain must keep the backends in
+    qualitative agreement (smoke-sized for tier-1 budget)."""
+
+    ZOO_KW = dict(seed=1, n_jobs=8, min_iters=10, max_iters=40, horizon_s=300.0)
+
+    @pytest.fixture(scope="class")
+    def zoo(self):
+        return get_scenario("model_zoo", **self.ZOO_KW)
+
+    @pytest.mark.parametrize("comm", ["ada", "srsf2"])
+    def test_agrees_with_event(self, zoo, comm):
+        ev = run_scenario_event(zoo, comm=comm)
+        fl = run_scenario_fluid(zoo, comm=comm, dt=0.01)
+        assert len(ev.jct) == zoo.n_jobs
+        assert int(fl["finished"].sum()) == zoo.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_fusion_sweep_cell_agrees(self):
+        from repro.scenarios import QUICK_OVERRIDES
+
+        scn = get_scenario("fusion_sweep", seed=1, **QUICK_OVERRIDES["fusion_sweep"])
+        ev = run_scenario_event(scn, comm="ada")
+        fl = run_scenario_fluid(scn, comm="ada", dt=0.005)
+        assert len(ev.jct) == scn.n_jobs
+        assert int(fl["finished"].sum()) == scn.n_jobs
+        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+
+    def test_fluid_deterministic_with_buckets(self):
+        from repro.scenarios import QUICK_OVERRIDES
+
+        scn = get_scenario("fusion_sweep", seed=1, **QUICK_OVERRIDES["fusion_sweep"])
+        a = run_scenario_fluid(scn, comm="ada", dt=0.01)
+        b = run_scenario_fluid(scn, comm="ada", dt=0.01)
+        np.testing.assert_array_equal(a["jct"], b["jct"])
 
 
 class TestNoCommLimit:
