@@ -206,13 +206,18 @@ def bench_chunked(full: bool) -> None:
 
 def _scenario_sweep(
     names, policies, placements, seeds, backend, processes, full, ci=False,
-    kappas=(1,),
+    kappas=(1,), sched=None, bw_aware_srsf=False,
 ) -> None:
     from repro.scenarios import QUICK_OVERRIDES, metrics as metrics_mod
     from repro.scenarios import scenario_names, sweep, sweep_ci
 
     if names == ["all"]:
         names = scenario_names()
+    sim_kw = {}
+    if sched is not None:
+        sim_kw["sched"] = sched
+    if bw_aware_srsf:
+        sim_kw["bandwidth_aware_srsf"] = True
     header_done = False
     for kappa in kappas:
         kw = dict(
@@ -223,6 +228,7 @@ def _scenario_sweep(
             backend=backend,
             per_scenario_overrides={} if full else QUICK_OVERRIDES,
             processes=processes,
+            sim_kw=sim_kw or None,
         )
         if ci:
             if not header_done:
@@ -447,6 +453,96 @@ def bench_wfbp(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Engine/policy split: events/sec + preemptive-vs-static avg JCT
+# ---------------------------------------------------------------------------
+
+#: Events/sec of the pre-refactor monolithic ClusterSimulator, measured at
+#: the last pre-split commit (PR 4 HEAD) on the quick paper cell (seed 0,
+#: n_jobs=40, iters 100-600, comm=ada, lwf, fuse_fb on, single CPU) — the
+#: same cell bench_engine times below.  Absolute events/sec is
+#: machine-dependent; the nightly artifact tracks the *trend* of the
+#: refactored engine and this constant anchors the refactor-time ratio
+#: (also recorded in tests/data/engine_regression_baseline.json).
+PRE_REFACTOR_EVENTS_PER_SEC = 41984.0
+
+
+def bench_engine(full: bool) -> None:
+    """Throughput of the refactored event engine (events/sec on the quick
+    paper cell, vs the recorded pre-refactor baseline) plus the
+    preemptive-vs-static and elastic-vs-static avg-JCT cells on their
+    regression seeds; persists ``BENCH_engine.json`` (path override:
+    ``REPRO_BENCH_ENGINE_JSON``) for nightly trend tracking."""
+    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    from repro.scenarios.sweep import run_scenario_event
+
+    overrides = {} if full else QUICK_OVERRIDES["paper"]
+    scn = get_scenario("paper", seed=0, **overrides)
+    run_scenario_event(scn, comm="ada")  # warm caches
+    n_rep = 3
+    t0 = time.time()
+    for _ in range(n_rep):
+        res = run_scenario_event(scn, comm="ada")
+    wall = (time.time() - t0) / n_rep
+    eps = res.events_processed / wall
+    emit(
+        "engine/events_per_sec",
+        wall * 1e6,
+        f"events_per_sec={eps:.0f};events={res.events_processed};"
+        f"vs_pre_refactor={eps / PRE_REFACTOR_EVENTS_PER_SEC:.3f}",
+    )
+
+    pre_scn = get_scenario("preemption_gain", seed=2)
+    t0 = time.time()
+    static = run_scenario_event(pre_scn, comm="ada")
+    pre = run_scenario_event(pre_scn, comm="ada", sched="preemptive_srsf")
+    pre_wall = time.time() - t0
+    emit(
+        "engine/preemptive_vs_static",
+        pre_wall * 1e6,
+        f"static_avg_jct={static.avg_jct():.2f};"
+        f"preemptive_avg_jct={pre.avg_jct():.2f};"
+        f"speedup={static.avg_jct() / pre.avg_jct():.3f};"
+        f"preemptions={pre.preemptions}",
+    )
+
+    el_scn = get_scenario("elastic_surge", seed=1)
+    el_static = run_scenario_event(el_scn, comm="ada")
+    el = run_scenario_event(el_scn, comm="ada", sched="elastic")
+    emit(
+        "engine/elastic_vs_static",
+        0.0,
+        f"static_avg_jct={el_static.avg_jct():.2f};"
+        f"elastic_avg_jct={el.avg_jct():.2f};"
+        f"speedup={el_static.avg_jct() / el.avg_jct():.3f};resizes={el.resizes}",
+    )
+
+    path = os.environ.get("REPRO_BENCH_ENGINE_JSON", "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "full": full,
+                "events_per_sec": eps,
+                "events_processed": res.events_processed,
+                "pre_refactor_events_per_sec": PRE_REFACTOR_EVENTS_PER_SEC,
+                "vs_pre_refactor": eps / PRE_REFACTOR_EVENTS_PER_SEC,
+                "preemption_gain_seed": 2,
+                "static_avg_jct": static.avg_jct(),
+                "preemptive_avg_jct": pre.avg_jct(),
+                "preemptive_speedup": static.avg_jct() / pre.avg_jct(),
+                "preemptions": pre.preemptions,
+                "elastic_surge_seed": 1,
+                "elastic_static_avg_jct": el_static.avg_jct(),
+                "elastic_avg_jct": el.avg_jct(),
+                "elastic_speedup": el_static.avg_jct() / el.avg_jct(),
+                "resizes": el.resizes,
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (from the dry-run artifact)
 # ---------------------------------------------------------------------------
 
@@ -484,6 +580,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "scenarios": bench_scenarios,
     "topology": bench_topology,
     "wfbp": bench_wfbp,
+    "engine": bench_engine,
     "roofline": bench_roofline,
 }
 
@@ -533,6 +630,20 @@ def main() -> None:
         "the kappa, e.g. LWF_RACK-4)",
     )
     ap.add_argument(
+        "--sched",
+        default=None,
+        choices=["static", "preemptive_srsf", "elastic"],
+        help="job scheduling policy override for --scenario (event backend "
+        "only; default: each scenario's own sched field, normally static)",
+    )
+    ap.add_argument(
+        "--bw-aware-srsf",
+        action="store_true",
+        help="enable the bandwidth-aware SRSF remaining-service estimate "
+        "for --scenario (event backend only; default: paper-faithful "
+        "nominal estimate)",
+    )
+    ap.add_argument(
         "--ci",
         action="store_true",
         help="with --scenario: aggregate seeds into mean +/- std CellCI rows"
@@ -556,6 +667,8 @@ def main() -> None:
             args.full,
             ci=args.ci,
             kappas=args.kappa,
+            sched=args.sched,
+            bw_aware_srsf=args.bw_aware_srsf,
         )
         return
     print("name,us_per_call,derived")

@@ -16,9 +16,17 @@ from repro.core.contention import (
     allreduce_cost_terms,
     fit_linear_cost,
 )
-from repro.core.netmodel import PolicySpec, may_start, parse_policy
+from repro.core.netmodel import PolicySpec, may_start, parse_policy, preemption_cost
 from repro.core.placement import PlacementPolicy
 from repro.core.topology import Domain, Topology, nic_topology, two_tier, uplink_only
+from repro.core.engine import EventEngine
+from repro.core.schedpolicy import (
+    ElasticPolicy,
+    PreemptiveSrsfPolicy,
+    SchedPolicy,
+    StaticGangPolicy,
+    sched_policy_from_name,
+)
 from repro.core.simulator import (
     AdaDual,
     ClusterSimulator,
@@ -48,7 +56,14 @@ __all__ = [
     "PolicySpec",
     "may_start",
     "parse_policy",
+    "preemption_cost",
     "PlacementPolicy",
+    "EventEngine",
+    "ElasticPolicy",
+    "PreemptiveSrsfPolicy",
+    "SchedPolicy",
+    "StaticGangPolicy",
+    "sched_policy_from_name",
     "Domain",
     "Topology",
     "nic_topology",

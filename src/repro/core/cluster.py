@@ -73,13 +73,49 @@ TABLE_III = {
 
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
-    """One DDL training job (Table II: A_k, |G(J_k)|, I_k and the model)."""
+    """One DDL training job (Table II: A_k, |G(J_k)|, I_k and the model).
+
+    ``min_gpus``/``max_gpus`` (beyond-paper, elastic scheduling) optionally
+    declare the job elastic: its total work is fixed in *samples*
+    (``iterations x n_gpus`` per-GPU batches) and an elastic scheduling
+    policy (``core/schedpolicy.ElasticPolicy``) may run it at any world
+    size within the bounds, resizing at iteration boundaries.  ``None``
+    (default) = the paper's rigid gang of exactly ``n_gpus``.
+    """
 
     job_id: int
     arrival: float
     n_gpus: int
     iterations: int
     model: ModelProfile
+    min_gpus: Optional[int] = None
+    max_gpus: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        lo, hi = self.gpu_bounds
+        if not (1 <= lo <= self.n_gpus <= hi):
+            raise ValueError(
+                f"job {self.job_id}: elastic bounds must satisfy "
+                f"1 <= min_gpus <= n_gpus <= max_gpus, got "
+                f"({self.min_gpus}, {self.n_gpus}, {self.max_gpus})"
+            )
+
+    @property
+    def gpu_bounds(self) -> "Tuple[int, int]":
+        """(lo, hi) world-size bounds; unset bounds default to the rigid
+        ``n_gpus`` — the ONE place the defaulting rule lives."""
+        lo = self.min_gpus if self.min_gpus is not None else self.n_gpus
+        hi = self.max_gpus if self.max_gpus is not None else self.n_gpus
+        return lo, hi
+
+    @property
+    def is_elastic(self) -> bool:
+        return self.gpu_bounds != (self.n_gpus, self.n_gpus)
+
+    @property
+    def total_samples(self) -> int:
+        """Total work in per-GPU batches: elastic resizes conserve this."""
+        return self.iterations * self.n_gpus
 
     @property
     def compute_time(self) -> float:

@@ -1,0 +1,1005 @@
+"""Event engine for multi-job DDL cluster simulation (the mechanism half
+of the engine/policy split; paper Algorithm 3 and Section V, exact
+continuous-time variant).
+
+This module owns everything *mechanical*: the event calendar, cluster/GPU
+occupancy, the communication streams (Eq. 5 contention with exact
+piecewise-constant-rate integration, WFBP bucket pipelines, topology
+domain sets), trace recording, and result collection.  Every job-level
+*decision* — admit, place, preempt, resize — is delegated to a
+:class:`~repro.core.schedpolicy.SchedPolicy` through its
+``on_arrival`` / ``on_job_finish`` / ``on_quantum`` hooks; the engine
+exposes a small decision API for them:
+
+* :meth:`EventEngine.place_job`       — commit a gang placement (rebuilds
+  the WFBP fusion plan and topology domain sets for the placed world);
+* :meth:`EventEngine.preempt_job`     — atomically tear a running gang
+  down: cancel its in-flight compute and communication, release memory,
+  carry its *completed* iterations, requeue it (the in-progress iteration
+  is lost; the next placement pays the checkpoint/restore penalty
+  :func:`repro.core.netmodel.preemption_cost`);
+* :meth:`EventEngine.request_resize`  — schedule an elastic world-size
+  change, applied by the engine at the job's next iteration boundary
+  (where no in-iteration work exists to lose).
+
+The default :class:`~repro.core.schedpolicy.StaticGangPolicy` reproduces
+the pre-split monolithic ``ClusterSimulator`` bit-for-bit (no quantum
+events, no preemption, no elasticity — the event stream is untouched);
+``core/simulator.py`` remains the compatibility entry point.
+
+Semantics preserved from the paper (see the original module docstring,
+now in ``core/simulator.py``): online arrivals, SRSF priority everywhere,
+memory admission with GPU time-sharing, pluggable communication gating
+(AdaDUAL / SRSF(n) / k-way) and placement, and the beyond-paper WFBP
+tensor-fusion subsystem.
+
+Progress accounting is in *samples* (per-GPU batches): a job's total work
+is ``iterations x nominal GPUs`` and each completed iteration contributes
+the current world size, so rigid jobs count exactly their ``iterations``
+while elastic resizes conserve total work.  Jobs still running (or still
+queued) when ``run(max_time=...)``'s horizon ends are reported as the
+explicit ``SimResult.censored`` count instead of silently vanishing from
+the JCT statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from repro.core import netmodel
+from repro.core.cluster import Cluster, GpuId, JobSpec
+from repro.core.contention import ContentionParams
+from repro.core.placement import PlacementPolicy
+from repro.core.schedpolicy import (
+    AdaDual,
+    CommPolicy,
+    SchedPolicy,
+    StaticGangPolicy,
+    sched_policy_from_name,
+)
+from repro.core.topology import RingEdgeTopology, Topology, nic_topology
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Runtime state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CommTask:
+    job_id: int
+    servers: Set[int]
+    remaining_bytes: float
+    latency_left: float  # the fixed 'a' consumed in wall time before draining
+    #: contention domains this task loads: topology domain indices (the
+    #: fabric cuts its ring crosses — NICs, rack uplinks, ...; see
+    #: core/topology.py) or, under the legacy "link" reading
+    #: (``RingEdgeTopology``), the directed ring edges themselves (the
+    #: paper's "each link between two nodes" wording)
+    domains: frozenset = frozenset()
+    #: WFBP bucket index this transfer carries (-1 = the monolithic
+    #: iteration-level all-reduce)
+    bucket: int = -1
+
+
+@dataclasses.dataclass
+class JobRun:
+    spec: JobSpec
+    gpus: List[GpuId]
+    servers: Set[int]
+    placed_at: float
+    iter_done: int = 0
+    # Per-worker progress within the current iteration:
+    f_done: Set[int] = dataclasses.field(default_factory=set)
+    b_done: Set[int] = dataclasses.field(default_factory=set)
+    comm_ready_at: Optional[float] = None  # all-reduce ready, not yet started
+    comm_active: bool = False
+    #: chunks of the current iteration's all-reduce still to send (beyond-
+    #: paper: tensor-fusion-style chunked, hence preemptible, communication)
+    comm_chunks_left: int = 0
+    #: WFBP fusion plan ``(bucket_bytes, bucket_t_b)`` from
+    #: ``netmodel.fusion_plan`` — None = the monolithic legacy path (the
+    #: paper's iteration-level all-reduce, bit-for-bit).
+    plan: Optional[Tuple[Tuple[float, ...], Tuple[float, ...]]] = None
+    #: WFBP per-worker backward progress: completed segments (len n_world).
+    b_prog: List[int] = dataclasses.field(default_factory=list)
+    #: WFBP comm pipeline: next bucket to hand to the (FIFO) comm stream
+    #: and buckets whose transfer already completed this iteration.
+    next_bucket: int = 0
+    buckets_done: int = 0
+    finished_at: Optional[float] = None
+    #: Progress in samples (per-GPU batches): total work carried by the
+    #: job (conserved across preemptions and elastic resizes) and the part
+    #: already done.  Each completed iteration contributes ``n_world``.
+    samples_total: int = 0
+    samples_done: int = 0
+    #: Iterations this incarnation will have completed when the remaining
+    #: samples drain at the current world size (None = the rigid
+    #: ``spec.iterations`` — direct-constructed runs in tests).
+    target_iters: Optional[int] = None
+    #: Workers that still owe the checkpoint-restore penalty (charged on
+    #: each worker's first compute task after a preemption/resize).
+    restore_need: Set[int] = dataclasses.field(default_factory=set)
+    restore_cost: float = 0.0
+    #: Elastic world size requested for the next iteration boundary.
+    pending_resize: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.samples_total == 0:
+            self.samples_total = self.spec.total_samples
+
+    @property
+    def n_world(self) -> int:
+        """Current world size (== ``spec.n_gpus`` for rigid jobs)."""
+        return len(self.gpus)
+
+    @property
+    def has_comm(self) -> bool:
+        return len(self.servers) > 1
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.plan[0]) if self.plan is not None else 1
+
+    @property
+    def _target(self) -> int:
+        return (
+            self.target_iters if self.target_iters is not None
+            else self.spec.iterations
+        )
+
+    def per_iter_service(
+        self, params: ContentionParams, bandwidth_aware: bool = False
+    ) -> float:
+        """Per-iteration service time: compute + contention-free comm (the
+        per-message latency ``a`` is paid once per WFBP bucket).
+
+        ``bandwidth_aware`` (beyond-paper, ROADMAP item) divides the
+        per-byte term by the slowest member server's NIC multiplier, so a
+        job placed on degraded links is recognized as having more service
+        left.  Default False = the paper-faithful nominal estimate.
+        """
+        t = self.spec.model.t_iter_compute
+        if self.has_comm:
+            scale = params.bandwidth_scale(self.servers) if bandwidth_aware else 1.0
+            t += self.n_buckets * params.a + params.b * self.spec.model.size_bytes / scale
+        return t
+
+    def remaining_service(
+        self, params: ContentionParams, bandwidth_aware: bool = False
+    ) -> float:
+        """SRSF key: remaining time x allocated GPUs (Tiresias-style)."""
+        rem_iters = self._target - self.iter_done
+        return rem_iters * self.per_iter_service(params, bandwidth_aware) * self.n_world
+
+
+@dataclasses.dataclass(frozen=True)
+class _Carry:
+    """Progress of a preempted/resized job between placements."""
+
+    iter_done: int
+    samples_done: int
+    samples_total: int
+    restore_cost: float
+
+
+def median(xs: Sequence[float]) -> float:
+    """Median (mean of the middle two for even-length lists)."""
+    if not xs:
+        return math.nan
+    ys = sorted(xs)
+    n = len(ys)
+    return ys[n // 2] if n % 2 else 0.5 * (ys[n // 2 - 1] + ys[n // 2])
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile, q in [0, 1] (the convention all JCT
+    reporting in this repo shares)."""
+    if not xs:
+        return math.nan
+    ys = sorted(xs)
+    idx = min(len(ys) - 1, int(math.ceil(q * len(ys))) - 1)
+    return ys[max(0, idx)]
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy_name: str
+    placement_name: str
+    jct: Dict[int, float]  # job_id -> completion - arrival
+    finish: Dict[int, float]
+    makespan: float
+    gpu_busy: Dict[GpuId, float]
+    gpu_util: float  # mean busy fraction over makespan
+    queueing_delay: Dict[int, float]
+    events_processed: int
+    comm_started_contended: int
+    comm_started_clean: int
+    #: name of the job scheduling policy (engine/policy split)
+    sched_name: str = "static"
+    #: jobs with no finish time: cut off by the simulation horizon
+    #: (``run``'s ``max_time``), or stranded because they could never be
+    #: placed (more GPUs/memory than the cluster has).  Excluded from the
+    #: JCT statistics — this count makes the truncation explicit instead
+    #: of silent.  0 whenever every job ran to completion.
+    censored: int = 0
+    #: gang preemptions (checkpoint + requeue) performed by the policy
+    preemptions: int = 0
+    #: elastic world-size changes applied at iteration boundaries
+    resizes: int = 0
+    task_trace: Optional[List[Tuple]] = None  # (job, iter, kind, worker, t0, t1)
+
+    def avg_jct(self) -> float:
+        return sum(self.jct.values()) / len(self.jct)
+
+    def median_jct(self) -> float:
+        return median(list(self.jct.values()))
+
+    def p95_jct(self) -> float:
+        return percentile(list(self.jct.values()), 0.95)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class EventEngine:
+    """Exact event-driven simulation of Algorithm 3's dynamics, with all
+    job-level decisions delegated to a pluggable
+    :class:`~repro.core.schedpolicy.SchedPolicy`."""
+
+    def __init__(
+        self,
+        jobs: Sequence[JobSpec],
+        cluster: Optional[Cluster] = None,
+        placement: Optional[PlacementPolicy] = None,
+        comm_policy: Optional[CommPolicy] = None,
+        params: Optional[ContentionParams] = None,
+        fuse_fb: bool = True,
+        record_trace: bool = False,
+        comm_chunks: int = 1,
+        contention_domain: str = "server",  # server (NIC) | link (ring edges)
+        exclusive_gpus: bool = False,  # paper assumption 3 reading
+        bandwidth_aware_srsf: bool = False,  # hetero-aware remaining-service
+        topology: Optional[Topology] = None,  # fabric contention domains
+        fusion: object = "all",  # WFBP tensor fusion: 'all' | 'none' | bytes
+        sched: Union[SchedPolicy, str, None] = None,  # job scheduling policy
+        preemption_quantum: Optional[float] = None,  # tick for named scheds
+        checkpoint_cost: Optional[float] = None,  # None = netmodel model
+    ) -> None:
+        self.jobs = {j.job_id: j for j in jobs}
+        self.cluster = cluster or Cluster()
+        self.placement = placement or PlacementPolicy("lwf", kappa=1)
+        self.comm_policy = comm_policy or AdaDual()
+        self.params = params or ContentionParams()
+        # Fusing f+b into one GPU occupancy halves event count; a newly
+        # placed higher-priority job can then preempt only at (f+b)
+        # boundaries instead of f|b boundaries (distortion <= t_b ~ 50 ms).
+        # Fidelity tests set fuse_fb=False.
+        self.fuse_fb = fuse_fb and not record_trace
+        self.record_trace = record_trace
+        # Beyond-paper (future-work #3 adjacent): split each all-reduce into
+        # N chunks scheduled independently — a long transfer can lose the
+        # link to a shorter job's message at every chunk boundary, making
+        # communication effectively preemptible.  The per-message latency
+        # `a` is charged per chunk (that is the real cost of chunking).
+        self.comm_chunks = max(1, comm_chunks)
+        # WFBP tensor fusion (layer-granular communication subsystem):
+        # 'all' = one monolithic all-reduce per iteration (the paper's model
+        # and the legacy behaviour bit-for-bit); 'none' / a byte threshold =
+        # per-bucket transfers (netmodel.fusion_plan) that overlap the
+        # remaining backward pass, gated per bucket.  Only jobs whose
+        # ModelProfile carries layer data (repro.workloads) are affected;
+        # Table III profiles always run monolithic.
+        self._fusion_threshold = netmodel.fusion_threshold(fusion)
+        self.fusion = fusion
+        if self._fusion_threshold != math.inf and self.comm_chunks > 1:
+            raise ValueError(
+                "comm_chunks and WFBP fusion are mutually exclusive — the "
+                "fusion plan already chunks the all-reduce"
+            )
+        self._plan_cache: Dict[int, Optional[tuple]] = {}
+        # "server": the server's NIC is the shared resource (conservative —
+        # all flows through one 10GbE port contend).  "link": the paper's
+        # wording — contention only between tasks sharing a ring edge
+        # (server pair), allowing disjoint transfers to proceed in parallel.
+        if contention_domain not in ("server", "link"):
+            raise ValueError(f"unknown contention domain {contention_domain!r}")
+        self.contention_domain = contention_domain
+        # An explicit fabric topology (core/topology.py) supersedes the
+        # contention_domain string; the default NIC-only topology is the
+        # identical computation as "server" (one domain per server, all
+        # oversub 1.0), so behaviour is bit-for-bit unchanged.  The legacy
+        # ring-edge "link" reading is the dynamic RingEdgeTopology: the same
+        # per-task domains the old inline code produced (regression-locked
+        # in tests/test_chunked_comm.py), expressed as topology domains.
+        if topology is not None and topology.n_servers != self.cluster.n_servers:
+            raise ValueError(
+                f"topology covers {topology.n_servers} servers, cluster has "
+                f"{self.cluster.n_servers}"
+            )
+        if topology is None:
+            topology = (
+                nic_topology(self.cluster.n_servers)
+                if contention_domain == "server"
+                else RingEdgeTopology(self.cluster.n_servers)
+            )
+        self.topology = topology
+        self.cluster.exclusive = exclusive_gpus
+        # SRSF priority estimate under server_bandwidth heterogeneity: the
+        # paper's nominal homogeneous comm time (False, default) or scaled
+        # by the slowest member NIC (True) — see JobRun.per_iter_service.
+        self.bandwidth_aware_srsf = bandwidth_aware_srsf
+        # Job scheduling strategy (engine/policy split).  The static
+        # default schedules no quantum events and never preempts/resizes,
+        # so the event stream matches the pre-split simulator exactly.
+        if sched is None:
+            sched = StaticGangPolicy()
+        elif isinstance(sched, str):
+            sched = sched_policy_from_name(sched, quantum=preemption_quantum)
+        self.sched = sched
+        self.checkpoint_cost = checkpoint_cost
+
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self._queue: List[int] = []  # unplaced job ids
+        self._runs: Dict[int, JobRun] = {}
+        self._active_comm: Dict[int, CommTask] = {}
+        #: In-flight transfers per contention domain, maintained
+        #: incrementally on every comm start/finish/abort — the same
+        #: integers the old per-event scans over ``_active_comm``
+        #: produced (bit-exact), without the O(active^2) rescans.
+        self._domain_load: Dict[object, int] = {}
+        self._waiting_comm: List[int] = []  # job ids with gated all-reduce
+        self._comm_epoch = 0
+        self._last_comm_update = 0.0
+        self._dirty_gpus: Set[GpuId] = set()
+        self._events = 0
+        self._comm_contended = 0
+        self._comm_clean = 0
+        self._trace: List[Tuple] = []
+        self._unfinished = set(self.jobs)
+        # Preemption/elasticity mechanism state:
+        self._carry: Dict[int, _Carry] = {}  # progress of requeued jobs
+        self._epoch_of: Dict[int, int] = {}  # run incarnation (tombstones)
+        self._first_placed: Dict[int, float] = {}
+        self._preemptions = 0
+        self._resizes = 0
+        self._comm_dirty = False  # active comm set mutated outside gating
+        self.sched.bind(self)
+
+    # -- policy-facing state views -------------------------------------------
+    @property
+    def queue(self) -> List[int]:
+        """Unplaced job ids, mutated in place by the scheduling policy."""
+        return self._queue
+
+    @property
+    def runs(self) -> Dict[int, JobRun]:
+        """Live job runs (read-only for policies; mutate via the API)."""
+        return self._runs
+
+    # -- event helpers -------------------------------------------------------
+    def _push(self, t: float, kind: str, data: tuple) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    # -- SRSF priority ---------------------------------------------------------
+    def srsf_key_queued(self, job_id: int):
+        """SRSF key of a queued job.  Fresh jobs use the paper's
+        convention (E_J = 0 before placement, Section IV-A); requeued
+        preempted jobs use their carried remaining work in samples."""
+        spec = self.jobs[job_id]
+        carry = self._carry.get(job_id)
+        if carry is None:
+            rem = spec.compute_time * spec.n_gpus
+        else:
+            rem_samples = carry.samples_total - carry.samples_done
+            rem = spec.model.t_iter_compute * rem_samples
+        return (rem, spec.arrival, job_id)
+
+    def srsf_key_running(self, job_id: int):
+        run = self._runs[job_id]
+        rem = run.remaining_service(self.params, self.bandwidth_aware_srsf)
+        return (rem, run.spec.arrival, job_id)
+
+    # backwards-compatible private aliases (pre-split internal names)
+    _srsf_key_queued = srsf_key_queued
+    _srsf_key_running = srsf_key_running
+
+    # -- communication bookkeeping --------------------------------------------
+    def _domains_of(self, servers: Set[int]) -> frozenset:
+        """Contention domains a comm task over ``servers`` loads: the
+        topology cuts its ring crosses (domain indices), or — under the
+        legacy "link" reading, now ``RingEdgeTopology`` — the directed ring
+        edges themselves."""
+        return self.topology.loaded_domains(servers)
+
+    def _comm_started(self, task: CommTask) -> None:
+        for d in task.domains:
+            self._domain_load[d] = self._domain_load.get(d, 0) + 1
+
+    def _comm_ended(self, task: CommTask) -> None:
+        for d in task.domains:
+            left = self._domain_load[d] - 1
+            if left:
+                self._domain_load[d] = left
+            else:
+                del self._domain_load[d]
+
+    def _comm_k_eff(self, task: CommTask) -> float:
+        """Effective contention for the Eq. (5) *rate*: per-domain count
+        scaled by that domain's oversubscription factor (an uplink with
+        oversub f delivers 1/f of nominal bandwidth, so k tasks crossing it
+        drain like k*f tasks on a NIC).  All-1.0 oversub (the NIC-only
+        topology, and the legacy ring-link reading) reduces to the raw k.
+
+        ``_domain_load`` carries exactly the counts the old scans over
+        ``_active_comm`` computed, so the result is bit-identical."""
+        k = 1.0
+        for d in task.domains:
+            k = max(k, self._domain_load.get(d, 0) * self.topology.oversub_of(d))
+        return k
+
+    def _advance_comm(self, now: float) -> List[int]:
+        """Drain all in-flight comm tasks from the last update to ``now``.
+        Returns job ids whose all-reduce completed in this window."""
+        dt = now - self._last_comm_update
+        self._last_comm_update = now
+        finished: List[int] = []
+        if dt <= 0 or not self._active_comm:
+            return finished
+        # Rates are piecewise constant between events because the active set
+        # only changes at events (domain loads are a pure function of the
+        # active set); use the rate as of the window start — this stays an
+        # exact piecewise-rate integration under any topology.
+        ks = {jid: self._comm_k_eff(t) for jid, t in self._active_comm.items()}
+        for jid, task in list(self._active_comm.items()):
+            lat = min(task.latency_left, dt)
+            task.latency_left -= lat
+            drain_t = dt - lat
+            if drain_t > 0:
+                rate = self.params.rate(ks[jid]) * self.params.bandwidth_scale(
+                    task.servers
+                )
+                task.remaining_bytes -= drain_t * rate
+            if task.latency_left <= _EPS and task.remaining_bytes <= 1.0:
+                # tolerance: 1 byte ~ 1e-9 s — absorbs float drift in the
+                # piecewise integration
+                finished.append(jid)
+        for jid in finished:
+            self._comm_ended(self._active_comm[jid])
+            del self._active_comm[jid]
+        return finished
+
+    def _next_comm_finish(self) -> Optional[float]:
+        if not self._active_comm:
+            return None
+        t_min = math.inf
+        for task in self._active_comm.values():
+            k = self._comm_k_eff(task)
+            rate = self.params.rate(k) * self.params.bandwidth_scale(task.servers)
+            t = self._last_comm_update + task.latency_left + task.remaining_bytes / rate
+            t_min = min(t_min, t)
+        return t_min
+
+    def _reschedule_comm_check(self) -> None:
+        self._comm_epoch += 1
+        t = self._next_comm_finish()
+        if t is not None:
+            self._push(t, "comm_check", (self._comm_epoch,))
+
+    # -- WFBP fusion plans -------------------------------------------------------
+    def _assign_plan(self, run: JobRun) -> None:
+        """Attach the WFBP fusion plan to a freshly-placed run: per-bucket
+        (bytes, backward-segment seconds) when fusion is finite, the model
+        carries layer data, and the placement actually spans servers —
+        otherwise the monolithic legacy path (plan None)."""
+        if self._fusion_threshold == math.inf or not run.has_comm:
+            return
+        model = run.spec.model
+        if not getattr(model, "has_layers", False):
+            return
+        key = id(model)
+        if key not in self._plan_cache:
+            self._plan_cache[key] = netmodel.fusion_plan(
+                model.layer_grad_bytes, model.layer_t_b, self._fusion_threshold
+            )
+        run.plan = self._plan_cache[key]
+        run.b_prog = [0] * run.n_world
+
+    def _maybe_enqueue_bucket(self, run: JobRun) -> None:
+        """Hand the next WFBP bucket to the gating queue once (a) all
+        workers have finished its backward segment and (b) the job's comm
+        stream is free (buckets serialize FIFO, the PyTorch-DDP model)."""
+        jid = run.spec.job_id
+        if run.comm_active or jid in self._waiting_comm:
+            return
+        if run.next_bucket >= run.n_buckets:
+            return
+        if run.next_bucket < min(run.b_prog):
+            self._waiting_comm.append(jid)
+
+    # -- the decision API (called by SchedPolicy hooks) ------------------------
+    def refresh_workloads(self) -> None:
+        """Alg. 3 line 3: recompute every GPU's remaining workload L_g as the
+        sum of its resident jobs' remaining service (shared per GPU)."""
+        for g in self.cluster.gpus.values():
+            g.workload = 0.0
+        for jid, run in self._runs.items():
+            if run.finished_at is not None:
+                continue
+            share = run.remaining_service(self.params, self.bandwidth_aware_srsf)
+            for gid in run.gpus:
+                self.cluster.gpus[gid].workload += share
+
+    _refresh_workloads = refresh_workloads  # pre-split internal name
+
+    def place_job(self, job_id: int, gpu_ids: Sequence[GpuId], now: float) -> JobRun:
+        """Commit a gang placement chosen by the scheduling policy.
+
+        Rebuilds everything placement-derived — the member-server set (and
+        hence topology domain sets), the WFBP fusion plan for the placed
+        world size, and the SRSF workload share — and restores carried
+        progress (plus the restore penalty) for requeued jobs."""
+        spec = self.jobs[job_id]
+        servers = self.cluster.servers_of(gpu_ids)
+        run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
+        carry = self._carry.pop(job_id, None)
+        if carry is not None:
+            run.iter_done = carry.iter_done
+            run.samples_done = carry.samples_done
+            run.samples_total = carry.samples_total
+            run.restore_cost = carry.restore_cost
+            run.restore_need = set(range(run.n_world))
+        rem_samples = run.samples_total - run.samples_done
+        run.target_iters = run.iter_done + max(0, -(-rem_samples // run.n_world))
+        self._assign_plan(run)
+        workload = run.remaining_service(self.params, self.bandwidth_aware_srsf)
+        self.cluster.place(spec, gpu_ids, workload)
+        self._runs[job_id] = run
+        self._dirty_gpus.update(gpu_ids)
+        self._first_placed.setdefault(job_id, now)
+        return run
+
+    def _checkpoint_cost_of(self, run: JobRun) -> float:
+        if self.checkpoint_cost is not None:
+            return self.checkpoint_cost
+        return netmodel.preemption_cost(run.spec.model.size_bytes)
+
+    def preempt_job(self, job_id: int, now: float) -> None:
+        """Atomically tear a running gang down and requeue the job.
+
+        The whole gang stops together: every in-flight compute task is
+        cancelled (pending ``gpu_done`` events are tombstoned by epoch),
+        any in-flight or waiting all-reduce is aborted, memory is
+        released.  Progress is carried at the last *completed* iteration —
+        the in-progress iteration is lost, exactly a checkpoint-restart —
+        and the next placement pays the checkpoint/restore penalty."""
+        run = self._runs.pop(job_id)
+        if run.finished_at is not None:
+            raise ValueError(f"cannot preempt finished job {job_id}")
+        self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
+        for gid in run.gpus:
+            g = self.cluster.gpus[gid]
+            if g.busy_job == job_id:
+                if g.busy_until is not None and g.busy_until > now:
+                    g.busy_accum -= g.busy_until - now  # un-accrue lost work
+                g.busy_until = None
+                g.busy_job = None
+            self._dirty_gpus.add(gid)
+        self.cluster.release(run.spec, run.gpus)
+        if job_id in self._waiting_comm:
+            self._waiting_comm.remove(job_id)
+        if job_id in self._active_comm:
+            self._comm_ended(self._active_comm[job_id])
+            del self._active_comm[job_id]
+            self._comm_dirty = True  # rates changed: re-predict comm finish
+        self._carry[job_id] = _Carry(
+            iter_done=run.iter_done,
+            samples_done=run.samples_done,
+            samples_total=run.samples_total,
+            restore_cost=self._checkpoint_cost_of(run),
+        )
+        self._queue.append(job_id)
+        self._preemptions += 1
+        if self.record_trace:
+            # drop the aborted in-progress iteration's records (they will
+            # be re-executed after resume) and mark the preemption point
+            self._trace = [
+                r
+                for r in self._trace
+                if r[2] in ("preempt", "resize")
+                or not (r[0] == job_id and r[1] >= run.iter_done)
+            ]
+            self._trace.append((job_id, run.iter_done, "preempt", -1, now, now))
+
+    def request_resize(self, job_id: int, n_new: int) -> None:
+        """Ask for an elastic world-size change, applied at the job's next
+        iteration boundary (clamped to the job's declared bounds)."""
+        run = self._runs[job_id]
+        lo, hi = run.spec.gpu_bounds
+        n_new = max(lo, min(hi, int(n_new)))
+        run.pending_resize = None if n_new == run.n_world else n_new
+
+    def _apply_resize(self, run: JobRun, now: float) -> None:
+        """Apply a pending resize at an iteration boundary: tear the gang
+        down (nothing in-iteration exists to lose here), re-place at the
+        new size through the normal placement path — rebuilding the WFBP
+        fusion plan and topology domain sets — and charge the
+        checkpoint/restore penalty for the state redistribution."""
+        job_id = run.spec.job_id
+        n_new = run.pending_resize
+        run.pending_resize = None
+        self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
+        self.cluster.release(run.spec, run.gpus)
+        self._dirty_gpus.update(run.gpus)
+        del self._runs[job_id]
+        # re-rank with this gang's workload gone (cluster.release keeps the
+        # per-GPU L_g; the freed GPUs must look free to the placement)
+        self.refresh_workloads()
+        spec = run.spec
+        trial = spec if n_new == spec.n_gpus else dataclasses.replace(spec, n_gpus=n_new)
+        gpu_ids = self.placement(self.cluster, trial)
+        applied = gpu_ids is not None
+        if not applied:
+            # a failed grow is a *cancelled* resize: keep EXACTLY the old
+            # GPUs (just freed, so they fit) — no migration, no
+            # checkpoint/restore penalty, no resize counted
+            gpu_ids = list(run.gpus)
+        self._carry[job_id] = _Carry(
+            iter_done=run.iter_done,
+            samples_done=run.samples_done,
+            samples_total=run.samples_total,
+            restore_cost=self._checkpoint_cost_of(run) if applied else 0.0,
+        )
+        self.place_job(job_id, gpu_ids, now)
+        if applied:
+            self._resizes += 1
+            if self.record_trace:
+                self._trace.append((job_id, run.iter_done, "resize", -1, now, now))
+        self.sched.on_resize(now, job_id)
+
+    # -- communication gating -----------------------------------------------------
+    def _try_start_comms(self, now: float) -> bool:
+        if not self._waiting_comm:
+            return False
+        any_started = False
+        # Alg. 3 line 16: consider ready communication tasks in SRSF order.
+        self._waiting_comm.sort(key=self.srsf_key_running)
+        started_any = True
+        while started_any:
+            started_any = False
+            for jid in list(self._waiting_comm):
+                run = self._runs[jid]
+                if run.comm_active or jid in self._active_comm:
+                    self._waiting_comm.remove(jid)
+                    continue
+                servers = run.servers
+                domains = self._domains_of(servers)
+                olds = [
+                    t for t in self._active_comm.values() if t.domains & domains
+                ]
+                max_conc = 0
+                for d in domains:
+                    max_conc = max(max_conc, self._domain_load.get(d, 0))
+                # WFBP: the gating decision and the transfer carry the
+                # current *bucket's* bytes, not the whole message.
+                if run.plan is not None:
+                    bucket = run.next_bucket
+                    new_bytes = run.plan[0][bucket]
+                else:
+                    bucket = -1
+                    new_bytes = run.spec.model.size_bytes
+                ok = self.comm_policy.should_start(
+                    new_bytes,
+                    [t.remaining_bytes for t in olds],
+                    max_conc,
+                    self.params,
+                )
+                if not ok:
+                    continue
+                self._waiting_comm.remove(jid)
+                task = CommTask(
+                    job_id=jid,
+                    servers=set(servers),
+                    remaining_bytes=(
+                        new_bytes
+                        if run.plan is not None
+                        else run.spec.model.size_bytes / self.comm_chunks
+                    ),
+                    latency_left=self.params.a,
+                    domains=domains,
+                    bucket=bucket,
+                )
+                self._active_comm[jid] = task
+                self._comm_started(task)
+                if run.plan is not None:
+                    run.next_bucket += 1
+                else:
+                    run.comm_chunks_left -= 1
+                run.comm_active = True
+                if max_conc > 0:
+                    self._comm_contended += 1
+                else:
+                    self._comm_clean += 1
+                if self.record_trace:
+                    kind = "c" if bucket < 0 else f"c{bucket}"
+                    self._trace.append(
+                        (jid, run.iter_done, kind, -1, now, None)
+                    )
+                started_any = True
+                any_started = True
+                break  # re-evaluate contention state after each start
+        return any_started
+
+    # -- iteration/worker state machine ---------------------------------------------
+    def _begin_iteration(self, run: JobRun, now: float) -> None:
+        run.f_done.clear()
+        run.b_done.clear()
+        run.comm_ready_at = None
+        run.comm_active = False
+        if run.plan is not None:
+            run.b_prog = [0] * run.n_world
+            run.next_bucket = 0
+            run.buckets_done = 0
+        self._dirty_gpus.update(run.gpus)
+
+    def _complete_iteration(self, run: JobRun, now: float) -> None:
+        run.iter_done += 1
+        run.samples_done += run.n_world
+        if run.samples_done >= run.samples_total:
+            self._finish_job(run, now)
+        elif run.pending_resize is not None:
+            self._apply_resize(run, now)
+        else:
+            self._begin_iteration(run, now)
+
+    def _finish_job(self, run: JobRun, now: float) -> None:
+        run.finished_at = now
+        self.cluster.release(run.spec, run.gpus)
+        self._dirty_gpus.update(run.gpus)
+        self._unfinished.discard(run.spec.job_id)
+
+    def _on_backward_done(self, run: JobRun, now: float) -> None:
+        if len(run.b_done) < run.n_world:
+            return
+        # Barrier reached (Fig. 3: all-reduce waits for all backprops).
+        if run.has_comm:
+            jid = run.spec.job_id
+            assert jid not in self._waiting_comm and not run.comm_active, (
+                f"duplicate barrier for job {jid}"
+            )
+            run.comm_ready_at = now
+            run.comm_chunks_left = self.comm_chunks
+            self._waiting_comm.append(jid)
+        else:
+            self._complete_iteration(run, now)
+
+    # -- GPU scheduling (Alg. 3 lines 22-30) -------------------------------------
+    def _restore_extra(self, run: JobRun, w: int) -> float:
+        """Checkpoint-restore penalty owed by worker ``w``: charged on its
+        first compute task after a preemption/resize (state reload delays
+        the forward pass)."""
+        return run.restore_cost if w in run.restore_need else 0.0
+
+    def _ready_compute_tasks(self, gid: GpuId):
+        """Yield (job_id, worker, kind, duration, segment) ready on this
+        GPU; segment is the WFBP backward-segment index (-1 = monolithic)."""
+        g = self.cluster.gpus[gid]
+        for jid in g.resident_jobs:
+            run = self._runs.get(jid)
+            if run is None or run.finished_at is not None:
+                continue
+            try:
+                w = run.gpus.index(gid)
+            except ValueError:
+                continue
+            if run.plan is not None:
+                # WFBP: backward runs in per-bucket segments that overlap
+                # in-flight transfers — comm never blocks compute within
+                # the iteration (only the iteration boundary barriers).
+                if w not in run.f_done:
+                    yield (jid, w, "f", run.spec.model.t_f + self._restore_extra(run, w), -1)
+                elif run.b_prog[w] < run.n_buckets:
+                    s = run.b_prog[w]
+                    yield (jid, w, "b", run.plan[1][s], s)
+                continue
+            if run.comm_ready_at is not None or run.comm_active:
+                continue  # between barrier and next iteration
+            if w not in run.f_done:
+                if self.fuse_fb:
+                    yield (jid, w, "fb", run.spec.model.t_iter_compute + self._restore_extra(run, w), -1)
+                else:
+                    yield (jid, w, "f", run.spec.model.t_f + self._restore_extra(run, w), -1)
+            elif w not in run.b_done:
+                yield (jid, w, "b", run.spec.model.t_b, -1)
+
+    def _schedule_gpus(self, now: float) -> None:
+        for gid in list(self._dirty_gpus):
+            self._dirty_gpus.discard(gid)
+            g = self.cluster.gpus[gid]
+            # busy_job is cleared only by this GPU's own gpu_done event, so a
+            # task ending exactly at `now` (event still in the heap) cannot be
+            # double-scheduled by another same-timestamp event.
+            if g.busy_job is not None:
+                continue
+            candidates = list(self._ready_compute_tasks(gid))
+            if not candidates:
+                g.busy_until = None
+                g.busy_job = None
+                continue
+            # SRSF among resident jobs' ready tasks.
+            candidates.sort(key=lambda c: self.srsf_key_running(c[0]))
+            jid, w, kind, dur, seg = candidates[0]
+            run = self._runs[jid]
+            if kind in ("f", "fb") and w in run.restore_need:
+                run.restore_need.discard(w)  # penalty committed with this task
+            g.busy_until = now + dur
+            g.busy_job = jid
+            g.busy_accum += dur
+            self._push(
+                now + dur,
+                "gpu_done",
+                (gid, jid, w, kind, seg, self._epoch_of.get(jid, 0)),
+            )
+            if self.record_trace:
+                if kind == "fb":
+                    self._trace.append((jid, run.iter_done, "f", w, now, now + run.spec.model.t_f))
+                    self._trace.append((jid, run.iter_done, "b", w, now + run.spec.model.t_f, now + dur))
+                else:
+                    tkind = kind if seg < 0 else f"{kind}{seg}"
+                    self._trace.append((jid, run.iter_done, tkind, w, now, now + dur))
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, max_time: float = math.inf) -> SimResult:
+        for spec in self.jobs.values():
+            self._push(spec.arrival, "arrival", (spec.job_id,))
+        if self.sched.quantum is not None and self.jobs:
+            first = min(s.arrival for s in self.jobs.values())
+            self._push(first + self.sched.quantum, "quantum", ())
+        now = 0.0
+        while self._heap and self._unfinished:
+            t, _, kind, data = heapq.heappop(self._heap)
+            if kind == "comm_check" and data[0] != self._comm_epoch:
+                continue
+            if t > max_time:
+                break
+            now = t
+            self._events += 1
+            self._comm_dirty = False
+
+            finished_comms = self._advance_comm(now)
+            for jid in finished_comms:
+                run = self._runs[jid]
+                run.comm_active = False
+                if self.record_trace:
+                    # patch the open comm record ("c" or a WFBP "c<bucket>")
+                    for i in range(len(self._trace) - 1, -1, -1):
+                        r = self._trace[i]
+                        if r[0] == jid and r[2].startswith("c") and r[5] is None:
+                            self._trace[i] = (r[0], r[1], r[2], r[3], r[4], now)
+                            break
+                if run.plan is not None:
+                    # WFBP: bucket done; the iteration completes with the
+                    # LAST bucket's transfer (earlier ones only overlapped
+                    # the remaining backward), else hand the next ready
+                    # bucket to the FIFO comm stream.
+                    run.buckets_done += 1
+                    if run.buckets_done >= run.n_buckets:
+                        self._complete_iteration(run, now)
+                    else:
+                        self._maybe_enqueue_bucket(run)
+                elif run.comm_chunks_left > 0:
+                    # chunked comm: re-queue the next chunk (it competes for
+                    # the link like a fresh task — preemption point)
+                    self._waiting_comm.append(jid)
+                else:
+                    self._complete_iteration(run, now)
+
+            if kind == "arrival":
+                self._queue.append(data[0])
+                self.sched.on_arrival(now, data[0])
+            elif kind == "gpu_done":
+                gid, jid, w, tkind, seg, epoch = data
+                if epoch == self._epoch_of.get(jid, 0):
+                    g = self.cluster.gpus[gid]
+                    g.busy_until = None
+                    g.busy_job = None
+                    self._dirty_gpus.add(gid)
+                    run = self._runs[jid]
+                    if run.plan is not None:
+                        if tkind == "f":
+                            run.f_done.add(w)
+                        else:  # backward segment `seg` of worker w
+                            run.b_prog[w] += 1
+                            self._maybe_enqueue_bucket(run)
+                    elif tkind == "fb":
+                        run.f_done.add(w)
+                        run.b_done.add(w)
+                        self._on_backward_done(run, now)
+                    elif tkind == "f":
+                        run.f_done.add(w)
+                    elif tkind == "b":
+                        run.b_done.add(w)
+                        self._on_backward_done(run, now)
+                    if run.finished_at is not None:
+                        # memory freed -> queued jobs may fit now
+                        self.sched.on_job_finish(now, jid)
+                # else: stale event of a preempted/resized incarnation — the
+                # GPU was already freed (and possibly rebooked) at teardown
+            elif kind == "quantum":
+                self.sched.on_quantum(now)
+                # keep ticking only while progress is possible — a live run
+                # or a pending event; otherwise the tick would spin forever
+                # on a stuck (never-placeable) queue the way the pre-split
+                # simulator's drained heap never could
+                if self._unfinished and (
+                    self._heap
+                    or any(r.finished_at is None for r in self._runs.values())
+                ):
+                    self._push(now + self.sched.quantum, "quantum", ())
+            elif kind == "comm_check":
+                pass  # generic comm processing above already handled it
+
+            if finished_comms:
+                # job finishing via comm also frees memory
+                for j in finished_comms:
+                    run = self._runs.get(j)
+                    if run is not None and run.finished_at is not None:
+                        self.sched.on_job_finish(now, j)
+                        break  # one re-evaluation per event (pre-split shape)
+
+            # Gating re-evaluated whenever comm state may have changed or new
+            # barriers were reached this event.
+            started = self._try_start_comms(now)
+            self._schedule_gpus(now)
+            # Rates only change when the active comm set changes, so the
+            # pending finish prediction stays valid otherwise.  A comm_check
+            # that finished nothing (float drift) must still reschedule, or
+            # the in-flight task would stall forever.  Policy actions that
+            # abort an active transfer (preemption) also change the rates.
+            if started or finished_comms or kind == "comm_check" or self._comm_dirty:
+                self._reschedule_comm_check()
+
+        return self._collect(now)
+
+    # -- results ------------------------------------------------------------------
+    def _collect(self, now: float) -> SimResult:
+        jct, finish, qdelay = {}, {}, {}
+        for jid, run in self._runs.items():
+            if run.finished_at is not None:
+                finish[jid] = run.finished_at
+                jct[jid] = run.finished_at - run.spec.arrival
+                qdelay[jid] = (
+                    self._first_placed.get(jid, run.placed_at) - run.spec.arrival
+                )
+        makespan = max(finish.values()) if finish else now
+        busy = {gid: g.busy_accum for gid, g in self.cluster.gpus.items()}
+        util = (
+            sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
+        )
+        return SimResult(
+            policy_name=self.comm_policy.name,
+            placement_name=repr(self.placement),
+            jct=jct,
+            finish=finish,
+            makespan=makespan,
+            gpu_busy=busy,
+            gpu_util=util,
+            queueing_delay=qdelay,
+            events_processed=self._events,
+            comm_started_contended=self._comm_contended,
+            comm_started_clean=self._comm_clean,
+            sched_name=self.sched.name,
+            censored=len(self.jobs) - len(finish),
+            preemptions=self._preemptions,
+            resizes=self._resizes,
+            task_trace=self._trace if self.record_trace else None,
+        )

@@ -143,10 +143,28 @@ def _place(free: jnp.ndarray, n_gpus: jnp.ndarray,
     return jnp.where(feasible, take, 0), feasible
 
 
-def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
+#: Sentinel for the policy field of the jit-static config key: the gating
+#: policy rides along as *runtime* scalars (max_ways, threshold_gated), so
+#: every policy shares one compiled graph per trace shape (see
+#: :func:`_policy_args`); the inner simulator must never read cfg.policy.
+_DYNAMIC_POLICY = "<dynamic>"
+
+
+def _policy_args(cfg: JaxSimConfig):
+    """(max_ways, threshold_gated) as arrays + the policy-stripped static
+    config key shared by every gating policy."""
+    spec = netmodel.parse_policy(cfg.policy)
+    return (
+        jnp.asarray(spec.max_ways, jnp.float32),
+        jnp.asarray(spec.threshold_gated, bool),
+        dataclasses.replace(cfg, policy=_DYNAMIC_POLICY),
+    )
+
+
+def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated):
     n_jobs = trace["arrival"].shape[0]
     ns = cfg.n_servers
-    spec = netmodel.parse_policy(cfg.policy)
+    assert cfg.policy == _DYNAMIC_POLICY, "callers go through _policy_args"
     placement = netmodel.canonical_placement(cfg.placement)
     bw = jnp.asarray(
         netmodel.server_bandwidth_array(cfg.server_bandwidth, ns), jnp.float32
@@ -310,7 +328,7 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
             min_old_rem = jnp.where(
                 overlap & active_now[None, :], rem[None, :], jnp.inf
             ).min(axis=1)
-            may_start = netmodel.may_start(
+            may_start = netmodel.may_start_dynamic(
                 k_would,
                 # proportional to M_new — the ratio test is unit-free.  For
                 # a waiting WFBP job ``rem`` is the current *bucket's* size
@@ -318,9 +336,9 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
                 # gating decides per bucket like the event backend.
                 rem if wfbp else comm_total,
                 min_old_rem,
-                max_ways=spec.max_ways,
-                threshold_gated=spec.threshold_gated,
-                dual_threshold=cfg.dual_threshold,
+                max_ways,
+                gated,
+                cfg.dual_threshold,
             )
             start_ok = waiting_now & may_start
             pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
@@ -420,23 +438,43 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
 
 
 @functools.partial(jax.jit, static_argnames=("n_jobs", "cfg"))
-def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
+def _simulate_one_jit(key, n_jobs: int, cfg: JaxSimConfig, max_ways, gated):
     trace = sample_trace(key, n_jobs)
-    return _simulate(trace, cfg)
+    return _simulate(trace, cfg, max_ways, gated)
+
+
+def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
+    max_ways, gated, cfg_key = _policy_args(cfg)
+    return _simulate_one_jit(key, n_jobs, cfg_key, max_ways, gated)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
+def _simulate_trace_jit(trace, cfg: JaxSimConfig, max_ways, gated):
+    return _simulate(trace, cfg, max_ways, gated)
+
+
 def simulate_trace(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
-    """Fluid-simulate a *fixed* workload (scenario-engine entry point)."""
-    return _simulate(trace, cfg)
+    """Fluid-simulate a *fixed* workload (scenario-engine entry point).
+
+    The gating policy enters the jitted graph as runtime scalars
+    (:func:`_policy_args`), so sweeping policies over one trace shape
+    reuses a single XLA compilation."""
+    max_ways, gated, cfg_key = _policy_args(cfg)
+    return _simulate_trace_jit(trace, cfg_key, max_ways, gated)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
+def _simulate_batched_jit(traces, cfg: JaxSimConfig, max_ways, gated):
+    return jax.vmap(lambda tr: _simulate(tr, cfg, max_ways, gated))(traces)
+
+
 def simulate_traces_batched(traces: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     """One vmapped launch over a stacked batch of traces (leading axis =
     seed; see :func:`stack_traces`).  Returns per-lane jct/finished arrays
-    and a per-lane makespan vector — the scenario Monte-Carlo entry point."""
-    return jax.vmap(lambda tr: _simulate(tr, cfg))(traces)
+    and a per-lane makespan vector — the scenario Monte-Carlo entry point.
+    Policy-dynamic like :func:`simulate_trace`."""
+    max_ways, gated, cfg_key = _policy_args(cfg)
+    return _simulate_batched_jit(traces, cfg_key, max_ways, gated)
 
 
 def trace_from_jobs(jobs, fusion: object = "all") -> Dict[str, jnp.ndarray]:

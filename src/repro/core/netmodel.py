@@ -193,6 +193,43 @@ def plan_for_model(model, fusion) -> Optional[Tuple[Tuple[float, ...], Tuple[flo
 
 
 # ---------------------------------------------------------------------------
+# Preemption / checkpoint-restore cost (preemptive & elastic scheduling)
+# ---------------------------------------------------------------------------
+
+#: Default checkpoint-storage bandwidths [B/s] (save to / restore from a
+#: shared filesystem over the same 10 GbE class network as the paper's
+#: all-reduce: ~1.2 GB/s effective per direction) and the fixed
+#: orchestration overhead of stopping and relaunching a gang [s].
+CHECKPOINT_SAVE_BPS = 1.2e9
+CHECKPOINT_RESTORE_BPS = 1.2e9
+CHECKPOINT_FIXED_S = 1.0
+
+
+def preemption_cost(
+    state_bytes: float,
+    save_bps: float = CHECKPOINT_SAVE_BPS,
+    restore_bps: float = CHECKPOINT_RESTORE_BPS,
+    fixed_s: float = CHECKPOINT_FIXED_S,
+) -> float:
+    """Wall-clock penalty of preempting (or resizing) a job: checkpoint its
+    ``state_bytes`` of model state, then restore it on the next placement,
+    plus a fixed stop/relaunch overhead.  Shared by both the event engine
+    and any analytic model so the penalty cannot drift between layers.
+
+    The restore half is charged when the job next starts (it delays the
+    first forward of every worker); modeling save+restore as one lump at
+    restart keeps the preemption event itself instantaneous — the saved
+    GPU time is what preemption frees, and the paper's cluster writes
+    checkpoints out-of-band.
+    """
+    if state_bytes < 0:
+        raise ValueError(f"state_bytes must be >= 0, got {state_bytes}")
+    if save_bps <= 0 or restore_bps <= 0:
+        raise ValueError("checkpoint bandwidths must be positive")
+    return fixed_s + state_bytes / save_bps + state_bytes / restore_bps
+
+
+# ---------------------------------------------------------------------------
 # Communication gating policies
 # ---------------------------------------------------------------------------
 
@@ -268,6 +305,33 @@ def may_start(
         contended_ok = under_cap & (new_cost < dual_threshold * min_old_rem)
     else:
         contended_ok = under_cap
+    return uncontended | contended_ok
+
+
+def may_start_dynamic(
+    k_would,
+    new_cost,
+    min_old_rem,
+    max_ways,
+    threshold_gated,
+    dual_threshold: float,
+):
+    """:func:`may_start` with the policy parameters as *runtime* values
+    (arrays/traced scalars) instead of Python statics.
+
+    Boolean-algebra-identical to :func:`may_start` for both values of
+    ``threshold_gated`` (locked in tests/test_netmodel.py), but because
+    nothing here is compile-time static, a jitted simulator can evaluate
+    every gating policy through ONE compiled graph — the fluid backend
+    uses this so AdaDUAL/SRSF(n)/k-way share a single XLA compilation per
+    trace shape instead of recompiling per policy.
+
+    ``threshold_gated`` must be a boolean *array* (numpy or jax; ``~`` is
+    logical-not for those — a bare Python bool would bit-invert)."""
+    uncontended = k_would <= 1
+    under_cap = k_would <= max_ways
+    ratio_ok = new_cost < dual_threshold * min_old_rem
+    contended_ok = under_cap & (ratio_ok | ~threshold_gated)
     return uncontended | contended_ok
 
 
@@ -368,9 +432,11 @@ __all__ = [
     "fusion_plan",
     "fusion_threshold",
     "may_start",
+    "may_start_dynamic",
     "parse_policy",
     "placement_rank",
     "plan_for_model",
+    "preemption_cost",
     "rack_pack_rank",
     "rate",
     "rate_ratio",

@@ -1,0 +1,446 @@
+"""Scheduling strategy layer of the event core (engine/policy split).
+
+``core/engine.py`` owns the *mechanism* — event calendar, cluster/GPU and
+comm-stream state, trace recording — and delegates every job-level decision
+to a :class:`SchedPolicy` through three hooks:
+
+* :meth:`SchedPolicy.on_arrival`    — a job was appended to the wait queue;
+* :meth:`SchedPolicy.on_job_finish` — a job completed and freed resources;
+* :meth:`SchedPolicy.on_quantum`    — a periodic scheduling tick (only when
+  the policy sets ``quantum``).
+
+Hooks act imperatively through the engine's small decision API
+(``engine.place_job`` / ``engine.preempt_job`` / ``engine.request_resize``
+plus read access to the queue, runs, cluster and SRSF keys); the engine
+counts the resulting admit/preempt/resize actions for the metrics layer.
+
+Three policies ship:
+
+* :class:`StaticGangPolicy` — the paper's Algorithm 3 admission: the wait
+  queue is scanned in SRSF order and each job's gang placement is held
+  until completion.  This is the pre-split simulator's behaviour
+  **bit-for-bit** (locked against captured pre-refactor traces in
+  ``tests/test_engine.py``).
+* :class:`PreemptiveSrsfPolicy` — beyond-paper, Tiresias-style (Gu et al.,
+  NSDI'19): on every arrival and quantum tick, running jobs whose SRSF
+  remaining service exceeds a waiting job's by ``margin`` are checkpointed
+  and requeued so the small job runs now.  Preempted work resumes from the
+  last completed iteration and pays a checkpoint/restore penalty
+  (:func:`repro.core.netmodel.preemption_cost`).
+* :class:`ElasticPolicy` — beyond-paper: jobs that declare
+  ``JobSpec.min_gpus``/``max_gpus`` are admitted at whatever feasible size
+  the bounds allow, shrunk at iteration boundaries when inelastic work
+  queues, and grown into capacity freed by finishing jobs.  Total work is
+  conserved in *samples* (``iterations x nominal GPUs``); the engine
+  rebuilds the WFBP fusion plan and topology domain sets for the new
+  world size on every resize.
+
+The communication gating policies (AdaDUAL Algorithm 2, SRSF(n), k-way
+AdaDUAL) also live here — they are the comm-task half of the strategy
+layer, consulted by the engine's gating loop through
+:class:`CommPolicy.should_start`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.adadual import (
+    adadual_should_start,
+    kway_adadual_should_start,
+    srsf_n_should_start,
+)
+from repro.core.cluster import JobSpec
+from repro.core.contention import ContentionParams
+
+# ---------------------------------------------------------------------------
+# Communication gating policies
+# ---------------------------------------------------------------------------
+
+
+class CommPolicy:
+    """Decides whether a ready communication task may start now.
+
+    ``max_concurrent`` and ``old_remaining`` describe the in-flight
+    communication tasks on the servers the new task touches (Alg. 2 inputs).
+    """
+
+    name = "base"
+
+    def should_start(
+        self,
+        new_bytes: float,
+        old_remaining: Sequence[float],
+        max_concurrent: int,
+        params: ContentionParams,
+    ) -> bool:
+        raise NotImplementedError
+
+
+class SrsfN(CommPolicy):
+    """SRSF(n): accept at most n-way contention, blindly (paper baselines)."""
+
+    def __init__(self, n: int) -> None:
+        self.n = n
+        self.name = f"SRSF({n})"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return srsf_n_should_start(max_concurrent, self.n)
+
+
+class AdaDual(CommPolicy):
+    """The paper's AdaDUAL (Algorithm 2)."""
+
+    name = "Ada-SRSF"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return adadual_should_start(new_bytes, old_remaining, max_concurrent, params)
+
+
+class KWayAdaDual(CommPolicy):
+    """Beyond-paper: exact-lookahead k-way generalization (future work #2)."""
+
+    def __init__(self, max_ways: int = 3) -> None:
+        self.max_ways = max_ways
+        self.name = f"KWay({max_ways})-SRSF"
+
+    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
+        return kway_adadual_should_start(
+            new_bytes, old_remaining, params, max_ways=self.max_ways
+        )
+
+
+def comm_policy_from_name(comm: str) -> CommPolicy:
+    """'ada' (AdaDUAL), 'srsfN', or 'kwayK' -> a CommPolicy instance."""
+    if comm == "ada":
+        return AdaDual()
+    if comm.startswith("srsf"):
+        return SrsfN(int(comm[4:]))
+    if comm.startswith("kway"):
+        return KWayAdaDual(int(comm[4:]))
+    raise ValueError(f"unknown comm policy {comm!r}")
+
+
+# ---------------------------------------------------------------------------
+# Job scheduling policies (the engine/policy split's strategy side)
+# ---------------------------------------------------------------------------
+
+
+class SchedPolicy:
+    """Job-level scheduling strategy consulted by ``core/engine.py``.
+
+    Subclasses decide *which* jobs run where (admit / place / preempt /
+    resize) by calling the engine's decision API from the hooks below; the
+    engine supplies all mechanism (event calendar, cluster state, comm
+    streams) and never makes a placement decision itself.
+    """
+
+    name = "base"
+    #: Period of the engine's "quantum" events; None disables them (the
+    #: static policy needs none, keeping the event stream — and hence the
+    #: pre-refactor traces — untouched).
+    quantum: Optional[float] = None
+
+    def bind(self, engine) -> None:
+        """Called once by the engine before the run starts."""
+        self.engine = engine
+
+    def on_arrival(self, now: float, job_id: int) -> None:
+        """``job_id`` was just appended to ``engine.queue``."""
+
+    def on_job_finish(self, now: float, job_id: int) -> None:
+        """``job_id`` completed; its memory and GPUs are free again."""
+
+    def on_quantum(self, now: float) -> None:
+        """Periodic tick (only fired when ``quantum`` is set)."""
+
+    def on_resize(self, now: float, job_id: int) -> None:
+        """The engine applied a pending resize of ``job_id`` at an
+        iteration boundary (capacity may have been freed)."""
+
+
+class StaticGangPolicy(SchedPolicy):
+    """The paper's Algorithm 3 admission — SRSF-ordered queue scan, gang
+    placement held until completion, no preemption, no elasticity.
+
+    ``_place_queue`` is the pre-split ``ClusterSimulator._try_place`` body
+    verbatim (same sort, same placement calls, same commit order), so this
+    policy reproduces the monolithic simulator bit-for-bit.
+    """
+
+    name = "static"
+
+    def on_arrival(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+
+    def on_job_finish(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+
+    def on_quantum(self, now: float) -> None:
+        self._place_queue(now)
+
+    def on_resize(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+
+    def _place_queue(self, now: float) -> None:
+        eng = self.engine
+        if not eng.queue:
+            return
+        eng.refresh_workloads()
+        eng.queue.sort(key=eng.srsf_key_queued)
+        placed: List[int] = []
+        for jid in eng.queue:
+            spec = eng.jobs[jid]
+            gpu_ids = eng.placement(eng.cluster, spec)
+            if gpu_ids is None:
+                continue  # no head-of-line blocking (Alg. 3 loops the queue)
+            eng.place_job(jid, gpu_ids, now)
+            placed.append(jid)
+        for jid in placed:
+            eng.queue.remove(jid)
+
+
+class PreemptiveSrsfPolicy(StaticGangPolicy):
+    """Tiresias-style preemptive SRSF (beyond-paper).
+
+    On every arrival and quantum tick, after the normal queue scan, each
+    still-waiting job may evict running jobs whose SRSF remaining service
+    exceeds its own by more than ``margin`` (hysteresis against thrash).
+    Victims are checkpointed (``engine.preempt_job``: gang torn down
+    atomically, progress carried in completed iterations) and requeued;
+    they pay the checkpoint/restore penalty when they next run.  A victim
+    younger than ``min_run`` seconds is immune, bounding preemption
+    frequency the way Tiresias' promotion knob does.
+    """
+
+    name = "preemptive_srsf"
+
+    def __init__(
+        self,
+        quantum: float = 25.0,
+        margin: float = 1.25,
+        min_run: Optional[float] = None,
+    ) -> None:
+        if quantum <= 0:
+            raise ValueError(f"quantum must be positive, got {quantum}")
+        if margin < 1.0:
+            raise ValueError(f"margin must be >= 1, got {margin}")
+        self.quantum = quantum
+        self.margin = margin
+        self.min_run = quantum if min_run is None else min_run
+
+    def on_arrival(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+        self._preempt_for_queue(now)
+
+    def on_quantum(self, now: float) -> None:
+        self._place_queue(now)
+        self._preempt_for_queue(now)
+
+    def _preempt_for_queue(self, now: float) -> None:
+        eng = self.engine
+        if not eng.queue:
+            return
+        eng.refresh_workloads()
+        eng.queue.sort(key=eng.srsf_key_queued)
+        total_gpus = len(eng.cluster.gpus)
+        gpu_mem = next(iter(eng.cluster.gpus.values())).mem_capacity_mb
+        placed: List[int] = []
+        for jid in list(eng.queue):
+            spec = eng.jobs[jid]
+            need = spec.n_gpus
+            if need > total_gpus or spec.model.mem_mb > gpu_mem:
+                continue  # can never be placed: evicting for it is pure churn
+            # capacity freed by an earlier waiter's evictions may already
+            # fit this one — always retry plain placement before evicting
+            gpu_ids = eng.placement(eng.cluster, spec)
+            if gpu_ids is not None:
+                eng.place_job(jid, gpu_ids, now)
+                placed.append(jid)
+                continue
+            waiter_rem = eng.srsf_key_queued(jid)[0]
+            victims = sorted(
+                (
+                    (eng.srsf_key_running(rid)[0], rid)
+                    for rid, run in eng.runs.items()
+                    if run.finished_at is None
+                    and now - run.placed_at >= self.min_run
+                    and eng.srsf_key_running(rid)[0] > waiter_rem * self.margin
+                ),
+                reverse=True,
+            )
+            if not victims:
+                continue
+            gpu_ids = None
+            evicted = 0
+            for _, rid in victims:
+                evicted += eng.runs[rid].n_world
+                eng.preempt_job(rid, now)
+                # re-rank with the victim's workload actually gone, so the
+                # waiter lands on the just-freed GPUs instead of LWF still
+                # seeing them as loaded (cluster.release keeps L_g)
+                eng.refresh_workloads()
+                gpu_ids = eng.placement(eng.cluster, eng.jobs[jid])
+                if gpu_ids is not None:
+                    break
+                if evicted >= need:
+                    break  # enough GPUs torn down; memory still blocks us
+            if gpu_ids is not None:
+                eng.place_job(jid, gpu_ids, now)
+                placed.append(jid)
+        for jid in placed:
+            if jid in eng.queue:
+                eng.queue.remove(jid)
+
+
+class ElasticPolicy(StaticGangPolicy):
+    """Elastic gang scheduling (beyond-paper).
+
+    Jobs that declare ``JobSpec.min_gpus``/``max_gpus`` are *elastic*:
+    their total work is fixed in samples (``iterations x nominal GPUs``)
+    and their world size may change at iteration boundaries.  The policy
+
+    * admits an elastic job at the largest feasible size within its
+      bounds (preferring max, then the nominal request, then min);
+    * **shrinks** running elastic gangs toward ``min_gpus`` when queued
+      work cannot be placed (resize requests applied by the engine at the
+      next iteration boundary, freeing GPUs for the queue);
+    * **grows** the running elastic job with the most remaining service
+      into capacity freed by a finishing job.
+
+    Every resize tears the gang down at a boundary and re-places it, so
+    the WFBP fusion plan and the topology domain sets are rebuilt for the
+    new world size by the same code path as a fresh admission.
+    """
+
+    name = "elastic"
+
+    def __init__(self, quantum: Optional[float] = None) -> None:
+        # a quantum is optional: arrivals/finishes/resizes already trigger
+        # re-evaluation; a tick adds periodic growth on long-idle clusters
+        self.quantum = quantum
+
+    # -- admission ---------------------------------------------------------
+    def _candidate_sizes(self, spec: JobSpec) -> List[int]:
+        if not spec.is_elastic:
+            return [spec.n_gpus]
+        lo, hi = spec.gpu_bounds
+        return sorted({hi, spec.n_gpus, lo}, reverse=True)
+
+    def _place_queue(self, now: float) -> None:
+        eng = self.engine
+        if not eng.queue:
+            return
+        eng.refresh_workloads()
+        eng.queue.sort(key=eng.srsf_key_queued)
+        placed: List[int] = []
+        for jid in eng.queue:
+            spec = eng.jobs[jid]
+            for n in self._candidate_sizes(spec):
+                trial = (
+                    spec if n == spec.n_gpus else dataclasses.replace(spec, n_gpus=n)
+                )
+                gpu_ids = eng.placement(eng.cluster, trial)
+                if gpu_ids is not None:
+                    eng.place_job(jid, gpu_ids, now)
+                    placed.append(jid)
+                    break
+        for jid in placed:
+            eng.queue.remove(jid)
+
+    # -- elasticity --------------------------------------------------------
+    def on_arrival(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+        self._shrink_for_queue(now)
+
+    def on_job_finish(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+        self._grow_into_free(now)
+
+    def on_quantum(self, now: float) -> None:
+        self._place_queue(now)
+        self._shrink_for_queue(now)
+        self._grow_into_free(now)
+
+    def on_resize(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+
+    def _shrink_for_queue(self, now: float) -> None:
+        """Request boundary shrinks of elastic gangs until the freed GPU
+        count covers the smallest waiting job's requirement."""
+        eng = self.engine
+        if not eng.queue:
+            return
+        needed = min(eng.jobs[jid].gpu_bounds[0] for jid in eng.queue)
+        freeable = 0
+        shrinkable = sorted(
+            (
+                (run.n_world, rid)
+                for rid, run in eng.runs.items()
+                if run.finished_at is None
+                and eng.jobs[rid].is_elastic
+                and run.pending_resize is None
+                and run.n_world > eng.jobs[rid].gpu_bounds[0]
+            ),
+            reverse=True,
+        )
+        for n_world, rid in shrinkable:
+            lo = eng.jobs[rid].gpu_bounds[0]
+            eng.request_resize(rid, lo)
+            freeable += n_world - lo
+            if freeable >= needed:
+                break
+
+    def _grow_into_free(self, now: float) -> None:
+        """Grow the running elastic job with the most remaining service
+        into currently-free feasible GPUs (one job per event; the resize
+        hook re-evaluates, so growth cascades without overcommitting)."""
+        eng = self.engine
+        if eng.queue:
+            return  # queued work has first claim on free capacity
+        candidates = sorted(
+            (
+                (eng.srsf_key_running(rid)[0], rid)
+                for rid, run in eng.runs.items()
+                if run.finished_at is None
+                and eng.jobs[rid].is_elastic
+                and run.pending_resize is None
+                and run.n_world < eng.jobs[rid].gpu_bounds[1]
+            ),
+            reverse=True,
+        )
+        for _, rid in candidates:
+            run = eng.runs[rid]
+            free = len(eng.cluster.available_gpus(eng.jobs[rid].model.mem_mb))
+            if free <= 0:
+                return
+            hi = eng.jobs[rid].gpu_bounds[1]
+            eng.request_resize(rid, min(hi, run.n_world + free))
+            return
+
+
+SCHED_POLICIES = ("static", "preemptive_srsf", "elastic")
+
+
+def sched_policy_from_name(
+    sched: str,
+    quantum: Optional[float] = None,
+    **kw,
+) -> SchedPolicy:
+    """'static' | 'preemptive_srsf' | 'elastic' -> a :class:`SchedPolicy`.
+
+    ``quantum`` overrides the policy's default tick period (ignored by
+    ``static``, which never ticks)."""
+    s = sched.lower()
+    if s == "static":
+        return StaticGangPolicy()
+    if s in ("preemptive_srsf", "preemptive"):
+        if quantum is not None:
+            kw["quantum"] = quantum
+        return PreemptiveSrsfPolicy(**kw)
+    if s == "elastic":
+        return ElasticPolicy(quantum=quantum, **kw)
+    raise ValueError(
+        f"unknown scheduling policy {sched!r}; expected one of {SCHED_POLICIES}"
+    )

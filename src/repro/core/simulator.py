@@ -1,10 +1,22 @@
 """Event-driven cluster simulator for multi-job DDL training
-(paper Algorithm 3 and Section V, exact continuous-time variant).
+(paper Algorithm 3 and Section V, exact continuous-time variant) —
+compatibility entry point of the engine/policy split.
 
-The paper presents Ada-SRSF as a time-discrete loop; because task durations
-are tens of milliseconds while the paper's slot is one second, we integrate
-the same dynamics exactly with an event queue instead (documented in
-DESIGN.md).  Semantics preserved:
+The former 859-line monolith now lives in two layers:
+
+* ``core/engine.py``  — :class:`~repro.core.engine.EventEngine`: the
+  mechanism (event calendar, cluster/GPU/comm-stream state, WFBP bucket
+  pipelines, trace recording, preempt/resize plumbing);
+* ``core/schedpolicy.py`` — the strategy layer: job scheduling policies
+  (:class:`~repro.core.schedpolicy.StaticGangPolicy` — the paper's
+  Algorithm 3 admission, bit-exact with the pre-split simulator;
+  :class:`~repro.core.schedpolicy.PreemptiveSrsfPolicy` — Tiresias-style
+  checkpoint/requeue; :class:`~repro.core.schedpolicy.ElasticPolicy` —
+  min/max-GPU gangs resized at iteration boundaries) and the
+  communication gating policies (AdaDUAL Algorithm 2, SRSF(n), k-way).
+
+This module re-exports the public names so existing imports keep working,
+and provides the one-call :func:`simulate` runner.  Semantics preserved:
 
 * jobs arrive online (1 s ticks from the trace generator), queue in Q and
   are placed by a pluggable placement policy (Alg. 3 lines 6-13);
@@ -18,786 +30,49 @@ DESIGN.md).  Semantics preserved:
 * job priority everywhere is SRSF: smallest remaining service
   ``(remaining iters) x (t_f + t_b + comm) x n_gpus`` first;
 * beyond-paper (``fusion=``): wait-free backpropagation with tensor
-  fusion — for models carrying layer data (``repro.workloads``), the
-  backward pass runs in per-bucket segments and each bucket's all-reduce
-  is gated individually (same policy stack, the bucket's bytes, its own
-  topology domain set) on a FIFO per-job comm stream that OVERLAPS the
-  remaining backward compute; only the last bucket blocks the next
-  iteration's forward (the layer-granular DAG in ``core/dag.py``).
-  ``fusion="all"`` is the paper's monolithic model, bit-for-bit.
+  fusion — per-bucket gated transfers overlap the remaining backward
+  (``core/dag.py``'s layer-granular DAG); ``fusion="all"`` is the paper's
+  monolithic model, bit-for-bit;
+* beyond-paper (``sched=``): gang preemption and elastic resizing — see
+  ``core/schedpolicy.py``; the default ``sched="static"`` holds every
+  placement until completion, exactly the paper (and the pre-split
+  simulator, regression-locked in ``tests/test_engine.py``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Optional, Sequence, Union
 
-from repro.core import dag as dag_mod
-from repro.core import netmodel
-from repro.core.adadual import (
-    adadual_should_start,
-    kway_adadual_should_start,
-    srsf_n_should_start,
-)
-from repro.core.cluster import Cluster, GpuId, JobSpec
+from repro.core.cluster import Cluster, JobSpec
 from repro.core.contention import ContentionParams
+from repro.core.engine import (  # noqa: F401  (re-exports)
+    CommTask,
+    EventEngine,
+    JobRun,
+    SimResult,
+    median,
+    percentile,
+)
 from repro.core.placement import PlacementPolicy
-from repro.core.topology import RingEdgeTopology, Topology, nic_topology
-
-_EPS = 1e-9
-
-
-# ---------------------------------------------------------------------------
-# Communication gating policies
-# ---------------------------------------------------------------------------
-
-
-class CommPolicy:
-    """Decides whether a ready communication task may start now.
-
-    ``max_concurrent`` and ``old_remaining`` describe the in-flight
-    communication tasks on the servers the new task touches (Alg. 2 inputs).
-    """
-
-    name = "base"
-
-    def should_start(
-        self,
-        new_bytes: float,
-        old_remaining: Sequence[float],
-        max_concurrent: int,
-        params: ContentionParams,
-    ) -> bool:
-        raise NotImplementedError
-
-
-class SrsfN(CommPolicy):
-    """SRSF(n): accept at most n-way contention, blindly (paper baselines)."""
-
-    def __init__(self, n: int) -> None:
-        self.n = n
-        self.name = f"SRSF({n})"
-
-    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
-        return srsf_n_should_start(max_concurrent, self.n)
-
-
-class AdaDual(CommPolicy):
-    """The paper's AdaDUAL (Algorithm 2)."""
-
-    name = "Ada-SRSF"
-
-    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
-        return adadual_should_start(new_bytes, old_remaining, max_concurrent, params)
-
-
-class KWayAdaDual(CommPolicy):
-    """Beyond-paper: exact-lookahead k-way generalization (future work #2)."""
-
-    def __init__(self, max_ways: int = 3) -> None:
-        self.max_ways = max_ways
-        self.name = f"KWay({max_ways})-SRSF"
-
-    def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
-        return kway_adadual_should_start(
-            new_bytes, old_remaining, params, max_ways=self.max_ways
-        )
-
-
-# ---------------------------------------------------------------------------
-# Runtime state
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class CommTask:
-    job_id: int
-    servers: Set[int]
-    remaining_bytes: float
-    latency_left: float  # the fixed 'a' consumed in wall time before draining
-    #: contention domains this task loads: topology domain indices (the
-    #: fabric cuts its ring crosses — NICs, rack uplinks, ...; see
-    #: core/topology.py) or, under the legacy "link" reading
-    #: (``RingEdgeTopology``), the directed ring edges themselves (the
-    #: paper's "each link between two nodes" wording)
-    domains: frozenset = frozenset()
-    #: WFBP bucket index this transfer carries (-1 = the monolithic
-    #: iteration-level all-reduce)
-    bucket: int = -1
-
-
-@dataclasses.dataclass
-class JobRun:
-    spec: JobSpec
-    gpus: List[GpuId]
-    servers: Set[int]
-    placed_at: float
-    iter_done: int = 0
-    # Per-worker progress within the current iteration:
-    f_done: Set[int] = dataclasses.field(default_factory=set)
-    b_done: Set[int] = dataclasses.field(default_factory=set)
-    comm_ready_at: Optional[float] = None  # all-reduce ready, not yet started
-    comm_active: bool = False
-    #: chunks of the current iteration's all-reduce still to send (beyond-
-    #: paper: tensor-fusion-style chunked, hence preemptible, communication)
-    comm_chunks_left: int = 0
-    #: WFBP fusion plan ``(bucket_bytes, bucket_t_b)`` from
-    #: ``netmodel.fusion_plan`` — None = the monolithic legacy path (the
-    #: paper's iteration-level all-reduce, bit-for-bit).
-    plan: Optional[Tuple[Tuple[float, ...], Tuple[float, ...]]] = None
-    #: WFBP per-worker backward progress: completed segments (len n_gpus).
-    b_prog: List[int] = dataclasses.field(default_factory=list)
-    #: WFBP comm pipeline: next bucket to hand to the (FIFO) comm stream
-    #: and buckets whose transfer already completed this iteration.
-    next_bucket: int = 0
-    buckets_done: int = 0
-    finished_at: Optional[float] = None
-
-    @property
-    def has_comm(self) -> bool:
-        return len(self.servers) > 1
-
-    @property
-    def n_buckets(self) -> int:
-        return len(self.plan[0]) if self.plan is not None else 1
-
-    def per_iter_service(
-        self, params: ContentionParams, bandwidth_aware: bool = False
-    ) -> float:
-        """Per-iteration service time: compute + contention-free comm (the
-        per-message latency ``a`` is paid once per WFBP bucket).
-
-        ``bandwidth_aware`` (beyond-paper, ROADMAP item) divides the
-        per-byte term by the slowest member server's NIC multiplier, so a
-        job placed on degraded links is recognized as having more service
-        left.  Default False = the paper-faithful nominal estimate.
-        """
-        t = self.spec.model.t_iter_compute
-        if self.has_comm:
-            scale = params.bandwidth_scale(self.servers) if bandwidth_aware else 1.0
-            t += self.n_buckets * params.a + params.b * self.spec.model.size_bytes / scale
-        return t
-
-    def remaining_service(
-        self, params: ContentionParams, bandwidth_aware: bool = False
-    ) -> float:
-        """SRSF key: remaining time x allocated GPUs (Tiresias-style)."""
-        rem_iters = self.spec.iterations - self.iter_done
-        return rem_iters * self.per_iter_service(params, bandwidth_aware) * self.spec.n_gpus
-
-
-def median(xs: Sequence[float]) -> float:
-    """Median (mean of the middle two for even-length lists)."""
-    if not xs:
-        return math.nan
-    ys = sorted(xs)
-    n = len(ys)
-    return ys[n // 2] if n % 2 else 0.5 * (ys[n // 2 - 1] + ys[n // 2])
-
-
-def percentile(xs: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile, q in [0, 1] (the convention all JCT
-    reporting in this repo shares)."""
-    if not xs:
-        return math.nan
-    ys = sorted(xs)
-    idx = min(len(ys) - 1, int(math.ceil(q * len(ys))) - 1)
-    return ys[max(0, idx)]
-
-
-@dataclasses.dataclass
-class SimResult:
-    policy_name: str
-    placement_name: str
-    jct: Dict[int, float]  # job_id -> completion - arrival
-    finish: Dict[int, float]
-    makespan: float
-    gpu_busy: Dict[GpuId, float]
-    gpu_util: float  # mean busy fraction over makespan
-    queueing_delay: Dict[int, float]
-    events_processed: int
-    comm_started_contended: int
-    comm_started_clean: int
-    task_trace: Optional[List[Tuple]] = None  # (job, iter, kind, worker, t0, t1)
-
-    def avg_jct(self) -> float:
-        return sum(self.jct.values()) / len(self.jct)
-
-    def median_jct(self) -> float:
-        return median(list(self.jct.values()))
-
-    def p95_jct(self) -> float:
-        return percentile(list(self.jct.values()), 0.95)
-
-
-# ---------------------------------------------------------------------------
-# The simulator
-# ---------------------------------------------------------------------------
-
-
-class ClusterSimulator:
-    """Exact event-driven simulation of Algorithm 3's dynamics."""
-
-    def __init__(
-        self,
-        jobs: Sequence[JobSpec],
-        cluster: Optional[Cluster] = None,
-        placement: Optional[PlacementPolicy] = None,
-        comm_policy: Optional[CommPolicy] = None,
-        params: Optional[ContentionParams] = None,
-        fuse_fb: bool = True,
-        record_trace: bool = False,
-        comm_chunks: int = 1,
-        contention_domain: str = "server",  # server (NIC) | link (ring edges)
-        exclusive_gpus: bool = False,  # paper assumption 3 reading
-        bandwidth_aware_srsf: bool = False,  # hetero-aware remaining-service
-        topology: Optional[Topology] = None,  # fabric contention domains
-        fusion: object = "all",  # WFBP tensor fusion: 'all' | 'none' | bytes
-    ) -> None:
-        self.jobs = {j.job_id: j for j in jobs}
-        self.cluster = cluster or Cluster()
-        self.placement = placement or PlacementPolicy("lwf", kappa=1)
-        self.comm_policy = comm_policy or AdaDual()
-        self.params = params or ContentionParams()
-        # Fusing f+b into one GPU occupancy halves event count; a newly
-        # placed higher-priority job can then preempt only at (f+b)
-        # boundaries instead of f|b boundaries (distortion <= t_b ~ 50 ms).
-        # Fidelity tests set fuse_fb=False.
-        self.fuse_fb = fuse_fb and not record_trace
-        self.record_trace = record_trace
-        # Beyond-paper (future-work #3 adjacent): split each all-reduce into
-        # N chunks scheduled independently — a long transfer can lose the
-        # link to a shorter job's message at every chunk boundary, making
-        # communication effectively preemptible.  The per-message latency
-        # `a` is charged per chunk (that is the real cost of chunking).
-        self.comm_chunks = max(1, comm_chunks)
-        # WFBP tensor fusion (layer-granular communication subsystem):
-        # 'all' = one monolithic all-reduce per iteration (the paper's model
-        # and today's behaviour bit-for-bit); 'none' / a byte threshold =
-        # per-bucket transfers (netmodel.fusion_plan) that overlap the
-        # remaining backward pass, gated per bucket.  Only jobs whose
-        # ModelProfile carries layer data (repro.workloads) are affected;
-        # Table III profiles always run monolithic.
-        self._fusion_threshold = netmodel.fusion_threshold(fusion)
-        self.fusion = fusion
-        if self._fusion_threshold != math.inf and self.comm_chunks > 1:
-            raise ValueError(
-                "comm_chunks and WFBP fusion are mutually exclusive — the "
-                "fusion plan already chunks the all-reduce"
-            )
-        self._plan_cache: Dict[int, Optional[tuple]] = {}
-        # "server": the server's NIC is the shared resource (conservative —
-        # all flows through one 10GbE port contend).  "link": the paper's
-        # wording — contention only between tasks sharing a ring edge
-        # (server pair), allowing disjoint transfers to proceed in parallel.
-        if contention_domain not in ("server", "link"):
-            raise ValueError(f"unknown contention domain {contention_domain!r}")
-        self.contention_domain = contention_domain
-        # An explicit fabric topology (core/topology.py) supersedes the
-        # contention_domain string; the default NIC-only topology is the
-        # identical computation as "server" (one domain per server, all
-        # oversub 1.0), so behaviour is bit-for-bit unchanged.  The legacy
-        # ring-edge "link" reading is the dynamic RingEdgeTopology: the same
-        # per-task domains the old inline code produced (regression-locked
-        # in tests/test_chunked_comm.py), expressed as topology domains.
-        if topology is not None and topology.n_servers != self.cluster.n_servers:
-            raise ValueError(
-                f"topology covers {topology.n_servers} servers, cluster has "
-                f"{self.cluster.n_servers}"
-            )
-        if topology is None:
-            topology = (
-                nic_topology(self.cluster.n_servers)
-                if contention_domain == "server"
-                else RingEdgeTopology(self.cluster.n_servers)
-            )
-        self.topology = topology
-        self.cluster.exclusive = exclusive_gpus
-        # SRSF priority estimate under server_bandwidth heterogeneity: the
-        # paper's nominal homogeneous comm time (False, default) or scaled
-        # by the slowest member NIC (True) — see JobRun.per_iter_service.
-        self.bandwidth_aware_srsf = bandwidth_aware_srsf
-
-        self._heap: List[Tuple[float, int, str, tuple]] = []
-        self._seq = itertools.count()
-        self._queue: List[int] = []  # unplaced job ids
-        self._runs: Dict[int, JobRun] = {}
-        self._active_comm: Dict[int, CommTask] = {}
-        self._waiting_comm: List[int] = []  # job ids with gated all-reduce
-        self._comm_epoch = 0
-        self._last_comm_update = 0.0
-        self._dirty_gpus: Set[GpuId] = set()
-        self._events = 0
-        self._comm_contended = 0
-        self._comm_clean = 0
-        self._trace: List[Tuple] = []
-        self._unfinished = set(self.jobs)
-
-    # -- event helpers -------------------------------------------------------
-    def _push(self, t: float, kind: str, data: tuple) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
-
-    # -- SRSF priority ---------------------------------------------------------
-    def _srsf_key_queued(self, job_id: int):
-        spec = self.jobs[job_id]
-        # E_J = 0 before placement (paper Section IV-A "Job Priority").
-        rem = spec.compute_time * spec.n_gpus
-        return (rem, spec.arrival, job_id)
-
-    def _srsf_key_running(self, job_id: int):
-        run = self._runs[job_id]
-        rem = run.remaining_service(self.params, self.bandwidth_aware_srsf)
-        return (rem, run.spec.arrival, job_id)
-
-    # -- communication bookkeeping --------------------------------------------
-    def _domains_of(self, servers: Set[int]) -> frozenset:
-        """Contention domains a comm task over ``servers`` loads: the
-        topology cuts its ring crosses (domain indices), or — under the
-        legacy "link" reading, now ``RingEdgeTopology`` — the directed ring
-        edges themselves."""
-        return self.topology.loaded_domains(servers)
-
-    def _comm_k_eff(self, task: CommTask) -> float:
-        """Effective contention for the Eq. (5) *rate*: per-domain count
-        scaled by that domain's oversubscription factor (an uplink with
-        oversub f delivers 1/f of nominal bandwidth, so k tasks crossing it
-        drain like k*f tasks on a NIC).  All-1.0 oversub (the NIC-only
-        topology, and the legacy ring-link reading) reduces to the raw k."""
-        k = 1.0
-        for d in task.domains:
-            c = sum(1 for t in self._active_comm.values() if d in t.domains)
-            k = max(k, c * self.topology.oversub_of(d))
-        return k
-
-    def _advance_comm(self, now: float) -> List[int]:
-        """Drain all in-flight comm tasks from the last update to ``now``.
-        Returns job ids whose all-reduce completed in this window."""
-        dt = now - self._last_comm_update
-        self._last_comm_update = now
-        finished: List[int] = []
-        if dt <= 0 or not self._active_comm:
-            return finished
-        # Rates are piecewise constant between events because the active set
-        # only changes at events (domain loads are a pure function of the
-        # active set); use the rate as of the window start — this stays an
-        # exact piecewise-rate integration under any topology.
-        ks = {jid: self._comm_k_eff(t) for jid, t in self._active_comm.items()}
-        for jid, task in list(self._active_comm.items()):
-            lat = min(task.latency_left, dt)
-            task.latency_left -= lat
-            drain_t = dt - lat
-            if drain_t > 0:
-                rate = self.params.rate(ks[jid]) * self.params.bandwidth_scale(
-                    task.servers
-                )
-                task.remaining_bytes -= drain_t * rate
-            if task.latency_left <= _EPS and task.remaining_bytes <= 1.0:
-                # tolerance: 1 byte ~ 1e-9 s — absorbs float drift in the
-                # piecewise integration
-                finished.append(jid)
-        for jid in finished:
-            del self._active_comm[jid]
-        return finished
-
-    def _next_comm_finish(self) -> Optional[float]:
-        if not self._active_comm:
-            return None
-        t_min = math.inf
-        for task in self._active_comm.values():
-            k = self._comm_k_eff(task)
-            rate = self.params.rate(k) * self.params.bandwidth_scale(task.servers)
-            t = self._last_comm_update + task.latency_left + task.remaining_bytes / rate
-            t_min = min(t_min, t)
-        return t_min
-
-    def _reschedule_comm_check(self) -> None:
-        self._comm_epoch += 1
-        t = self._next_comm_finish()
-        if t is not None:
-            self._push(t, "comm_check", (self._comm_epoch,))
-
-    # -- WFBP fusion plans -------------------------------------------------------
-    def _assign_plan(self, run: JobRun) -> None:
-        """Attach the WFBP fusion plan to a freshly-placed run: per-bucket
-        (bytes, backward-segment seconds) when fusion is finite, the model
-        carries layer data, and the placement actually spans servers —
-        otherwise the monolithic legacy path (plan None)."""
-        if self._fusion_threshold == math.inf or not run.has_comm:
-            return
-        model = run.spec.model
-        if not getattr(model, "has_layers", False):
-            return
-        key = id(model)
-        if key not in self._plan_cache:
-            self._plan_cache[key] = netmodel.fusion_plan(
-                model.layer_grad_bytes, model.layer_t_b, self._fusion_threshold
-            )
-        run.plan = self._plan_cache[key]
-        run.b_prog = [0] * run.spec.n_gpus
-
-    def _maybe_enqueue_bucket(self, run: JobRun) -> None:
-        """Hand the next WFBP bucket to the gating queue once (a) all
-        workers have finished its backward segment and (b) the job's comm
-        stream is free (buckets serialize FIFO, the PyTorch-DDP model)."""
-        jid = run.spec.job_id
-        if run.comm_active or jid in self._waiting_comm:
-            return
-        if run.next_bucket >= run.n_buckets:
-            return
-        if run.next_bucket < min(run.b_prog):
-            self._waiting_comm.append(jid)
-
-    # -- placement --------------------------------------------------------------
-    def _refresh_workloads(self) -> None:
-        """Alg. 3 line 3: recompute every GPU's remaining workload L_g as the
-        sum of its resident jobs' remaining service (shared per GPU)."""
-        for g in self.cluster.gpus.values():
-            g.workload = 0.0
-        for jid, run in self._runs.items():
-            if run.finished_at is not None:
-                continue
-            share = run.remaining_service(self.params, self.bandwidth_aware_srsf)
-            for gid in run.gpus:
-                self.cluster.gpus[gid].workload += share
-
-    def _try_place(self, now: float) -> None:
-        if not self._queue:
-            return
-        self._refresh_workloads()
-        self._queue.sort(key=self._srsf_key_queued)
-        placed: List[int] = []
-        for jid in self._queue:
-            spec = self.jobs[jid]
-            gpu_ids = self.placement(self.cluster, spec)
-            if gpu_ids is None:
-                continue  # no head-of-line blocking (Alg. 3 loops the queue)
-            servers = self.cluster.servers_of(gpu_ids)
-            run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
-            self._assign_plan(run)
-            workload = run.remaining_service(self.params, self.bandwidth_aware_srsf)
-            self.cluster.place(spec, gpu_ids, workload)
-            self._runs[jid] = run
-            self._dirty_gpus.update(gpu_ids)
-            placed.append(jid)
-        for jid in placed:
-            self._queue.remove(jid)
-
-    # -- communication gating -----------------------------------------------------
-    def _try_start_comms(self, now: float) -> bool:
-        if not self._waiting_comm:
-            return False
-        any_started = False
-        # Alg. 3 line 16: consider ready communication tasks in SRSF order.
-        self._waiting_comm.sort(key=self._srsf_key_running)
-        started_any = True
-        while started_any:
-            started_any = False
-            for jid in list(self._waiting_comm):
-                run = self._runs[jid]
-                if run.comm_active or jid in self._active_comm:
-                    self._waiting_comm.remove(jid)
-                    continue
-                servers = run.servers
-                domains = self._domains_of(servers)
-                olds = [
-                    t for t in self._active_comm.values() if t.domains & domains
-                ]
-                max_conc = 0
-                for d in domains:
-                    max_conc = max(
-                        max_conc,
-                        sum(1 for t in self._active_comm.values() if d in t.domains),
-                    )
-                # WFBP: the gating decision and the transfer carry the
-                # current *bucket's* bytes, not the whole message.
-                if run.plan is not None:
-                    bucket = run.next_bucket
-                    new_bytes = run.plan[0][bucket]
-                else:
-                    bucket = -1
-                    new_bytes = run.spec.model.size_bytes
-                ok = self.comm_policy.should_start(
-                    new_bytes,
-                    [t.remaining_bytes for t in olds],
-                    max_conc,
-                    self.params,
-                )
-                if not ok:
-                    continue
-                self._waiting_comm.remove(jid)
-                self._active_comm[jid] = CommTask(
-                    job_id=jid,
-                    servers=set(servers),
-                    remaining_bytes=(
-                        new_bytes
-                        if run.plan is not None
-                        else run.spec.model.size_bytes / self.comm_chunks
-                    ),
-                    latency_left=self.params.a,
-                    domains=domains,
-                    bucket=bucket,
-                )
-                if run.plan is not None:
-                    run.next_bucket += 1
-                else:
-                    run.comm_chunks_left -= 1
-                run.comm_active = True
-                if max_conc > 0:
-                    self._comm_contended += 1
-                else:
-                    self._comm_clean += 1
-                if self.record_trace:
-                    kind = "c" if bucket < 0 else f"c{bucket}"
-                    self._trace.append(
-                        (jid, run.iter_done, kind, -1, now, None)
-                    )
-                started_any = True
-                any_started = True
-                break  # re-evaluate contention state after each start
-        return any_started
-
-    # -- iteration/worker state machine ---------------------------------------------
-    def _begin_iteration(self, run: JobRun, now: float) -> None:
-        run.f_done.clear()
-        run.b_done.clear()
-        run.comm_ready_at = None
-        run.comm_active = False
-        if run.plan is not None:
-            run.b_prog = [0] * run.spec.n_gpus
-            run.next_bucket = 0
-            run.buckets_done = 0
-        self._dirty_gpus.update(run.gpus)
-
-    def _complete_iteration(self, run: JobRun, now: float) -> None:
-        run.iter_done += 1
-        if run.iter_done >= run.spec.iterations:
-            self._finish_job(run, now)
-        else:
-            self._begin_iteration(run, now)
-
-    def _finish_job(self, run: JobRun, now: float) -> None:
-        run.finished_at = now
-        self.cluster.release(run.spec, run.gpus)
-        self._dirty_gpus.update(run.gpus)
-        self._unfinished.discard(run.spec.job_id)
-
-    def _on_backward_done(self, run: JobRun, now: float) -> None:
-        if len(run.b_done) < run.spec.n_gpus:
-            return
-        # Barrier reached (Fig. 3: all-reduce waits for all backprops).
-        if run.has_comm:
-            jid = run.spec.job_id
-            assert jid not in self._waiting_comm and not run.comm_active, (
-                f"duplicate barrier for job {jid}"
-            )
-            run.comm_ready_at = now
-            run.comm_chunks_left = self.comm_chunks
-            self._waiting_comm.append(jid)
-        else:
-            self._complete_iteration(run, now)
-
-    # -- GPU scheduling (Alg. 3 lines 22-30) -------------------------------------
-    def _ready_compute_tasks(self, gid: GpuId):
-        """Yield (job_id, worker, kind, duration, segment) ready on this
-        GPU; segment is the WFBP backward-segment index (-1 = monolithic)."""
-        g = self.cluster.gpus[gid]
-        for jid in g.resident_jobs:
-            run = self._runs.get(jid)
-            if run is None or run.finished_at is not None:
-                continue
-            try:
-                w = run.gpus.index(gid)
-            except ValueError:
-                continue
-            if run.plan is not None:
-                # WFBP: backward runs in per-bucket segments that overlap
-                # in-flight transfers — comm never blocks compute within
-                # the iteration (only the iteration boundary barriers).
-                if w not in run.f_done:
-                    yield (jid, w, "f", run.spec.model.t_f, -1)
-                elif run.b_prog[w] < run.n_buckets:
-                    s = run.b_prog[w]
-                    yield (jid, w, "b", run.plan[1][s], s)
-                continue
-            if run.comm_ready_at is not None or run.comm_active:
-                continue  # between barrier and next iteration
-            if w not in run.f_done:
-                if self.fuse_fb:
-                    yield (jid, w, "fb", run.spec.model.t_iter_compute, -1)
-                else:
-                    yield (jid, w, "f", run.spec.model.t_f, -1)
-            elif w not in run.b_done:
-                yield (jid, w, "b", run.spec.model.t_b, -1)
-
-    def _schedule_gpus(self, now: float) -> None:
-        for gid in list(self._dirty_gpus):
-            self._dirty_gpus.discard(gid)
-            g = self.cluster.gpus[gid]
-            # busy_job is cleared only by this GPU's own gpu_done event, so a
-            # task ending exactly at `now` (event still in the heap) cannot be
-            # double-scheduled by another same-timestamp event.
-            if g.busy_job is not None:
-                continue
-            candidates = list(self._ready_compute_tasks(gid))
-            if not candidates:
-                g.busy_until = None
-                g.busy_job = None
-                continue
-            # SRSF among resident jobs' ready tasks.
-            candidates.sort(key=lambda c: self._srsf_key_running(c[0]))
-            jid, w, kind, dur, seg = candidates[0]
-            g.busy_until = now + dur
-            g.busy_job = jid
-            g.busy_accum += dur
-            self._push(now + dur, "gpu_done", (gid, jid, w, kind, seg))
-            if self.record_trace:
-                if kind == "fb":
-                    run = self._runs[jid]
-                    self._trace.append((jid, run.iter_done, "f", w, now, now + run.spec.model.t_f))
-                    self._trace.append((jid, run.iter_done, "b", w, now + run.spec.model.t_f, now + dur))
-                else:
-                    tkind = kind if seg < 0 else f"{kind}{seg}"
-                    self._trace.append((jid, self._runs[jid].iter_done, tkind, w, now, now + dur))
-
-    # -- main loop ----------------------------------------------------------------
-    def run(self, max_time: float = math.inf) -> SimResult:
-        for spec in self.jobs.values():
-            self._push(spec.arrival, "arrival", (spec.job_id,))
-        now = 0.0
-        while self._heap and self._unfinished:
-            t, _, kind, data = heapq.heappop(self._heap)
-            if kind == "comm_check" and data[0] != self._comm_epoch:
-                continue
-            if t > max_time:
-                break
-            now = t
-            self._events += 1
-            comm_state_changed = False
-
-            finished_comms = self._advance_comm(now)
-            for jid in finished_comms:
-                run = self._runs[jid]
-                run.comm_active = False
-                comm_state_changed = True
-                if self.record_trace:
-                    # patch the open comm record ("c" or a WFBP "c<bucket>")
-                    for i in range(len(self._trace) - 1, -1, -1):
-                        r = self._trace[i]
-                        if r[0] == jid and r[2].startswith("c") and r[5] is None:
-                            self._trace[i] = (r[0], r[1], r[2], r[3], r[4], now)
-                            break
-                if run.plan is not None:
-                    # WFBP: bucket done; the iteration completes with the
-                    # LAST bucket's transfer (earlier ones only overlapped
-                    # the remaining backward), else hand the next ready
-                    # bucket to the FIFO comm stream.
-                    run.buckets_done += 1
-                    if run.buckets_done >= run.n_buckets:
-                        self._complete_iteration(run, now)
-                    else:
-                        self._maybe_enqueue_bucket(run)
-                elif run.comm_chunks_left > 0:
-                    # chunked comm: re-queue the next chunk (it competes for
-                    # the link like a fresh task — preemption point)
-                    self._waiting_comm.append(jid)
-                else:
-                    self._complete_iteration(run, now)
-
-            if kind == "arrival":
-                self._queue.append(data[0])
-                self._try_place(now)
-            elif kind == "gpu_done":
-                gid, jid, w, tkind, seg = data
-                g = self.cluster.gpus[gid]
-                g.busy_until = None
-                g.busy_job = None
-                self._dirty_gpus.add(gid)
-                run = self._runs[jid]
-                if run.plan is not None:
-                    if tkind == "f":
-                        run.f_done.add(w)
-                    else:  # backward segment `seg` of worker w
-                        run.b_prog[w] += 1
-                        self._maybe_enqueue_bucket(run)
-                elif tkind == "fb":
-                    run.f_done.add(w)
-                    run.b_done.add(w)
-                    self._on_backward_done(run, now)
-                elif tkind == "f":
-                    run.f_done.add(w)
-                elif tkind == "b":
-                    run.b_done.add(w)
-                    self._on_backward_done(run, now)
-                if run.finished_at is not None:
-                    # memory freed -> queued jobs may fit now
-                    self._try_place(now)
-            elif kind == "comm_check":
-                comm_state_changed = comm_state_changed or bool(finished_comms)
-
-            if finished_comms:
-                # job finishing via comm also frees memory
-                if any(self._runs[j].finished_at is not None for j in finished_comms):
-                    self._try_place(now)
-
-            # Gating re-evaluated whenever comm state may have changed or new
-            # barriers were reached this event.
-            started = self._try_start_comms(now)
-            self._schedule_gpus(now)
-            # Rates only change when the active comm set changes, so the
-            # pending finish prediction stays valid otherwise.  A comm_check
-            # that finished nothing (float drift) must still reschedule, or
-            # the in-flight task would stall forever.
-            if started or finished_comms or kind == "comm_check":
-                self._reschedule_comm_check()
-
-        return self._collect(now)
-
-    # -- results ------------------------------------------------------------------
-    def _collect(self, now: float) -> SimResult:
-        jct, finish, qdelay = {}, {}, {}
-        for jid, run in self._runs.items():
-            if run.finished_at is not None:
-                finish[jid] = run.finished_at
-                jct[jid] = run.finished_at - run.spec.arrival
-                qdelay[jid] = run.placed_at - run.spec.arrival
-        makespan = max(finish.values()) if finish else now
-        busy = {gid: g.busy_accum for gid, g in self.cluster.gpus.items()}
-        util = (
-            sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
-        )
-        return SimResult(
-            policy_name=self.comm_policy.name,
-            placement_name=repr(self.placement),
-            jct=jct,
-            finish=finish,
-            makespan=makespan,
-            gpu_busy=busy,
-            gpu_util=util,
-            queueing_delay=qdelay,
-            events_processed=self._events,
-            comm_started_contended=self._comm_contended,
-            comm_started_clean=self._comm_clean,
-            task_trace=self._trace if self.record_trace else None,
-        )
-
-
-# ---------------------------------------------------------------------------
-# Convenience runner
-# ---------------------------------------------------------------------------
-
-
-def comm_policy_from_name(comm: str) -> CommPolicy:
-    """'ada' (AdaDUAL), 'srsfN', or 'kwayK' -> a CommPolicy instance."""
-    if comm == "ada":
-        return AdaDual()
-    if comm.startswith("srsf"):
-        return SrsfN(int(comm[4:]))
-    if comm.startswith("kway"):
-        return KWayAdaDual(int(comm[4:]))
-    raise ValueError(f"unknown comm policy {comm!r}")
+from repro.core.schedpolicy import (  # noqa: F401  (re-exports)
+    AdaDual,
+    CommPolicy,
+    ElasticPolicy,
+    KWayAdaDual,
+    PreemptiveSrsfPolicy,
+    SchedPolicy,
+    SrsfN,
+    StaticGangPolicy,
+    comm_policy_from_name,
+    sched_policy_from_name,
+)
+from repro.core.topology import Topology
+
+#: Pre-split name of the engine: the constructor signature is unchanged
+#: (plus the new ``sched``/``preemption_quantum``/``checkpoint_cost``
+#: keywords), so existing call sites work verbatim.
+ClusterSimulator = EventEngine
 
 
 def simulate(
@@ -818,6 +93,10 @@ def simulate(
     topology: Optional[Topology] = None,
     fusion: object = "all",
     gpu_mem_mb: float = 16160.0,
+    sched: Union[SchedPolicy, str, None] = None,
+    preemption_quantum: Optional[float] = None,
+    checkpoint_cost: Optional[float] = None,
+    max_time: float = math.inf,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
 
@@ -835,9 +114,16 @@ def simulate(
     layer-granular communication subsystem for jobs whose model carries
     layer data (repro.workloads); 'all' is the paper's monolithic
     iteration-level all-reduce, bit-for-bit.
+    sched ('static' | 'preemptive_srsf' | 'elastic', or a SchedPolicy
+    instance) selects the job scheduling policy; 'static' is the paper's
+    hold-until-completion gang scheduling.  preemption_quantum overrides
+    the named policy's tick period; checkpoint_cost overrides the
+    netmodel.preemption_cost checkpoint/restore penalty [s].
+    max_time cuts the simulation at a horizon — jobs still running are
+    reported in ``SimResult.censored`` (0 when the run drains fully).
     """
     policy = comm_policy_from_name(comm)
-    sim = ClusterSimulator(
+    sim = EventEngine(
         jobs,
         cluster=Cluster(
             n_servers=n_servers,
@@ -855,5 +141,8 @@ def simulate(
         bandwidth_aware_srsf=bandwidth_aware_srsf,
         topology=topology,
         fusion=fusion,
+        sched=sched,
+        preemption_quantum=preemption_quantum,
+        checkpoint_cost=checkpoint_cost,
     )
-    return sim.run()
+    return sim.run(max_time=max_time)

@@ -27,6 +27,11 @@ Ten named scenarios (importing this module registers them):
 * ``fusion_sweep``       — the fusion threshold x policy grid cell: identical
                            many-layer jobs where a finite threshold beats both
                            ``fusion="all"`` and fully unfused under Ada-SRSF.
+* ``preemption_gain``    — heavy-tailed service on an exclusive-GPU cluster:
+                           elephants grab everything, mice stream in — where
+                           Tiresias-style gang preemption pays.
+* ``elastic_surge``      — elastic min/max-GPU trainings hit by a burst of
+                           rigid small jobs — where boundary resizes pay.
 * ``smoke``              — tiny, fully deterministic; for differential and CI
                            tests (seconds on one CPU, no RNG at all).
 
@@ -39,7 +44,7 @@ from __future__ import annotations
 
 import math
 import random
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.cluster import TABLE_III, JobSpec, ModelProfile
 from repro.core.contention import ContentionParams
@@ -65,6 +70,8 @@ QUICK_OVERRIDES = {
     "rack_locality": {},
     "model_zoo": dict(n_jobs=12, min_iters=15, max_iters=60, horizon_s=600.0),
     "fusion_sweep": dict(base_iters=25),
+    "preemption_gain": {},
+    "elastic_surge": {},
     "smoke": {},
 }
 
@@ -648,7 +655,132 @@ def fusion_sweep(
 
 
 # ---------------------------------------------------------------------------
-# 12. Smoke (deterministic, tiny)
+# 12. Preemption gain: heavy-tailed service on an exclusive cluster
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "preemption_gain",
+    "Heavy-tailed service mix on an exclusive-GPU cluster: early elephants "
+    "(multi-GPU, long) grab every GPU, then a stream of mice (small, short) "
+    "arrives — the cell where Tiresias-style gang preemption "
+    "(sched='preemptive_srsf') beats hold-until-completion static SRSF "
+    "(regression-locked in tests/test_engine.py)",
+)
+def preemption_gain(
+    seed: int = 0,
+    n_elephants: int = 4,
+    n_mice: int = 24,
+    horizon_s: float = 120.0,
+    elephant_iters: Tuple[int, int] = (600, 1200),
+    mouse_iters: Tuple[int, int] = (20, 80),
+    preemption_quantum: float = 10.0,
+    n_servers: int = 4,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = []
+    jid = 0
+    for k in range(n_elephants):
+        # elephants arrive first and fill the cluster; every other one
+        # spans two servers so preemption also exercises the comm path
+        gpus = gpus_per_server if k % 2 == 0 else 2 * gpus_per_server
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival=float(k),
+                n_gpus=gpus,
+                iterations=rng.randint(*elephant_iters),
+                model=TABLE_III["vgg16"],
+            )
+        )
+        jid += 1
+    for _ in range(n_mice):
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival=float(int(rng.uniform(5.0, horizon_s))),
+                n_gpus=rng.choices([1, 2], [0.7, 0.3])[0],
+                iterations=rng.randint(*mouse_iters),
+                model=TABLE_III["resnet50"],
+            )
+        )
+        jid += 1
+    return Scenario(
+        name="preemption_gain",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        exclusive_gpus=True,
+        preemption_quantum=preemption_quantum,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 13. Elastic surge: min/max-GPU jobs absorbing a rigid burst
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "elastic_surge",
+    "Elastic trainings (min/max GPU bounds) on big exclusive servers, hit "
+    "by a mid-run burst of rigid small jobs: sched='elastic' grows the "
+    "gangs across idle capacity (2x iteration throughput inside a server), "
+    "shrinks them to min at the surge, and regrows afterwards — the "
+    "workload where boundary resizes pay for their checkpoint cost",
+)
+def elastic_surge(
+    seed: int = 0,
+    n_elastic: int = 4,
+    n_surge: int = 12,
+    surge_at: float = 12.0,
+    elastic_iters: Tuple[int, int] = (700, 1000),
+    surge_iters: Tuple[int, int] = (40, 120),
+    n_servers: int = 4,
+    gpus_per_server: int = 8,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = []
+    jid = 0
+    for k in range(n_elastic):
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival=float(k),
+                n_gpus=4,
+                iterations=rng.randint(*elastic_iters),
+                model=TABLE_III["resnet50"],
+                min_gpus=2,
+                max_gpus=gpus_per_server,  # growth stays inside one server
+            )
+        )
+        jid += 1
+    for _ in range(n_surge):
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival=float(int(surge_at + rng.uniform(0.0, 20.0))),
+                n_gpus=rng.choices([1, 2], [0.5, 0.5])[0],
+                iterations=rng.randint(*surge_iters),
+                model=TABLE_III["inception_v3"],
+            )
+        )
+        jid += 1
+    return Scenario(
+        name="elastic_surge",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        exclusive_gpus=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 14. Smoke (deterministic, tiny)
 # ---------------------------------------------------------------------------
 
 

@@ -16,18 +16,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.simulator import SimResult, median, percentile
+from repro.core.engine import SimResult, median, percentile
 
 CSV_FIELDS = (
     "scenario",
     "backend",
     "placement",
     "comm",
+    "sched",
     "seed",
     "n_jobs",
     "n_finished",
+    "censored",
     "avg_jct",
     "median_jct",
     "p95_jct",
@@ -35,6 +37,8 @@ CSV_FIELDS = (
     "gpu_util",
     "comm_contended",
     "comm_clean",
+    "preemptions",
+    "resizes",
     "wall_s",
 )
 
@@ -56,6 +60,15 @@ class RunMetrics:
     comm_contended: int = 0
     comm_clean: int = 0
     wall_s: float = 0.0
+    #: job scheduling policy (engine/policy split; fluid is always static)
+    sched: str = "static"
+    #: jobs with no finish time (horizon cutoff, or never placeable) —
+    #: excluded from the JCT stats above, surfaced so truncation is
+    #: never silent
+    censored: int = 0
+    #: gang preemptions / elastic resizes performed during the run
+    preemptions: int = 0
+    resizes: int = 0
 
     def as_csv_row(self) -> str:
         vals = []
@@ -83,6 +96,10 @@ def from_jcts(
     comm_contended: int = 0,
     comm_clean: int = 0,
     wall_s: float = 0.0,
+    sched: str = "static",
+    censored: Optional[int] = None,
+    preemptions: int = 0,
+    resizes: int = 0,
 ) -> RunMetrics:
     jcts = [float(x) for x in jcts]
     n_fin = len(jcts)
@@ -102,6 +119,10 @@ def from_jcts(
         comm_contended=comm_contended,
         comm_clean=comm_clean,
         wall_s=wall_s,
+        sched=sched,
+        censored=(n_jobs - n_fin) if censored is None else censored,
+        preemptions=preemptions,
+        resizes=resizes,
     )
 
 
@@ -126,6 +147,10 @@ def from_event_result(
         comm_contended=res.comm_started_contended,
         comm_clean=res.comm_started_clean,
         wall_s=wall_s,
+        sched=res.sched_name,
+        censored=res.censored,
+        preemptions=res.preemptions,
+        resizes=res.resizes,
     )
 
 

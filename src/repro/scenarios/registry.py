@@ -51,6 +51,22 @@ class Scenario:
     #: transfers with the remaining backward pass, the fluid simulator
     #: drains the static (jobs, buckets) size matrix per bucket.
     fusion: object = "all"
+    #: Job scheduling policy of the event backend ('static' |
+    #: 'preemptive_srsf' | 'elastic', see core/schedpolicy.py).  'static'
+    #: is the paper's hold-until-completion gang scheduling and the only
+    #: mode the fluid backend supports (preemption/elasticity are
+    #: event-only — documented in the docs/scenarios.md parity matrix).
+    sched: str = "static"
+    #: Tick period [s] of the preemptive/elastic policies (None = the
+    #: policy's default; ignored by 'static', which never ticks).
+    preemption_quantum: Optional[float] = None
+    #: Checkpoint/restore penalty [s] charged when a preempted or resized
+    #: job next runs (None = netmodel.preemption_cost of the model state).
+    checkpoint_cost: Optional[float] = None
+    #: Paper assumption-3 reading: one job per GPU (no memory
+    #: time-sharing).  The regime where gang preemption is the only way a
+    #: waiting job can take resources from a running one.
+    exclusive_gpus: bool = False
 
     def make_cluster(self) -> Cluster:
         """A fresh (mutable) cluster — one per simulation run."""

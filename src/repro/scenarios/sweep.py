@@ -24,6 +24,7 @@ plus the paper aliases 'adadual'/'ada-srsf'.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -60,9 +61,18 @@ def run_scenario_event(
     comm: str = "ada",
     **sim_kw,
 ) -> SimResult:
-    """Exact event-driven simulation of one scenario instance."""
+    """Exact event-driven simulation of one scenario instance.  The
+    scenario's scheduling knobs (``sched``, ``preemption_quantum``,
+    ``checkpoint_cost``, ``exclusive_gpus``) are defaults; any ``sim_kw``
+    override wins — that is how the regression tests compare
+    preemptive-vs-static on the same workload."""
     cluster, jobs, params = scenario.build()
     sim_kw.setdefault("fusion", scenario.fusion)
+    sim_kw.setdefault("sched", scenario.sched)
+    sim_kw.setdefault("preemption_quantum", scenario.preemption_quantum)
+    sim_kw.setdefault("checkpoint_cost", scenario.checkpoint_cost)
+    sim_kw.setdefault("exclusive_gpus", scenario.exclusive_gpus)
+    max_time = sim_kw.pop("max_time", math.inf)  # run() arg, not ctor
     sim = ClusterSimulator(
         jobs,
         cluster=cluster,
@@ -74,7 +84,7 @@ def run_scenario_event(
         topology=scenario.topology,
         **sim_kw,
     )
-    return sim.run()
+    return sim.run(max_time=max_time)
 
 
 def fluid_config(
@@ -153,7 +163,12 @@ def _dedupe_fluid_placements(placements: Sequence[str]) -> Tuple[str, ...]:
 @dataclasses.dataclass(frozen=True)
 class SweepCell:
     """One picklable cell of the sweep matrix (workers rebuild the scenario
-    from (name, seed, overrides) so nothing heavyweight crosses processes)."""
+    from (name, seed, overrides) so nothing heavyweight crosses processes).
+
+    ``sim_kw`` carries extra event-simulator keyword overrides (e.g.
+    ``sched="preemptive_srsf"`` or ``bandwidth_aware_srsf=True``) — the
+    event backend only; a fluid cell with ``sim_kw`` raises rather than
+    silently ignoring the knobs."""
 
     scenario: str
     seed: int
@@ -163,14 +178,24 @@ class SweepCell:
     backend: str  # "event" | "fluid"
     overrides: Tuple[Tuple[str, object], ...] = ()
     dt: float = 0.05
+    sim_kw: Tuple[Tuple[str, object], ...] = ()
 
 
 def run_cell(cell: SweepCell) -> metrics_mod.RunMetrics:
     scn = get_scenario(cell.scenario, seed=cell.seed, **dict(cell.overrides))
+    if cell.sim_kw and cell.backend != "event":
+        raise ValueError(
+            f"sim_kw {dict(cell.sim_kw)} is event-backend only "
+            f"(got backend {cell.backend!r})"
+        )
     t0 = time.time()
     if cell.backend == "event":
         res = run_scenario_event(
-            scn, placement=cell.placement, kappa=cell.kappa, comm=cell.comm
+            scn,
+            placement=cell.placement,
+            kappa=cell.kappa,
+            comm=cell.comm,
+            **dict(cell.sim_kw),
         )
         return metrics_mod.from_event_result(
             res,
@@ -209,15 +234,18 @@ def sweep(
     per_scenario_overrides: Optional[Dict[str, Dict[str, object]]] = None,
     processes: Optional[int] = None,
     dt: float = 0.05,
+    sim_kw: Optional[Dict[str, object]] = None,
 ) -> List[metrics_mod.RunMetrics]:
     """Run the full scenario x placement x comm x seed matrix.
 
     ``overrides`` applies to every scenario; ``per_scenario_overrides``
     (keyed by scenario name, e.g. ``QUICK_OVERRIDES``) layers on top, so
     one call — and hence one worker pool — can span scenarios that need
-    different sizing.  ``processes > 1`` fans cells out over a
-    multiprocessing pool (event backend only — jitted jax functions don't
-    survive fork well)."""
+    different sizing.  ``sim_kw`` forwards event-simulator keyword
+    overrides to every cell (e.g. ``sched=`` or ``bandwidth_aware_srsf=``
+    — how the nightly grid runs the same cells under different scheduling
+    modes).  ``processes > 1`` fans cells out over a multiprocessing pool
+    (event backend only — jitted jax functions don't survive fork well)."""
     if backend == "fluid":
         placements = _dedupe_fluid_placements(placements)
 
@@ -236,6 +264,7 @@ def sweep(
             backend=backend,
             overrides=cell_overrides(s),
             dt=dt,
+            sim_kw=tuple(sorted((sim_kw or {}).items())),
         )
         for s in scenarios
         for pl in placements
@@ -321,12 +350,16 @@ def sweep_ci(
     per_scenario_overrides: Optional[Dict[str, Dict[str, object]]] = None,
     processes: Optional[int] = None,
     dt: float = 0.05,
+    sim_kw: Optional[Dict[str, object]] = None,
 ) -> List[metrics_mod.CellCI]:
     """Mean +/- std avg-JCT per scenario x placement x comm cell over
     ``seeds``.  Fluid backend: one vmapped batch per cell
     (:func:`monte_carlo_fluid`); event backend: the exact per-seed sweep
-    (optionally multiprocessed), aggregated the same way."""
+    (optionally multiprocessed), aggregated the same way.  ``sim_kw`` is
+    event-only (see :func:`sweep`)."""
     if backend == "fluid":
+        if sim_kw:
+            raise ValueError(f"sim_kw {sim_kw} is event-backend only")
         placements = _dedupe_fluid_placements(placements)
         records: List[metrics_mod.RunMetrics] = []
         for s in scenarios:
@@ -352,5 +385,6 @@ def sweep_ci(
             per_scenario_overrides=per_scenario_overrides,
             processes=processes,
             dt=dt,
+            sim_kw=sim_kw,
         )
     return metrics_mod.ci_from_runs(records)

@@ -76,12 +76,24 @@ class TestArchConfigs:
         )
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _smoke_model(arch):
+    """One reduced model + initialized params per arch, shared by the
+    train-step and prefill/decode smokes (both tests read the params;
+    neither mutates them) — saves one jitted init per arch."""
+    cfg = get_config(arch, reduced=True)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
 @pytest.mark.parametrize("arch", SMOKE_ARCH_PARAMS)
 class TestArchSmoke:
     def test_train_step(self, arch, key):
-        cfg = get_config(arch, reduced=True)
-        lm = LM(cfg)
-        params = lm.init(key)
+        cfg, lm, params = _smoke_model(arch)
         batch = make_batch(cfg, key)
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: lm.loss_fn(p, batch, FLAGS), has_aux=True
@@ -94,9 +106,7 @@ class TestArchSmoke:
             )
 
     def test_prefill_then_decode(self, arch, key):
-        cfg = get_config(arch, reduced=True)
-        lm = LM(cfg)
-        params = lm.init(key)
+        cfg, lm, params = _smoke_model(arch)
         batch = make_batch(cfg, key)
         logits, cache = lm.prefill_fn(params, batch, max_seq=S + 8, flags=FLAGS)
         assert logits.shape == (B, cfg.vocab_size)

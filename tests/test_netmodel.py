@@ -127,6 +127,28 @@ class TestMayStart:
         # (1 !< 0.4); lane3 over the cap
         np.testing.assert_array_equal(out, [True, True, False, False])
 
+    def test_dynamic_variant_is_boolean_identical(self):
+        """may_start_dynamic (runtime policy params — how the fluid backend
+        shares one compiled graph across every gating policy) must agree
+        with the static-parameter predicate everywhere."""
+        rng = np.random.default_rng(0)
+        k_would = rng.integers(1, 5, 200)
+        new_cost = rng.uniform(0.0, 300e6, 200)
+        min_old = np.where(rng.random(200) < 0.2, np.inf, rng.uniform(0, 300e6, 200))
+        for max_ways in (1, 2, 3):
+            for gated in (False, True):
+                ref = netmodel.may_start(
+                    k_would, new_cost, min_old,
+                    max_ways=max_ways, threshold_gated=gated,
+                    dual_threshold=P.dual_threshold,
+                )
+                dyn = netmodel.may_start_dynamic(
+                    k_would, new_cost, min_old,
+                    np.float32(max_ways), np.asarray(gated),
+                    P.dual_threshold,
+                )
+                np.testing.assert_array_equal(ref, dyn, err_msg=f"{max_ways}/{gated}")
+
 
 class TestPlacementRank:
     FREE = np.array([1.0, 4.0, 0.0, 2.0])

@@ -34,6 +34,11 @@ REGRESSION_SEEDS = {
     "rack_locality": 1,
     "model_zoo": 1,
     "fusion_sweep": 1,
+    # the preemptive/elastic cells run their *static* defaults here (the
+    # generic ordering locks); the sched-policy gains are regression-locked
+    # separately in tests/test_engine.py
+    "preemption_gain": 2,
+    "elastic_surge": 1,
     "smoke": 0,
 }
 REGRESSION_CELLS = {
@@ -126,6 +131,16 @@ class TestScenarioInvariants:
         fast = run_scenario_event(homog, comm="ada")
         assert slow.avg_jct() >= fast.avg_jct() * (1 - RTOL)
         assert slow.makespan >= fast.makespan * (1 - RTOL)
+
+    @pytest.mark.parametrize("name", sorted(REGRESSION_CELLS))
+    def test_no_horizon_censoring(self, name):
+        """Every regression cell must drain completely: the explicit
+        ``SimResult.censored`` count (jobs cut off by a ``max_time``
+        horizon, which used to vanish silently from the JCT stats) is
+        asserted zero so truncation can never corrupt a locked ordering."""
+        res = sim(name, comm="ada")
+        assert res.censored == 0
+        assert len(res.jct) == small(name).n_jobs
 
     def test_topology_scenarios_carry_a_fabric(self):
         for name in ("oversub_fabric", "rack_locality"):

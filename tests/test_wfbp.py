@@ -435,7 +435,7 @@ class TestFluidWfbp:
             get_scenario("fusion_sweep", seed=1, **QUICK_OVERRIDES["fusion_sweep"]),
             fusion=fusion,
         )
-        fl = run_scenario_fluid(scn, comm="ada", dt=0.005)
+        fl = run_scenario_fluid(scn, comm="ada", dt=0.01)
         ev = run_scenario_event(scn, comm="ada")
         assert int(fl["finished"].sum()) == scn.n_jobs
         fl_avg = float(fl["jct"][fl["finished"]].mean())
