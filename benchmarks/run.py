@@ -213,6 +213,11 @@ def _scenario_sweep(
 
     if names == ["all"]:
         names = scenario_names()
+        if backend == "fluid":
+            # fault injection is event-only (run_scenario_fluid raises on
+            # an armed chaos spec): 'all' means 'all supported' here, while
+            # naming a chaos scenario explicitly still fails loudly
+            names = [n for n in names if not n.startswith("chaos_")]
     sim_kw = {}
     if sched is not None:
         sim_kw["sched"] = sched
@@ -542,6 +547,95 @@ def bench_engine(full: bool) -> None:
         f.write("\n")
 
 
+def bench_chaos(full: bool) -> None:
+    """Fault-injection SLO grid: every ``chaos_*`` scenario under the
+    static ada/srsf1/srsf2 schedulers plus ada under ``preemptive_srsf``,
+    over multiple seeds.  Prints the full RunMetrics CSV (including the
+    goodput / work_lost / p99_jct fault columns) and persists the
+    per-cell means plus the per-seed recovery-storm ada/srsf2 ratios to
+    ``BENCH_chaos.json`` (path override: ``REPRO_BENCH_CHAOS_JSON``)."""
+    from repro.scenarios import get_scenario
+    from repro.scenarios import metrics as metrics_mod
+    from repro.scenarios.sweep import run_scenario_event
+
+    scenarios = ("chaos_steady", "chaos_recovery_storm", "chaos_stragglers")
+    seeds = (0, 1, 2, 3, 4) if full else (1, 3)
+    grid = (
+        ("ada", "static"),
+        ("srsf1", "static"),
+        ("srsf2", "static"),
+        ("ada", "preemptive_srsf"),
+    )
+    records: List[metrics_mod.RunMetrics] = []
+    by_cell: Dict[tuple, List[metrics_mod.RunMetrics]] = {}
+    storm_ratio: Dict[int, float] = {}
+    print(metrics_mod.RunMetrics.csv_header())
+    for name in scenarios:
+        for seed in seeds:
+            scn = get_scenario(name, seed=seed)
+            per_comm = {}
+            for comm, sched in grid:
+                t0 = time.time()
+                res = run_scenario_event(scn, comm=comm, sched=sched)
+                m = metrics_mod.from_event_result(
+                    res,
+                    scenario=name,
+                    seed=seed,
+                    n_jobs=scn.n_jobs,
+                    wall_s=time.time() - t0,
+                )
+                print(m.as_csv_row(), flush=True)
+                records.append(m)
+                by_cell.setdefault((name, comm, sched), []).append(m)
+                if sched == "static":
+                    per_comm[comm] = res.avg_jct()
+            if name == "chaos_recovery_storm":
+                storm_ratio[seed] = per_comm["ada"] / per_comm["srsf2"]
+    for (name, comm, sched), ms in sorted(by_cell.items()):
+        emit(
+            f"chaos/{name}/{comm}/{sched}",
+            sum(m.wall_s for m in ms) / len(ms) * 1e6,
+            f"goodput={sum(m.goodput for m in ms) / len(ms):.1f};"
+            f"work_lost={sum(m.work_lost for m in ms) / len(ms):.1f};"
+            f"p99_jct={sum(m.p99_jct for m in ms) / len(ms):.2f};"
+            f"faults={sum(m.faults for m in ms) / len(ms):.1f}",
+        )
+    mean_storm = sum(storm_ratio.values()) / len(storm_ratio)
+    emit(
+        "chaos/recovery_storm/ada_vs_srsf2",
+        0.0,
+        f"mean_ratio={mean_storm:.3f};"
+        + ";".join(f"seed{s}={r:.3f}" for s, r in sorted(storm_ratio.items())),
+    )
+    path = os.environ.get("REPRO_BENCH_CHAOS_JSON", "BENCH_chaos.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "full": full,
+                "seeds": list(seeds),
+                "cells": {
+                    f"{name}/{comm}/{sched}": {
+                        "goodput_mean": sum(m.goodput for m in ms) / len(ms),
+                        "work_lost_mean": sum(m.work_lost for m in ms) / len(ms),
+                        "p99_jct_mean": sum(m.p99_jct for m in ms) / len(ms),
+                        "avg_jct_mean": sum(m.avg_jct for m in ms) / len(ms),
+                        "faults_mean": sum(m.faults for m in ms) / len(ms),
+                        "cancelled": sum(m.cancelled for m in ms),
+                        "censored": sum(m.censored for m in ms),
+                    }
+                    for (name, comm, sched), ms in sorted(by_cell.items())
+                },
+                "recovery_storm_ada_over_srsf2": {
+                    str(s): r for s, r in sorted(storm_ratio.items())
+                },
+                "recovery_storm_ratio_mean": mean_storm,
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+
 # ---------------------------------------------------------------------------
 # Roofline table (from the dry-run artifact)
 # ---------------------------------------------------------------------------
@@ -581,6 +675,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "topology": bench_topology,
     "wfbp": bench_wfbp,
     "engine": bench_engine,
+    "chaos": bench_chaos,
     "roofline": bench_roofline,
 }
 

@@ -236,17 +236,22 @@ def kway_adadual_should_start(
     # old finishes, then (recursively) contends with the survivors.
     fin_olds = simulate_task_set([0.0] * k, olds, params)
     t_first = min(fin_olds)
-    # Remaining bytes of the surviving olds at t_first (all k contended
-    # from 0 to t_first, so each drained the same amount).
-    drained = t_first * params.rate(k)
+    # Remaining bytes of the surviving olds at t_first: all k contended from
+    # 0 to t_first, so each drained exactly the smallest task's bytes.
+    # (``t_first * rate(k)`` recomputes the same quantity through a
+    # division/multiplication round-trip whose float noise used to leave a
+    # ~1e-8-byte ghost survivor that was *also* counted as finished,
+    # skewing borderline decisions — use the exact value instead and keep
+    # done/survivors an exact partition of the olds.)
+    drained = min(olds)
     survivors = [m - drained for m in olds if m - drained > 1e-9]
     start_b = [0.0] * len(survivors) + [0.0]
     fin_b_rel = simulate_task_set(start_b, survivors + [new_bytes], params)
-    # completion of olds that finished at/before t_first:
-    done_before = [f for f in fin_olds if f <= t_first + 1e-12]
+    # olds that finished at t_first (ties with the smallest included):
+    n_done = k - len(survivors)
     avg_b = (
-        sum(done_before) + sum(t_first + f for f in fin_b_rel)
-    ) / (len(done_before) + len(fin_b_rel))
+        n_done * t_first + sum(t_first + f for f in fin_b_rel)
+    ) / (n_done + len(fin_b_rel))
     return avg_a < avg_b
 
 

@@ -160,6 +160,9 @@ class GpuState:
     busy_job: Optional[int] = None
     #: Total busy seconds accumulated (for the utilization metric).
     busy_accum: float = 0.0
+    #: Server is broken down (fault injection, core/chaos.py): excluded
+    #: from every placement and from compute scheduling until repair.
+    down: bool = False
 
     @property
     def gpu_id(self) -> GpuId:
@@ -213,7 +216,8 @@ class Cluster:
         return [
             g
             for g in self.gpus.values()
-            if g.mem_free_mb() >= mem_required_mb
+            if not g.down
+            and g.mem_free_mb() >= mem_required_mb
             and not (self.exclusive and g.resident_jobs)
         ]
 

@@ -33,6 +33,16 @@ memory admission with GPU time-sharing, pluggable communication gating
 (AdaDUAL / SRSF(n) / k-way) and placement, and the beyond-paper WFBP
 tensor-fusion subsystem.
 
+Fault injection (beyond-paper, ``core/chaos.py``): a :class:`ChaosSpec`
+arms seed-deterministic server breakdown/repair processes (a breakdown
+force-preempts every gang touching the dead server and marks its GPUs
+unplaceable until repair), transient per-server NIC degradation windows
+(per-server bandwidth multipliers, integrated exactly), per-iteration
+straggler jitter, and stochastic job cancellation.  Policies observe
+faults through the ``on_fault`` / ``on_recovery`` hooks.  An absent or
+inactive spec leaves the event stream bit-exact with the unfaulted
+engine.
+
 Progress accounting is in *samples* (per-GPU batches): a job's total work
 is ``iterations x nominal GPUs`` and each completed iteration contributes
 the current world size, so rigid jobs count exactly their ``iterations``
@@ -48,9 +58,16 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.core import netmodel
+from repro.core.chaos import (
+    ChaosSpec,
+    cancel_time,
+    jitter_factor,
+    nic_degradation_stream,
+    server_failure_stream,
+)
 from repro.core.cluster import Cluster, GpuId, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.placement import PlacementPolicy
@@ -233,6 +250,18 @@ class SimResult:
     preemptions: int = 0
     #: elastic world-size changes applied at iteration boundaries
     resizes: int = 0
+    #: fault injection (``core/chaos.py``): server breakdowns + NIC
+    #: degradation windows suffered, stochastic job cancellations, and the
+    #: samples of in-progress work thrown away by involuntary restarts
+    #: (every teardown loses the in-flight iteration; the carry keeps only
+    #: completed ones)
+    faults: int = 0
+    cancelled: int = 0
+    work_lost_samples: int = 0
+    #: delivered training throughput: samples completed by finished or
+    #: still-live jobs per second of makespan.  Cancelled jobs contribute
+    #: nothing — their partial progress was never delivered to anyone.
+    goodput: float = 0.0
     task_trace: Optional[List[Tuple]] = None  # (job, iter, kind, worker, t0, t1)
 
     def avg_jct(self) -> float:
@@ -243,6 +272,11 @@ class SimResult:
 
     def p95_jct(self) -> float:
         return percentile(list(self.jct.values()), 0.95)
+
+    def p99_jct(self) -> float:
+        """Tail JCT — the SLO statistic the chaos scenarios report (fault
+        restarts hit the tail far harder than the mean)."""
+        return percentile(list(self.jct.values()), 0.99)
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +307,7 @@ class EventEngine:
         sched: Union[SchedPolicy, str, None] = None,  # job scheduling policy
         preemption_quantum: Optional[float] = None,  # tick for named scheds
         checkpoint_cost: Optional[float] = None,  # None = netmodel model
+        chaos: Optional[ChaosSpec] = None,  # fault injection (core/chaos.py)
     ) -> None:
         self.jobs = {j.job_id: j for j in jobs}
         self.cluster = cluster or Cluster()
@@ -373,6 +408,19 @@ class EventEngine:
         self._preemptions = 0
         self._resizes = 0
         self._comm_dirty = False  # active comm set mutated outside gating
+        # Fault injection (core/chaos.py).  An absent or inactive spec keeps
+        # every chaos code path cold: no chaos events are ever pushed, so the
+        # event stream is bit-exact with the unfaulted engine (the zero-rate
+        # no-op, regression-locked in tests/test_chaos.py).
+        self._chaos = chaos if (chaos is not None and chaos.active) else None
+        self._faults = 0
+        self._cancelled = 0
+        self._work_lost_samples = 0
+        self._down_servers: Set[int] = set()
+        self._fail_streams: Dict[int, Iterator[Tuple[float, float]]] = {}
+        self._nic_streams: Dict[int, Iterator[Tuple[float, float]]] = {}
+        self._nic_degraded: Set[int] = set()
+        self._base_server_bw: Tuple[float, ...] = ()
         self.sched.bind(self)
 
     # -- policy-facing state views -------------------------------------------
@@ -495,6 +543,19 @@ class EventEngine:
         if t is not None:
             self._push(t, "comm_check", (self._comm_epoch,))
 
+    def _abort_comm(self, job_id: int) -> None:
+        """Abort ``job_id``'s in-flight all-reduce (preemption, breakdown,
+        cancellation).  Beyond dropping the task and its domain loads, this
+        flags ``_comm_dirty`` so the main loop both re-predicts the finish
+        times of the survivors (their rates just improved) *and* re-runs the
+        gating pass — a waiter that was gated against the aborted transfer
+        must get its lookahead re-evaluated against the freed domains in the
+        same event, not at the next unrelated comm event.  Locked by
+        ``tests/test_chaos.py::TestAbortedCommGating``."""
+        task = self._active_comm.pop(job_id)
+        self._comm_ended(task)
+        self._comm_dirty = True
+
     # -- WFBP fusion plans -------------------------------------------------------
     def _assign_plan(self, run: JobRun) -> None:
         """Attach the WFBP fusion plan to a freshly-placed run: per-bucket
@@ -585,6 +646,7 @@ class EventEngine:
         run = self._runs.pop(job_id)
         if run.finished_at is not None:
             raise ValueError(f"cannot preempt finished job {job_id}")
+        self._work_lost_samples += self._lost_in_progress(run)
         self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
         for gid in run.gpus:
             g = self.cluster.gpus[gid]
@@ -598,9 +660,7 @@ class EventEngine:
         if job_id in self._waiting_comm:
             self._waiting_comm.remove(job_id)
         if job_id in self._active_comm:
-            self._comm_ended(self._active_comm[job_id])
-            del self._active_comm[job_id]
-            self._comm_dirty = True  # rates changed: re-predict comm finish
+            self._abort_comm(job_id)
         self._carry[job_id] = _Carry(
             iter_done=run.iter_done,
             samples_done=run.samples_done,
@@ -665,6 +725,150 @@ class EventEngine:
             if self.record_trace:
                 self._trace.append((job_id, run.iter_done, "resize", -1, now, now))
         self.sched.on_resize(now, job_id)
+
+    # -- fault injection (core/chaos.py) ------------------------------------------
+    def _lost_in_progress(self, run: JobRun) -> int:
+        """Samples of in-iteration work a teardown throws away: the whole
+        gang's current iteration counts as lost if *any* worker made
+        progress in it (the carry keeps only completed iterations).  Must
+        be called before the per-GPU busy state is cleaned up."""
+        in_prog = bool(
+            run.f_done
+            or run.b_done
+            or run.comm_active
+            or run.comm_ready_at is not None
+            or (
+                run.plan is not None
+                and (run.next_bucket or run.buckets_done or any(run.b_prog))
+            )
+        )
+        if not in_prog:
+            # nothing recorded done yet, but a worker may be mid-task
+            in_prog = any(
+                self.cluster.gpus[gid].busy_job == run.spec.job_id
+                for gid in run.gpus
+            )
+        return run.n_world if in_prog else 0
+
+    def _seed_chaos_events(self) -> None:
+        """Arm the fault processes at run start: one outstanding breakdown /
+        NIC window per server (advanced lazily, so the infinite stochastic
+        streams never flood the calendar) plus every job's cancellation
+        instant."""
+        spec = self._chaos
+        self._base_server_bw = tuple(self.params.server_bandwidth)
+        for s in range(self.cluster.n_servers):
+            self._fail_streams[s] = server_failure_stream(spec, s)
+            self._advance_failure(s)
+            self._nic_streams[s] = nic_degradation_stream(spec, s)
+            self._advance_nic(s)
+        for job in self.jobs.values():
+            t_c = cancel_time(spec, job.job_id, job.arrival)
+            if t_c is not None:
+                # the arrival event was pushed first, so a same-instant
+                # cancellation still finds the job in the queue
+                self._push(max(t_c, job.arrival), "cancel", (job.job_id,))
+
+    def _advance_failure(self, server: int) -> None:
+        win = next(self._fail_streams[server], None)
+        if win is not None:
+            self._push(win[0], "breakdown", (server, win[1]))
+
+    def _advance_nic(self, server: int) -> None:
+        win = next(self._nic_streams[server], None)
+        if win is not None:
+            self._push(win[0], "nic_down", (server, win[1]))
+
+    def _on_breakdown(self, server: int, repair_t: float, now: float) -> None:
+        """A server died: force-preempt every gang touching it (atomic
+        teardown through the normal preempt machinery — epoch tombstones,
+        carry at the last completed iteration, restore penalty on resume)
+        and mark its GPUs unplaceable until repair."""
+        self._faults += 1
+        self._down_servers.add(server)
+        for g in self.cluster.gpus_of_server(server):
+            g.down = True
+        victims = sorted(
+            jid
+            for jid, run in self._runs.items()
+            if run.finished_at is None and server in run.servers
+        )
+        for jid in victims:
+            self.preempt_job(jid, now)
+        self._push(repair_t, "repair", (server,))
+        self.sched.on_fault(now, server, victims)
+
+    def _on_repair(self, server: int, now: float) -> None:
+        self._down_servers.discard(server)
+        for g in self.cluster.gpus_of_server(server):
+            g.down = False
+        self._advance_failure(server)
+        self.sched.on_recovery(now, server)
+
+    def _apply_nic_bandwidth(self) -> None:
+        """Rebuild ``params.server_bandwidth`` from the base multipliers and
+        the currently-degraded set.  The main loop integrated all in-flight
+        transfers up to ``now`` *before* dispatching this event, so the
+        piecewise-constant-rate integration stays exact across the change;
+        ``_comm_dirty`` forces the finish-time re-prediction."""
+        scale = self._chaos.nic_degraded_scale
+        base = self._base_server_bw
+        self.params = dataclasses.replace(
+            self.params,
+            server_bandwidth=tuple(
+                (base[s] if s < len(base) else 1.0)
+                * (scale if s in self._nic_degraded else 1.0)
+                for s in range(self.cluster.n_servers)
+            ),
+        )
+        self._comm_dirty = True
+
+    def _on_nic_down(self, server: int, end_t: float, now: float) -> None:
+        self._faults += 1
+        self._nic_degraded.add(server)
+        self._apply_nic_bandwidth()
+        self._push(end_t, "nic_up", (server,))
+
+    def _on_nic_up(self, server: int, now: float) -> None:
+        self._nic_degraded.discard(server)
+        self._apply_nic_bandwidth()
+        self._advance_nic(server)
+
+    def _on_cancel(self, job_id: int, now: float) -> None:
+        """Stochastic cancellation: the job leaves the system — running
+        gangs are torn down atomically (same mechanics as a preemption,
+        without the requeue), queued jobs just leave the queue.  Cancelled
+        jobs are counted separately from ``censored`` (they are not silent
+        truncation) and contribute nothing to JCT stats or goodput."""
+        if job_id not in self._unfinished:
+            return  # finished before the axe fell
+        run = self._runs.get(job_id)
+        if run is not None:
+            self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
+            self._work_lost_samples += self._lost_in_progress(run)
+            del self._runs[job_id]
+            for gid in run.gpus:
+                g = self.cluster.gpus[gid]
+                if g.busy_job == job_id:
+                    if g.busy_until is not None and g.busy_until > now:
+                        g.busy_accum -= g.busy_until - now
+                    g.busy_until = None
+                    g.busy_job = None
+                self._dirty_gpus.add(gid)
+            self.cluster.release(run.spec, run.gpus)
+            if job_id in self._waiting_comm:
+                self._waiting_comm.remove(job_id)
+            if job_id in self._active_comm:
+                self._abort_comm(job_id)
+            if self.record_trace:
+                self._trace.append((job_id, run.iter_done, "cancel", -1, now, now))
+        elif job_id in self._queue:
+            self._queue.remove(job_id)
+            self._carry.pop(job_id, None)
+        self._cancelled += 1
+        self._unfinished.discard(job_id)
+        # freed memory/GPUs (or a shorter queue) may admit other jobs
+        self.sched.on_job_finish(now, job_id)
 
     # -- communication gating -----------------------------------------------------
     def _try_start_comms(self, now: float) -> bool:
@@ -801,30 +1005,41 @@ class EventEngine:
                 w = run.gpus.index(gid)
             except ValueError:
                 continue
+            # Straggler jitter (core/chaos.py): per-(job, iteration) compute
+            # stretch, identical for every worker and segment of the
+            # iteration.  The restore penalty is a state reload, not
+            # compute — never jittered.
+            jit = (
+                jitter_factor(self._chaos, jid, run.iter_done)
+                if self._chaos is not None
+                else 1.0
+            )
             if run.plan is not None:
                 # WFBP: backward runs in per-bucket segments that overlap
                 # in-flight transfers — comm never blocks compute within
                 # the iteration (only the iteration boundary barriers).
                 if w not in run.f_done:
-                    yield (jid, w, "f", run.spec.model.t_f + self._restore_extra(run, w), -1)
+                    yield (jid, w, "f", run.spec.model.t_f * jit + self._restore_extra(run, w), -1)
                 elif run.b_prog[w] < run.n_buckets:
                     s = run.b_prog[w]
-                    yield (jid, w, "b", run.plan[1][s], s)
+                    yield (jid, w, "b", run.plan[1][s] * jit, s)
                 continue
             if run.comm_ready_at is not None or run.comm_active:
                 continue  # between barrier and next iteration
             if w not in run.f_done:
                 if self.fuse_fb:
-                    yield (jid, w, "fb", run.spec.model.t_iter_compute + self._restore_extra(run, w), -1)
+                    yield (jid, w, "fb", run.spec.model.t_iter_compute * jit + self._restore_extra(run, w), -1)
                 else:
-                    yield (jid, w, "f", run.spec.model.t_f + self._restore_extra(run, w), -1)
+                    yield (jid, w, "f", run.spec.model.t_f * jit + self._restore_extra(run, w), -1)
             elif w not in run.b_done:
-                yield (jid, w, "b", run.spec.model.t_b, -1)
+                yield (jid, w, "b", run.spec.model.t_b * jit, -1)
 
     def _schedule_gpus(self, now: float) -> None:
         for gid in list(self._dirty_gpus):
             self._dirty_gpus.discard(gid)
             g = self.cluster.gpus[gid]
+            if g.down:
+                continue  # broken server: nothing runs until repair
             # busy_job is cleared only by this GPU's own gpu_done event, so a
             # task ending exactly at `now` (event still in the heap) cannot be
             # double-scheduled by another same-timestamp event.
@@ -864,6 +1079,8 @@ class EventEngine:
         if self.sched.quantum is not None and self.jobs:
             first = min(s.arrival for s in self.jobs.values())
             self._push(first + self.sched.quantum, "quantum", ())
+        if self._chaos is not None:
+            self._seed_chaos_events()
         now = 0.0
         while self._heap and self._unfinished:
             t, _, kind, data = heapq.heappop(self._heap)
@@ -947,6 +1164,16 @@ class EventEngine:
                     self._push(now + self.sched.quantum, "quantum", ())
             elif kind == "comm_check":
                 pass  # generic comm processing above already handled it
+            elif kind == "breakdown":
+                self._on_breakdown(data[0], data[1], now)
+            elif kind == "repair":
+                self._on_repair(data[0], now)
+            elif kind == "nic_down":
+                self._on_nic_down(data[0], data[1], now)
+            elif kind == "nic_up":
+                self._on_nic_up(data[0], now)
+            elif kind == "cancel":
+                self._on_cancel(data[0], now)
 
             if finished_comms:
                 # job finishing via comm also frees memory
@@ -985,6 +1212,12 @@ class EventEngine:
         util = (
             sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
         )
+        # Delivered throughput: samples completed by finished or still-live
+        # jobs (runs + requeued carries).  Cancelled jobs left the system
+        # with their partial progress — not delivered, not counted.
+        delivered = sum(r.samples_done for r in self._runs.values()) + sum(
+            c.samples_done for c in self._carry.values()
+        )
         return SimResult(
             policy_name=self.comm_policy.name,
             placement_name=repr(self.placement),
@@ -998,8 +1231,16 @@ class EventEngine:
             comm_started_contended=self._comm_contended,
             comm_started_clean=self._comm_clean,
             sched_name=self.sched.name,
-            censored=len(self.jobs) - len(finish),
+            # cancelled jobs are an explicit outcome, not silent truncation:
+            # censored counts only jobs cut off by the horizon or stranded
+            # unplaced (a breakdown-preempted job still queued at max_time
+            # lands here — it must not vanish from the aggregates)
+            censored=len(self.jobs) - len(finish) - self._cancelled,
             preemptions=self._preemptions,
             resizes=self._resizes,
+            faults=self._faults,
+            cancelled=self._cancelled,
+            work_lost_samples=self._work_lost_samples,
+            goodput=(delivered / makespan) if makespan > 0 else 0.0,
             task_trace=self._trace if self.record_trace else None,
         )

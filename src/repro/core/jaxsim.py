@@ -11,9 +11,10 @@ with the exact event simulator; this module only supplies the fluid state
 machine around it.  Feature parity with the event backend:
 
 * every gating policy: AdaDUAL, SRSF(n), and k-way AdaDUAL (``kway2``/
-  ``kway3``/...) — for k-way the event backend does exact lookahead while
-  the fluid backend uses the branchless Theorem-2 ratio test capped at K
-  (documented approximation);
+  ``kway3``/...) — k-way runs the *exact* per-bucket lookahead
+  (``netmodel.kway_exact_start``, the closed form of the event backend's
+  option-A/option-B average-finish comparison, vectorized over the
+  overlap mask), not a threshold approximation;
 * per-server heterogeneous NIC bandwidth: each communication task drains
   at the rate of its slowest member server (no cluster-mean collapse);
 * fabric contention domains (``core/topology.py``): the topology's cut
@@ -149,22 +150,33 @@ def _place(free: jnp.ndarray, n_gpus: jnp.ndarray,
 #: :func:`_policy_args`); the inner simulator must never read cfg.policy.
 _DYNAMIC_POLICY = "<dynamic>"
 
+#: Sentinel for exact-lookahead (``kwayK``) policies: the per-candidate
+#: overlap mask and pairwise-min matmuls of ``netmodel.kway_exact_start``
+#: are a materially different graph, so exact k-way compiles separately
+#: while ada/srsf keep sharing the cheap threshold graph above.
+_EXACT_KWAY_POLICY = "<exact-kway>"
+
 
 def _policy_args(cfg: JaxSimConfig):
     """(max_ways, threshold_gated) as arrays + the policy-stripped static
-    config key shared by every gating policy."""
+    config key; threshold policies (ada/srsfN) all share one compiled
+    graph, exact-lookahead ``kwayK`` policies share another."""
     spec = netmodel.parse_policy(cfg.policy)
+    sentinel = _EXACT_KWAY_POLICY if spec.exact_lookahead else _DYNAMIC_POLICY
     return (
         jnp.asarray(spec.max_ways, jnp.float32),
         jnp.asarray(spec.threshold_gated, bool),
-        dataclasses.replace(cfg, policy=_DYNAMIC_POLICY),
+        dataclasses.replace(cfg, policy=sentinel),
     )
 
 
 def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated):
     n_jobs = trace["arrival"].shape[0]
     ns = cfg.n_servers
-    assert cfg.policy == _DYNAMIC_POLICY, "callers go through _policy_args"
+    assert cfg.policy in (_DYNAMIC_POLICY, _EXACT_KWAY_POLICY), (
+        "callers go through _policy_args"
+    )
+    exact_kway = cfg.policy == _EXACT_KWAY_POLICY
     placement = netmodel.canonical_placement(cfg.placement)
     bw = jnp.asarray(
         netmodel.server_bandwidth_array(cfg.server_bandwidth, ns), jnp.float32
@@ -328,18 +340,41 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
             min_old_rem = jnp.where(
                 overlap & active_now[None, :], rem[None, :], jnp.inf
             ).min(axis=1)
-            may_start = netmodel.may_start_dynamic(
-                k_would,
-                # proportional to M_new — the ratio test is unit-free.  For
-                # a waiting WFBP job ``rem`` is the current *bucket's* size
-                # (equal to comm_total while a monolithic job waits), so
-                # gating decides per bucket like the event backend.
-                rem if wfbp else comm_total,
-                min_old_rem,
-                max_ways,
-                gated,
-                cfg.dual_threshold,
-            )
+            # proportional to M_new — the gates are unit-free.  For a
+            # waiting WFBP job ``rem`` is the current *bucket's* size
+            # (equal to comm_total while a monolithic job waits), so
+            # gating decides per bucket like the event backend.
+            new_cost = rem if wfbp else comm_total
+            if exact_kway:
+                # Exact per-bucket k-way lookahead: row i of the mask marks
+                # the in-flight transfers overlapping candidate i's domains
+                # — the closed-form option-A/option-B comparison replaces
+                # the Theorem-2 threshold approximation.  Costs are comm
+                # *seconds* (the folded latency ``a`` rides along per
+                # bucket); the decision is scale-invariant, so the unit
+                # mismatch vs the event backend's raw bytes only perturbs
+                # borderline calls by the a-fold (documented in the module
+                # docstring).
+                may_start = netmodel.may_start_dynamic(
+                    k_would,
+                    new_cost,
+                    min_old_rem,
+                    max_ways,
+                    gated,
+                    cfg.dual_threshold,
+                    exact_kway_olds=overlap & active_now[None, :],
+                    rem=rem,
+                    eta_over_b=cfg.eta / cfg.b,
+                )
+            else:
+                may_start = netmodel.may_start_dynamic(
+                    k_would,
+                    new_cost,
+                    min_old_rem,
+                    max_ways,
+                    gated,
+                    cfg.dual_threshold,
+                )
             start_ok = waiting_now & may_start
             pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
             start_now = (

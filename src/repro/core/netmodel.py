@@ -247,14 +247,19 @@ class PolicySpec:
                         ``M_new < dual_threshold * min(M_old_remaining)``
                         when the start would contend (k_would > 1).
 
-    AdaDUAL is (2, gated); SRSF(n) is (n, blind); the k-way AdaDUAL
-    generalization is (K, gated) — the fluid backend's branchless stand-in
-    for the event backend's exact-lookahead k-way rule.
+    AdaDUAL is (2, gated); SRSF(n) is (n, blind).  The k-way AdaDUAL
+    generalization is (K, gated, exact): ``exact_lookahead`` routes the
+    fluid backend to :func:`kway_exact_start` — the closed-form equivalent
+    of the event backend's ``kway_adadual_should_start`` integrator —
+    instead of the Theorem 2 pairwise-threshold approximation.
     """
 
     name: str
     max_ways: int
     threshold_gated: bool
+    #: use the exact option-A/option-B average-finish-time comparison
+    #: (k-way policies) instead of the pairwise ratio test
+    exact_lookahead: bool = False
 
 
 def parse_policy(name: str) -> PolicySpec:
@@ -268,7 +273,7 @@ def parse_policy(name: str) -> PolicySpec:
         return PolicySpec("ada", 2, True)
     if name.startswith("srsf"):
         return PolicySpec(name, int(m.group(2)), False)
-    return PolicySpec(name, int(m.group(3)), True)
+    return PolicySpec(name, int(m.group(3)), True, exact_lookahead=True)
 
 
 def may_start(
@@ -315,6 +320,11 @@ def may_start_dynamic(
     max_ways,
     threshold_gated,
     dual_threshold: float,
+    *,
+    exact_kway_olds=None,
+    rem=None,
+    eta_over_b=None,
+    exact_tol: float = 1e-9,
 ):
     """:func:`may_start` with the policy parameters as *runtime* values
     (arrays/traced scalars) instead of Python statics.
@@ -327,12 +337,101 @@ def may_start_dynamic(
     trace shape instead of recompiling per policy.
 
     ``threshold_gated`` must be a boolean *array* (numpy or jax; ``~`` is
-    logical-not for those — a bare Python bool would bit-invert)."""
+    logical-not for those — a bare Python bool would bit-invert).
+
+    Exact k-way lookahead: when ``exact_kway_olds`` (a ``(J, J)`` boolean
+    matrix — row ``i`` marks the in-flight tasks overlapping candidate
+    ``i``'s domains) is supplied together with ``rem`` (per-job remaining
+    cost) and ``eta_over_b``, the threshold approximation above is replaced
+    by :func:`kway_exact_start` — the closed form of the event backend's
+    option-A/option-B average-finish-time comparison.  The fluid backend
+    routes ``kwayK`` policies here (``PolicySpec.exact_lookahead``)."""
+    if exact_kway_olds is not None:
+        return kway_exact_start(
+            new_cost, rem, exact_kway_olds, max_ways, eta_over_b, tol=exact_tol
+        )
     uncontended = k_would <= 1
     under_cap = k_would <= max_ways
     ratio_ok = new_cost < dual_threshold * min_old_rem
     contended_ok = under_cap & (ratio_ok | ~threshold_gated)
     return uncontended | contended_ok
+
+
+def _pairwise_min(x, y):
+    """Branchless elementwise min (broadcasting) that works identically on
+    numpy and jax arrays: ``min(x, y) = (x + y - |x - y|) / 2``."""
+    return 0.5 * (x + y - abs(x - y))
+
+
+def kway_exact_start(
+    new_cost,
+    rem,
+    olds_mask,
+    max_ways,
+    eta_over_b,
+    tol: float = 1e-9,
+):
+    """Exact k-way AdaDUAL gate, vectorized over candidates — the closed
+    form of ``core/adadual.py``'s ``kway_adadual_should_start`` integrator
+    (locked against it in tests/test_netmodel.py).
+
+    Under Eq. (5) fair sharing, a set ``S`` of tasks all active from one
+    instant with remaining sizes ``s_x`` finishes (in units where ``b = 1``,
+    with ``e = eta/b``) at::
+
+        t_x = (1 + e) * sum_y min(s_x, s_y)  -  e * s_x
+
+    (phase-by-phase telescoping of the piecewise-constant rates; the
+    latency ``a`` cancels from the A-vs-B comparison).  Summing over ``x``
+    turns the option averages into quadratic forms of the pairwise-min
+    matrix, so one batched masked matmul evaluates every candidate's
+    lookahead at once — no per-candidate integration loop, and it jits.
+
+    * Option A (start now): ``S = olds ∪ {new}``.
+    * Option B (wait): the olds run alone until the smallest finishes at
+      ``t1 = m_min * (k + (k-1)e)``; every survivor has drained exactly
+      ``m_min``, then ``{survivors - m_min} ∪ {new}`` are simultaneous —
+      the same closed form, shifted (``min(a-c, b-c) = min(a,b) - c``).
+
+    Args:
+      new_cost: ``(J,)`` remaining cost of each candidate's next transfer
+        (the current WFBP *bucket* for bucketed traces — the per-bucket
+        check — or the whole message for monolithic ones).  Any unit
+        proportional to bytes: the decision is scale-invariant.
+      rem: ``(J,)`` remaining cost of each job's in-flight transfer.
+      olds_mask: ``(J, J)`` boolean; row ``i`` marks in-flight tasks
+        overlapping candidate ``i``'s contention domains.
+      max_ways: cap K (scalar or array) — reject when ``k + 1 > K``.
+      eta_over_b: the contention penalty ratio ``eta / b``.
+      tol: survivor threshold matching the event integrator's 1e-9.
+
+    Returns a boolean ``(J,)`` — True where starting now gives a strictly
+    smaller average finish time (or the candidate is uncontended).
+    """
+    e = eta_over_b
+    big = 1e30  # f32-safe "no old task" sentinel
+    olds = olds_mask * 1.0  # (J, J) float mask
+    k = olds.sum(-1)  # (J,) in-flight tasks overlapping each candidate
+    m = _pairwise_min(rem[..., None], rem[None, :])  # (J, J) pairwise mins
+    # Option A — olds ∪ {new} simultaneous from now:
+    q_a = ((olds @ m) * olds).sum(-1)  # sum_{j,l in olds} min(m_j, m_l)
+    cross_a = (olds * _pairwise_min(new_cost[..., None], rem[None, :])).sum(-1)
+    pairmin_a = q_a + 2.0 * cross_a + new_cost
+    sum_a = (olds * rem[None, :]).sum(-1) + new_cost
+    avg_a = ((1.0 + e) * pairmin_a - e * sum_a) / (k + 1.0)
+    # Option B — wait for the first old to finish, then start:
+    m_min = (rem[None, :] * olds + big * (1.0 - olds)).min(-1) * (k > 0)
+    t1 = m_min * (k + (k - 1.0) * e)
+    shifted = rem[None, :] - m_min[..., None]  # survivor sizes after t1
+    sv = olds * (shifted > tol)
+    kp = sv.sum(-1)
+    q_sv = ((sv @ m) * sv).sum(-1) - kp * kp * m_min  # shifted quadratic form
+    cross_b = (sv * _pairwise_min(shifted, new_cost[..., None])).sum(-1)
+    pairmin_b = q_sv + 2.0 * cross_b + new_cost
+    sum_b = (sv * shifted).sum(-1) + new_cost
+    f_b = (1.0 + e) * pairmin_b - e * sum_b
+    avg_b = t1 + f_b / (k + 1.0)
+    return (k <= 0) | ((k + 1.0 <= max_ways) & (avg_a < avg_b))
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +530,7 @@ __all__ = [
     "domain_loads",
     "fusion_plan",
     "fusion_threshold",
+    "kway_exact_start",
     "may_start",
     "may_start_dynamic",
     "parse_policy",

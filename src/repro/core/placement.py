@@ -88,7 +88,8 @@ def place_lwf_rack(
             gpus = [
                 g
                 for g in cluster.gpus_of_server(s)
-                if g.mem_free_mb() >= job.model.mem_mb
+                if not g.down
+                and g.mem_free_mb() >= job.model.mem_mb
                 and not (cluster.exclusive and g.resident_jobs)
             ]
             gpus.sort(key=lambda g: (g.workload, g.gpu_id))

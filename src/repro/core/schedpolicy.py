@@ -159,6 +159,18 @@ class SchedPolicy:
         """The engine applied a pending resize of ``job_id`` at an
         iteration boundary (capacity may have been freed)."""
 
+    def on_fault(self, now: float, server: int, victims: Sequence[int]) -> None:
+        """A server broke down (fault injection, ``core/chaos.py``): its
+        gangs (``victims``) were force-preempted and requeued, its GPUs are
+        unplaceable until repair.  The surviving capacity may still admit
+        the victims (or other queued jobs) elsewhere."""
+
+    def on_recovery(self, now: float, server: int) -> None:
+        """A broken server came back: its GPUs are placeable again.  This
+        is the synchronized re-admission instant the chaos recovery-storm
+        scenarios probe — every job queued behind the failure competes for
+        placement (and then for bandwidth) at once."""
+
 
 class StaticGangPolicy(SchedPolicy):
     """The paper's Algorithm 3 admission — SRSF-ordered queue scan, gang
@@ -181,6 +193,16 @@ class StaticGangPolicy(SchedPolicy):
         self._place_queue(now)
 
     def on_resize(self, now: float, job_id: int) -> None:
+        self._place_queue(now)
+
+    def on_fault(self, now: float, server: int, victims: Sequence[int]) -> None:
+        # surviving servers may still fit the requeued victims (or other
+        # queued jobs whose LWF ranking just changed)
+        self._place_queue(now)
+
+    def on_recovery(self, now: float, server: int) -> None:
+        # synchronized re-admission: everything queued behind the failure
+        # competes for the repaired capacity in one SRSF-ordered scan
         self._place_queue(now)
 
     def _place_queue(self, now: float) -> None:
@@ -365,6 +387,18 @@ class ElasticPolicy(StaticGangPolicy):
 
     def on_resize(self, now: float, job_id: int) -> None:
         self._place_queue(now)
+
+    def on_fault(self, now: float, server: int, victims: Sequence[int]) -> None:
+        # capacity just shrank: re-place what fits, then shrink elastic
+        # gangs so the breakdown's victims get back in sooner
+        self._place_queue(now)
+        self._shrink_for_queue(now)
+
+    def on_recovery(self, now: float, server: int) -> None:
+        # repaired capacity: queue first, then grow elastic gangs into
+        # whatever the re-admitted jobs left free
+        self._place_queue(now)
+        self._grow_into_free(now)
 
     def _shrink_for_queue(self, now: float) -> None:
         """Request boundary shrinks of elastic gangs until the freed GPU

@@ -44,6 +44,7 @@ from __future__ import annotations
 import math
 from typing import Optional, Sequence, Union
 
+from repro.core.chaos import ChaosSpec  # noqa: F401  (re-export)
 from repro.core.cluster import Cluster, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.engine import (  # noqa: F401  (re-exports)
@@ -96,6 +97,7 @@ def simulate(
     sched: Union[SchedPolicy, str, None] = None,
     preemption_quantum: Optional[float] = None,
     checkpoint_cost: Optional[float] = None,
+    chaos: Optional[ChaosSpec] = None,
     max_time: float = math.inf,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
@@ -119,6 +121,9 @@ def simulate(
     hold-until-completion gang scheduling.  preemption_quantum overrides
     the named policy's tick period; checkpoint_cost overrides the
     netmodel.preemption_cost checkpoint/restore penalty [s].
+    chaos (a ``core/chaos.py`` ChaosSpec) arms fault injection: server
+    breakdown/repair, NIC degradation windows, straggler jitter, and
+    stochastic cancellation — event backend only.
     max_time cuts the simulation at a horizon — jobs still running are
     reported in ``SimResult.censored`` (0 when the run drains fully).
     """
@@ -144,5 +149,6 @@ def simulate(
         sched=sched,
         preemption_quantum=preemption_quantum,
         checkpoint_cost=checkpoint_cost,
+        chaos=chaos,
     )
     return sim.run(max_time=max_time)

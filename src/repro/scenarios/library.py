@@ -46,6 +46,7 @@ import math
 import random
 from typing import List, Optional, Sequence, Tuple
 
+from repro.core.chaos import ChaosSpec
 from repro.core.cluster import TABLE_III, JobSpec, ModelProfile
 from repro.core.contention import ContentionParams
 from repro.core.topology import two_tier
@@ -73,6 +74,9 @@ QUICK_OVERRIDES = {
     "preemption_gain": {},
     "elastic_surge": {},
     "smoke": {},
+    "chaos_steady": {},
+    "chaos_recovery_storm": {},
+    "chaos_stragglers": {},
 }
 
 
@@ -806,4 +810,169 @@ def smoke(seed: int = 0, n_servers: int = 4, gpus_per_server: int = 2) -> Scenar
         gpus_per_server=gpus_per_server,
         jobs=jobs,
         params=ContentionParams(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 15-17. Chaos family: fault injection (core/chaos.py), event-backend only.
+#
+# Registered specs keep cancel_prob=0 so every job eventually finishes
+# (the universal censored==0 / len(jct)==n_jobs locks stay meaningful);
+# cancellation is exercised by the unit tests in tests/test_chaos.py.
+# ---------------------------------------------------------------------------
+
+
+def _chaos_mixed_jobs(
+    rng: random.Random,
+    n_jobs: int,
+    horizon_s: float,
+    iters: Tuple[int, int],
+    big_frac: float,
+    gpus_per_server: int,
+) -> List[JobSpec]:
+    """Seed-random mix of single-GPU mice and multi-server gangs (the jobs
+    whose all-reduce a breakdown actually aborts)."""
+    jobs = []
+    for jid in range(n_jobs):
+        if rng.random() < big_frac:
+            n_gpus = gpus_per_server * rng.choice((1, 2))
+            model = _sample_models(rng)
+        else:
+            n_gpus = rng.choice((1, 2))
+            model = TABLE_III["resnet50"]
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival=float(int(rng.uniform(0.0, horizon_s))),
+                n_gpus=n_gpus,
+                iterations=rng.randint(*iters),
+                model=model,
+            )
+        )
+    return jobs
+
+
+@register(
+    "chaos_steady",
+    "Steady-state faults: stochastic per-server exponential MTBF/MTTR "
+    "breakdowns plus mild straggler jitter over a mixed mouse/gang "
+    "workload — the SLO cell (goodput under faults, work lost to "
+    "restarts, p99 JCT) of the nightly chaos grid",
+)
+def chaos_steady(
+    seed: int = 0,
+    n_jobs: int = 24,
+    horizon_s: float = 120.0,
+    min_iters: int = 60,
+    max_iters: int = 300,
+    server_mtbf_s: float = 900.0,
+    server_mttr_s: float = 25.0,
+    straggler_prob: float = 0.02,
+    straggler_slowdown: float = 0.5,
+    n_servers: int = 8,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = _chaos_mixed_jobs(
+        rng, n_jobs, horizon_s, (min_iters, max_iters), 0.4, gpus_per_server
+    )
+    return Scenario(
+        name="chaos_steady",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        chaos=ChaosSpec(
+            seed=seed,
+            server_mtbf_s=server_mtbf_s,
+            server_mttr_s=server_mttr_s,
+            straggler_prob=straggler_prob,
+            straggler_slowdown=straggler_slowdown,
+        ),
+    )
+
+
+@register(
+    "chaos_recovery_storm",
+    "Rack-repair recovery storm: half the servers fail at one scripted "
+    "instant and all repair together, so every preempted gang re-admits "
+    "simultaneously and their catch-up all-reduces collide — the cell "
+    "behind the regression-locked finding on whether contention-aware "
+    "gating helps or hurts synchronized re-admission "
+    "(tests/test_chaos.py::TestRecoveryStormFinding)",
+)
+def chaos_recovery_storm(
+    seed: int = 0,
+    n_jobs: int = 20,
+    horizon_s: float = 60.0,
+    min_iters: int = 80,
+    max_iters: int = 260,
+    fail_at: float = 70.0,
+    repair_at: float = 100.0,
+    n_servers: int = 8,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    # gang-heavy mix: the storm is about colliding catch-up all-reduces
+    jobs = _chaos_mixed_jobs(
+        rng, n_jobs, horizon_s, (min_iters, max_iters), 0.7, gpus_per_server
+    )
+    dead_rack = tuple(range(n_servers // 2))
+    return Scenario(
+        name="chaos_recovery_storm",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        chaos=ChaosSpec(
+            seed=seed,
+            scripted_failures=tuple(
+                (s, fail_at, repair_at) for s in dead_rack
+            ),
+        ),
+    )
+
+
+@register(
+    "chaos_stragglers",
+    "Straggler-heavy cell: frequent large compute jitter plus transient "
+    "NIC degradation windows, no breakdowns — isolates the slow-worker / "
+    "slow-link tail (every gang iterates at its slowest member) from the "
+    "fault-restart dynamics of chaos_steady",
+)
+def chaos_stragglers(
+    seed: int = 0,
+    n_jobs: int = 24,
+    horizon_s: float = 120.0,
+    min_iters: int = 60,
+    max_iters: int = 300,
+    straggler_prob: float = 0.15,
+    straggler_slowdown: float = 2.0,
+    nic_mtbf_s: float = 600.0,
+    nic_mttr_s: float = 40.0,
+    nic_degraded_scale: float = 0.3,
+    n_servers: int = 8,
+    gpus_per_server: int = 4,
+) -> Scenario:
+    rng = random.Random(seed)
+    jobs = _chaos_mixed_jobs(
+        rng, n_jobs, horizon_s, (min_iters, max_iters), 0.5, gpus_per_server
+    )
+    return Scenario(
+        name="chaos_stragglers",
+        seed=seed,
+        n_servers=n_servers,
+        gpus_per_server=gpus_per_server,
+        jobs=_finalize(jobs),
+        params=ContentionParams(),
+        chaos=ChaosSpec(
+            seed=seed,
+            straggler_prob=straggler_prob,
+            straggler_slowdown=straggler_slowdown,
+            nic_mtbf_s=nic_mtbf_s,
+            nic_mttr_s=nic_mttr_s,
+            nic_degraded_scale=nic_degraded_scale,
+        ),
     )

@@ -39,6 +39,11 @@ CSV_FIELDS = (
     "comm_clean",
     "preemptions",
     "resizes",
+    "faults",
+    "cancelled",
+    "work_lost",
+    "p99_jct",
+    "goodput",
     "wall_s",
 )
 
@@ -69,6 +74,17 @@ class RunMetrics:
     #: gang preemptions / elastic resizes performed during the run
     preemptions: int = 0
     resizes: int = 0
+    #: fault-injection SLO metrics (core/chaos.py; zero on fault-free runs):
+    #: fault events injected (server breakdowns + NIC degradation
+    #: windows), jobs stochastically cancelled, samples
+    #: of in-progress iterations lost to fault/preemption restarts, tail
+    #: JCT, and goodput — delivered samples (finished + partial progress
+    #: carried by preempted jobs) per second of makespan
+    faults: int = 0
+    cancelled: int = 0
+    work_lost: int = 0
+    p99_jct: float = math.nan
+    goodput: float = 0.0
 
     def as_csv_row(self) -> str:
         vals = []
@@ -100,6 +116,11 @@ def from_jcts(
     censored: Optional[int] = None,
     preemptions: int = 0,
     resizes: int = 0,
+    faults: int = 0,
+    cancelled: int = 0,
+    work_lost: int = 0,
+    p99_jct: Optional[float] = None,
+    goodput: float = 0.0,
 ) -> RunMetrics:
     jcts = [float(x) for x in jcts]
     n_fin = len(jcts)
@@ -123,6 +144,11 @@ def from_jcts(
         censored=(n_jobs - n_fin) if censored is None else censored,
         preemptions=preemptions,
         resizes=resizes,
+        faults=faults,
+        cancelled=cancelled,
+        work_lost=work_lost,
+        p99_jct=percentile(jcts, 0.99) if p99_jct is None else float(p99_jct),
+        goodput=goodput,
     )
 
 
@@ -151,6 +177,11 @@ def from_event_result(
         censored=res.censored,
         preemptions=res.preemptions,
         resizes=res.resizes,
+        faults=res.faults,
+        cancelled=res.cancelled,
+        work_lost=res.work_lost_samples,
+        p99_jct=res.p99_jct(),
+        goodput=res.goodput,
     )
 
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.chaos import ChaosSpec
 from repro.core.cluster import Cluster, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.topology import Topology
@@ -67,6 +68,11 @@ class Scenario:
     #: time-sharing).  The regime where gang preemption is the only way a
     #: waiting job can take resources from a running one.
     exclusive_gpus: bool = False
+    #: Fault-injection spec (core/chaos.py): server breakdown/repair, NIC
+    #: degradation windows, straggler jitter, stochastic cancellation.
+    #: Event-only — the fluid backend's static traces cannot express gang
+    #: teardown mid-run (sweep.py raises; see the parity matrix).
+    chaos: Optional["ChaosSpec"] = None
 
     def make_cluster(self) -> Cluster:
         """A fresh (mutable) cluster — one per simulation run."""

@@ -6,9 +6,10 @@
 * :func:`run_scenario_fluid` — one vectorized fluid (JAX) simulation of the
   same scenario through the ``core/jaxsim.py`` fixed-trace entry point.
   Feature parity via the shared ``core/netmodel.py`` layer: every gating
-  policy (AdaDUAL, SRSF(n), k-way), per-server heterogeneous bandwidth, and
-  three gang placement modes.  Remaining approximations: gang-exclusive
-  placement, fixed dt, branchless (threshold) k-way gating.
+  policy (AdaDUAL, SRSF(n), exact closed-form k-way), per-server
+  heterogeneous bandwidth, and three gang placement modes.  Remaining
+  approximations: gang-exclusive placement, fixed dt.  Fault injection
+  (``Scenario.chaos``) is event-only — :func:`fluid_config` raises.
 * :func:`sweep` — the full matrix, optionally fanned out over a
   ``multiprocessing`` pool (event backend only: jax jits don't fork well),
   returning one :class:`~repro.scenarios.metrics.RunMetrics` per cell.
@@ -72,6 +73,7 @@ def run_scenario_event(
     sim_kw.setdefault("preemption_quantum", scenario.preemption_quantum)
     sim_kw.setdefault("checkpoint_cost", scenario.checkpoint_cost)
     sim_kw.setdefault("exclusive_gpus", scenario.exclusive_gpus)
+    sim_kw.setdefault("chaos", scenario.chaos)
     max_time = sim_kw.pop("max_time", math.inf)  # run() arg, not ctor
     sim = ClusterSimulator(
         jobs,
@@ -106,6 +108,12 @@ def fluid_config(
     if comm not in FLUID_POLICIES:
         raise ValueError(
             f"fluid backend supports {FLUID_POLICIES}, got {comm!r}"
+        )
+    if scenario.chaos is not None and scenario.chaos.active:
+        raise ValueError(
+            f"scenario {scenario.name!r} arms fault injection (chaos=), "
+            "which is event-backend only: the fluid backend's static "
+            "traces cannot express mid-run gang teardown/repair"
         )
     p = scenario.params
     gang_mode = netmodel.canonical_placement(placement)

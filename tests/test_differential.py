@@ -3,8 +3,8 @@
 (``core/jaxsim.py``).
 
 The fluid backend is a documented approximation (gang-exclusive placement,
-fixed dt, single admission per step, threshold-approximated k-way gating),
-so agreement is *qualitative*: completeness, bounded JCT/makespan ratios,
+fixed dt, single admission per step), so agreement is *qualitative*:
+completeness, bounded JCT/makespan ratios,
 determinism, matching policy/placement orderings, and the no-contention
 limit where both backends are exact.
 
@@ -45,6 +45,14 @@ DT = 0.02
 #: fluid-vs-event tolerance on aggregate metrics (gang placement makes the
 #: fluid backend pessimistic on shared-GPU scenarios)
 RATIO = 2.0
+
+#: Tightened tolerance for the WFBP fusion cells: with k-way gating now
+#: *exact* on both backends (netmodel.kway_exact_start — the same closed
+#: form the event integrator computes), the remaining gap is only the
+#: fluid backend's non-overlap of bucket streams with backward compute
+#: plus dt quantization.  Measured worst case across the fusion cells
+#: (ada/srsf2/kway2/kway3 on fusion_sweep + model_zoo): 1.21.
+FUSION_RATIO = 1.35
 
 #: Downsized hetero_bandwidth cell: small enough for tier-1, large enough
 #: that half the servers being 0.4x slow actually shapes the schedule.
@@ -315,25 +323,34 @@ class TestModelZoo:
     def zoo(self):
         return get_scenario("model_zoo", **self.ZOO_KW)
 
-    @pytest.mark.parametrize("comm", ["ada", "srsf2"])
+    @pytest.mark.parametrize("comm", ["ada", "srsf2", "kway2", "kway3"])
     def test_agrees_with_event(self, zoo, comm):
         ev = run_scenario_event(zoo, comm=comm)
         fl = run_scenario_fluid(zoo, comm=comm, dt=0.02)
         assert len(ev.jct) == zoo.n_jobs
         assert int(fl["finished"].sum()) == zoo.n_jobs
-        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+        assert (
+            ev.avg_jct() / FUSION_RATIO
+            <= fluid_avg(fl)
+            <= ev.avg_jct() * FUSION_RATIO
+        )
 
-    def test_fusion_sweep_cell_agrees(self):
+    @pytest.mark.parametrize("comm", ["ada", "kway3"])
+    def test_fusion_sweep_cell_agrees(self, comm):
         from repro.scenarios import QUICK_OVERRIDES
 
         # dt=0.01 shares the compiled graph with
         # test_fluid_deterministic_with_buckets below (same config)
         scn = get_scenario("fusion_sweep", seed=1, **QUICK_OVERRIDES["fusion_sweep"])
-        ev = run_scenario_event(scn, comm="ada")
-        fl = run_scenario_fluid(scn, comm="ada", dt=0.01)
+        ev = run_scenario_event(scn, comm=comm)
+        fl = run_scenario_fluid(scn, comm=comm, dt=0.01)
         assert len(ev.jct) == scn.n_jobs
         assert int(fl["finished"].sum()) == scn.n_jobs
-        assert ev.avg_jct() / RATIO <= fluid_avg(fl) <= ev.avg_jct() * RATIO
+        assert (
+            ev.avg_jct() / FUSION_RATIO
+            <= fluid_avg(fl)
+            <= ev.avg_jct() * FUSION_RATIO
+        )
 
     def test_fluid_deterministic_with_buckets(self):
         from repro.scenarios import QUICK_OVERRIDES

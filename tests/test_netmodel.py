@@ -73,7 +73,9 @@ class TestParsePolicy:
         assert netmodel.parse_policy("ada") == netmodel.PolicySpec("ada", 2, True)
         assert netmodel.parse_policy("srsf1") == netmodel.PolicySpec("srsf1", 1, False)
         assert netmodel.parse_policy("srsf3") == netmodel.PolicySpec("srsf3", 3, False)
-        assert netmodel.parse_policy("kway3") == netmodel.PolicySpec("kway3", 3, True)
+        assert netmodel.parse_policy("kway3") == netmodel.PolicySpec(
+            "kway3", 3, True, exact_lookahead=True
+        )
 
     @pytest.mark.parametrize("bad", ["", "srsf0", "kway1", "lwf", "adadual"])
     def test_unknown_raises(self, bad):
@@ -148,6 +150,79 @@ class TestMayStart:
                     P.dual_threshold,
                 )
                 np.testing.assert_array_equal(ref, dyn, err_msg=f"{max_ways}/{gated}")
+
+
+class TestKwayExactStart:
+    """The closed-form exact k-way gate must agree decision-for-decision
+    with the event backend's integrator-based reference
+    (``adadual.kway_adadual_should_start``)."""
+
+    E = P.eta / P.b
+
+    def _closed(self, new_bytes, olds, max_ways):
+        k = len(olds)
+        rem = np.array([new_bytes] + list(olds), dtype=np.float64)
+        new_cost = np.array([new_bytes] + [0.0] * k)
+        mask = np.zeros((k + 1, k + 1), dtype=bool)
+        mask[0, 1:] = True
+        return bool(
+            netmodel.kway_exact_start(new_cost, rem, mask, float(max_ways), self.E)[0]
+        )
+
+    def test_uncontended_always_starts(self):
+        assert self._closed(123e6, [], 4)
+
+    def test_max_ways_cap(self):
+        olds = [100e6, 200e6, 300e6]
+        assert not self._closed(1e6, olds, 3)  # k+1 = 4 > 3
+
+    def test_matches_integrator_reference(self):
+        from repro.core.adadual import kway_adadual_should_start
+
+        rng = np.random.default_rng(7)
+        for _ in range(300):
+            k = int(rng.integers(0, 5))
+            olds = list(rng.uniform(1e6, 8e8, k))
+            new = float(rng.uniform(1e6, 8e8))
+            max_ways = int(rng.integers(2, 6))
+            ref = kway_adadual_should_start(new, olds, P, max_ways=max_ways)
+            assert self._closed(new, olds, max_ways) == ref, (new, olds, max_ways)
+
+    def test_matches_integrator_on_exact_ties(self):
+        from repro.core.adadual import kway_adadual_should_start
+
+        for k in (1, 2, 3):
+            for ratio in (0.01, 0.4, P.dual_threshold, 1.0, 2.0):
+                s = 3e8
+                olds = [s] * k
+                new = ratio * s
+                ref = kway_adadual_should_start(new, olds, P, max_ways=4)
+                assert self._closed(new, olds, 4) == ref, (k, ratio)
+
+    def test_batched_rows_independent(self):
+        """A batch of candidate rows must reproduce the per-row answers."""
+        rem = np.array([50e6, 200e6, 150e6, 400e6])
+        new_cost = np.array([50e6, 0.0, 150e6, 0.0])
+        mask = np.zeros((4, 4), dtype=bool)
+        mask[0, [1, 3]] = True   # candidate 0 vs olds {1, 3}
+        mask[2, 1] = True        # candidate 2 vs old {1}
+        out = netmodel.kway_exact_start(new_cost, rem, mask, 4.0, self.E)
+        assert bool(out[0]) == self._closed(50e6, [200e6, 400e6], 4)
+        assert bool(out[2]) == self._closed(150e6, [200e6], 4)
+
+    def test_finish_times_match_integrator(self):
+        """The closed form T_x = (1+e)*sum_y min(s_x, s_y) - e*s_x that the
+        gate is built on must match the exact piecewise integrator."""
+        from repro.core.adadual import simulate_task_set
+
+        rng = np.random.default_rng(3)
+        for _ in range(50):
+            k = int(rng.integers(1, 6))
+            sizes = rng.uniform(1e6, 8e8, k)
+            ref = simulate_task_set([0.0] * k, list(sizes), P)
+            m = np.minimum(sizes[:, None], sizes[None, :])
+            closed = (P.b + P.eta) * m.sum(axis=1) - P.eta * sizes
+            np.testing.assert_allclose(closed, ref, rtol=1e-9)
 
 
 class TestPlacementRank:

@@ -40,6 +40,13 @@ REGRESSION_SEEDS = {
     "preemption_gain": 2,
     "elastic_surge": 1,
     "smoke": 0,
+    # chaos cells run their registered fault specs (event-only); seeds
+    # verified to keep every ordering AND inject faults (faults > 0).
+    # The recovery-storm gating finding is locked separately in
+    # tests/test_chaos.py::TestRecoveryStormFinding on its own seeds.
+    "chaos_steady": 1,
+    "chaos_recovery_storm": 3,
+    "chaos_stragglers": 1,
 }
 REGRESSION_CELLS = {
     name: (seed, QUICK_OVERRIDES[name]) for name, seed in REGRESSION_SEEDS.items()
@@ -137,10 +144,25 @@ class TestScenarioInvariants:
         """Every regression cell must drain completely: the explicit
         ``SimResult.censored`` count (jobs cut off by a ``max_time``
         horizon, which used to vanish silently from the JCT stats) is
-        asserted zero so truncation can never corrupt a locked ordering."""
+        asserted zero so truncation can never corrupt a locked ordering.
+        This includes every chaos cell: a breakdown-preempted job still
+        queued when the run drains would show up here, not vanish."""
         res = sim(name, comm="ada")
         assert res.censored == 0
         assert len(res.jct) == small(name).n_jobs
+
+    @pytest.mark.parametrize(
+        "name", [n for n in sorted(REGRESSION_CELLS) if n.startswith("chaos_")]
+    )
+    def test_chaos_cells_actually_inject(self, name):
+        """A chaos regression cell whose spec never fires would silently
+        degenerate to its fault-free baseline — require the injector to
+        land at least one fault event at the locked seed."""
+        scn = small(name)
+        assert scn.chaos is not None and scn.chaos.active
+        res = sim(name, comm="ada")
+        assert res.faults > 0
+        assert res.goodput > 0.0
 
     def test_topology_scenarios_carry_a_fabric(self):
         for name in ("oversub_fabric", "rack_locality"):
