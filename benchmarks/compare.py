@@ -1,0 +1,120 @@
+"""Throughput regression gate over ``BENCH_*.json`` artifacts.
+
+Compares a freshly-measured bench JSON against a committed baseline and
+fails (exit 1) when any throughput metric dropped by more than the
+threshold (default 20%).  Throughput keys are auto-detected: every
+numeric top-level key ending in ``_per_sec`` that both files share
+(``fluid_traces_per_sec``, ``events_per_sec``, ``stress_events_per_sec``,
+...).  Higher is better for all of them; improvements never fail.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_topology.json \
+        results/BENCH_topology.json [--threshold 0.2]
+
+Multiple baseline/current pairs can be gated in one invocation:
+
+    python -m benchmarks.compare a_base.json a_new.json b_base.json b_new.json
+
+Provenance blocks (git sha / timestamp / host) from both files are
+printed alongside any regression so a nightly alert is attributable —
+absolute throughput is machine-dependent, and a cross-host comparison is
+flagged as such rather than silently trusted.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def throughput_keys(base: Dict, cur: Dict) -> List[str]:
+    return sorted(
+        k
+        for k in base
+        if k.endswith("_per_sec")
+        and isinstance(base.get(k), (int, float))
+        and isinstance(cur.get(k), (int, float))
+    )
+
+
+def compare_pair(
+    base_path: str, cur_path: str, threshold: float
+) -> Tuple[List[str], List[str]]:
+    """Returns (report_lines, regression_lines) for one baseline/current
+    pair; an empty regression list means the pair passes."""
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(cur_path) as f:
+        cur = json.load(f)
+    lines: List[str] = [f"{base_path} -> {cur_path}"]
+    regressions: List[str] = []
+    keys = throughput_keys(base, cur)
+    if not keys:
+        lines.append("  (no shared *_per_sec keys — nothing to gate)")
+        return lines, regressions
+    bp = base.get("provenance") or {}
+    cp = cur.get("provenance") or {}
+    if bp or cp:
+        lines.append(
+            f"  baseline: sha={bp.get('git_sha', '?')[:12]} "
+            f"host={bp.get('host', '?')} at={bp.get('timestamp_utc', '?')}"
+        )
+        lines.append(
+            f"  current:  sha={cp.get('git_sha', '?')[:12]} "
+            f"host={cp.get('host', '?')} at={cp.get('timestamp_utc', '?')}"
+        )
+        if bp.get("host") and cp.get("host") and bp["host"] != cp["host"]:
+            lines.append(
+                "  WARNING: different hosts — absolute throughput is "
+                "machine-dependent, treat the gate with suspicion"
+            )
+    for k in keys:
+        b, c = float(base[k]), float(cur[k])
+        change = (c - b) / b if b else 0.0
+        verdict = "ok"
+        if b > 0 and c < b * (1.0 - threshold):
+            verdict = "REGRESSION"
+            regressions.append(
+                f"{cur_path}: {k} fell {-change * 100.0:.1f}% "
+                f"({b:.4g} -> {c:.4g}, threshold {threshold * 100.0:.0f}%)"
+            )
+        lines.append(f"  {k}: {b:.4g} -> {c:.4g} ({change:+.1%}) {verdict}")
+    return lines, regressions
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "files",
+        nargs="+",
+        metavar="BASELINE CURRENT",
+        help="baseline/current JSON pairs (even count)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.2,
+        help="max allowed fractional throughput drop (default 0.2 = 20%%)",
+    )
+    args = ap.parse_args(argv)
+    if len(args.files) % 2:
+        ap.error("expected an even number of files (baseline/current pairs)")
+    all_regressions: List[str] = []
+    for i in range(0, len(args.files), 2):
+        lines, regressions = compare_pair(
+            args.files[i], args.files[i + 1], args.threshold
+        )
+        print("\n".join(lines))
+        all_regressions.extend(regressions)
+    if all_regressions:
+        print("\nTHROUGHPUT REGRESSIONS:", file=sys.stderr)
+        for r in all_regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("\nall throughput metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

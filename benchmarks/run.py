@@ -51,6 +51,51 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(row, flush=True)
 
 
+def provenance() -> Dict[str, object]:
+    """Run provenance stamped into every ``BENCH_*.json``: git sha (with a
+    ``-dirty`` suffix when the tree has local edits), UTC timestamp and
+    host identity.  ``benchmarks/compare.py`` prints these when flagging a
+    regression so a nightly alert is attributable to a commit + machine."""
+    import datetime
+    import platform
+    import subprocess
+
+    repo = os.path.dirname(os.path.abspath(__file__))
+    sha = "unknown"
+    try:
+        p = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, cwd=repo, timeout=10,
+        )
+        if p.returncode == 0:
+            sha = p.stdout.strip()
+            q = subprocess.run(
+                ["git", "status", "--porcelain"],
+                capture_output=True, text=True, cwd=repo, timeout=10,
+            )
+            if q.returncode == 0 and q.stdout.strip():
+                sha += "-dirty"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    try:
+        from importlib.metadata import version
+
+        jax_version = version("jax")
+    except Exception:  # jax absent: the event-only benches still stamp
+        jax_version = "unknown"
+    return {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax_version": jax_version,
+    }
+
+
 def trace_for(full: bool, seed: int = 0):
     if full:
         return paper_trace(seed=seed)
@@ -338,6 +383,7 @@ def bench_topology(full: bool) -> None:
     with open(path, "w") as f:
         json.dump(
             {
+                "provenance": provenance(),
                 "scenario": "oversub_fabric",
                 "full": full,
                 "n_seeds": len(seeds),
@@ -440,6 +486,7 @@ def bench_wfbp(full: bool) -> None:
     with open(path, "w") as f:
         json.dump(
             {
+                "provenance": provenance(),
                 "full": full,
                 "fusion_grid_avg_jct": grid,
                 "finite_vs_all_speedup": finite_vs_all,
@@ -471,10 +518,37 @@ def bench_wfbp(full: bool) -> None:
 PRE_REFACTOR_EVENTS_PER_SEC = 41984.0
 
 
+def stream_trace(n_jobs: int, seed: int = 0, mean_gap: float = 0.05,
+                 min_iters: int = 3, max_iters: int = 8):
+    """Streaming-arrival stress workload: ``n_jobs`` small mixed-size jobs
+    with exponential inter-arrival gaps, sized so a 16x4 cluster stays
+    moderately loaded and the calendar drains as it fills (rather than the
+    paper trace's burst of long jobs).  Shared by the ``--only engine``
+    stress cell and the tier-1 linearity smoke test."""
+    import numpy as np
+
+    from repro.core.cluster import TABLE_III, JobSpec
+
+    rng = np.random.default_rng(seed)
+    models = ("resnet50", "vgg16", "inception_v3", "lstm_ptb")
+    arrivals = np.cumsum(rng.exponential(mean_gap, n_jobs))
+    return [
+        JobSpec(
+            j,
+            float(arrivals[j]),
+            int(rng.choice((1, 1, 2, 4))),
+            int(rng.integers(min_iters, max_iters + 1)),
+            TABLE_III[models[int(rng.integers(len(models)))]],
+        )
+        for j in range(n_jobs)
+    ]
+
+
 def bench_engine(full: bool) -> None:
     """Throughput of the refactored event engine (events/sec on the quick
-    paper cell, vs the recorded pre-refactor baseline) plus the
-    preemptive-vs-static and elastic-vs-static avg-JCT cells on their
+    paper cell, vs the recorded pre-refactor baseline), the 10k-job
+    streaming-arrival stress cell (events/sec + peak calendar size), plus
+    the preemptive-vs-static and elastic-vs-static avg-JCT cells on their
     regression seeds; persists ``BENCH_engine.json`` (path override:
     ``REPRO_BENCH_ENGINE_JSON``) for nightly trend tracking."""
     from repro.scenarios import QUICK_OVERRIDES, get_scenario
@@ -494,6 +568,24 @@ def bench_engine(full: bool) -> None:
         wall * 1e6,
         f"events_per_sec={eps:.0f};events={res.events_processed};"
         f"vs_pre_refactor={eps / PRE_REFACTOR_EVENTS_PER_SEC:.3f}",
+    )
+
+    # 10k-job streaming-arrival stress cell: online arrivals at ~20 jobs/s
+    # against a 16x2 cluster — the calendar holds every future arrival up
+    # front, so peak size ~ n_jobs + O(cluster); events/sec is the
+    # engine-scalability headline the nightly run trends.
+    stress_n = 10_000
+    jobs = stream_trace(stress_n, seed=0)
+    t0 = time.time()
+    stress = simulate(jobs, placement="lwf", comm="ada",
+                      n_servers=16, gpus_per_server=2)
+    stress_wall = time.time() - t0
+    stress_eps = stress.events_processed / stress_wall
+    emit(
+        "engine/stress_10k_stream",
+        stress_wall * 1e6,
+        f"events_per_sec={stress_eps:.0f};events={stress.events_processed};"
+        f"peak_calendar={stress.peak_calendar};finished={len(stress.jct)}",
     )
 
     pre_scn = get_scenario("preemption_gain", seed=2)
@@ -525,11 +617,17 @@ def bench_engine(full: bool) -> None:
     with open(path, "w") as f:
         json.dump(
             {
+                "provenance": provenance(),
                 "full": full,
                 "events_per_sec": eps,
                 "events_processed": res.events_processed,
                 "pre_refactor_events_per_sec": PRE_REFACTOR_EVENTS_PER_SEC,
                 "vs_pre_refactor": eps / PRE_REFACTOR_EVENTS_PER_SEC,
+                "stress_n_jobs": stress_n,
+                "stress_events_per_sec": stress_eps,
+                "stress_events_processed": stress.events_processed,
+                "stress_peak_calendar": stress.peak_calendar,
+                "stress_finished": len(stress.jct),
                 "preemption_gain_seed": 2,
                 "static_avg_jct": static.avg_jct(),
                 "preemptive_avg_jct": pre.avg_jct(),
@@ -611,6 +709,7 @@ def bench_chaos(full: bool) -> None:
     with open(path, "w") as f:
         json.dump(
             {
+                "provenance": provenance(),
                 "full": full,
                 "seeds": list(seeds),
                 "cells": {

@@ -189,6 +189,13 @@ class Cluster:
             for s in range(n_servers)
             for g in range(gpus_per_server)
         }
+        # The structure is static (GpuState objects mutate, the grouping
+        # never does): build the per-server lists once — gpus_of_server is
+        # the innermost call of every LWF placement scan.
+        self._server_gpus: List[List[GpuState]] = [
+            [self.gpus[(s, g)] for g in range(gpus_per_server)]
+            for s in range(n_servers)
+        ]
 
     # -- queries -------------------------------------------------------------
     def gpu(self, gpu_id: GpuId) -> GpuState:
@@ -198,7 +205,8 @@ class Cluster:
         return list(self.gpus.keys())
 
     def gpus_of_server(self, server: int) -> List[GpuState]:
-        return [self.gpus[(server, g)] for g in range(self.gpus_per_server)]
+        """Per-server GpuState list (shared cached list — do not mutate)."""
+        return self._server_gpus[server]
 
     def server_workload(self, server: int) -> float:
         """L_{S_i} = sum_j L_{g_{i,j}}."""

@@ -111,6 +111,10 @@ class JobRun:
     gpus: List[GpuId]
     servers: Set[int]
     placed_at: float
+    #: contention domains this placement's ring loads — a pure function of
+    #: (topology, servers), so computed once per placement instead of per
+    #: gating evaluation (``EventEngine.place_job`` fills it in)
+    domains: frozenset = frozenset()
     iter_done: int = 0
     # Per-worker progress within the current iteration:
     f_done: Set[int] = dataclasses.field(default_factory=set)
@@ -238,6 +242,11 @@ class SimResult:
     events_processed: int
     comm_started_contended: int
     comm_started_clean: int
+    #: high-water mark of the event calendar (heap length) over the run —
+    #: the engine's memory footprint driver under streaming arrivals
+    #: (every arrival is pushed up front, so this is >= n_jobs; the live
+    #: simulation adds only O(cluster) outstanding events on top)
+    peak_calendar: int = 0
     #: name of the job scheduling policy (engine/policy split)
     sched_name: str = "static"
     #: jobs with no finish time: cut off by the simulation horizon
@@ -383,9 +392,16 @@ class EventEngine:
         self.checkpoint_cost = checkpoint_cost
 
         self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._peak_heap = 0
         self._seq = itertools.count()
         self._queue: List[int] = []  # unplaced job ids
         self._runs: Dict[int, JobRun] = {}
+        #: placed-and-unfinished job ids in the same (insertion) order their
+        #: runs sit in ``_runs`` — the workload refresh walks this instead
+        #: of all of ``_runs`` (which keeps every finished run for result
+        #: collection and so grows with the whole trace); identical float
+        #: accumulation order, O(live) instead of O(total jobs) per refresh
+        self._live: Dict[int, None] = {}
         self._active_comm: Dict[int, CommTask] = {}
         #: In-flight transfers per contention domain, maintained
         #: incrementally on every comm start/finish/abort — the same
@@ -437,6 +453,8 @@ class EventEngine:
     # -- event helpers -------------------------------------------------------
     def _push(self, t: float, kind: str, data: tuple) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+        if len(self._heap) > self._peak_heap:
+            self._peak_heap = len(self._heap)
 
     # -- SRSF priority ---------------------------------------------------------
     def srsf_key_queued(self, job_id: int):
@@ -593,9 +611,8 @@ class EventEngine:
         sum of its resident jobs' remaining service (shared per GPU)."""
         for g in self.cluster.gpus.values():
             g.workload = 0.0
-        for jid, run in self._runs.items():
-            if run.finished_at is not None:
-                continue
+        for jid in self._live:
+            run = self._runs[jid]
             share = run.remaining_service(self.params, self.bandwidth_aware_srsf)
             for gid in run.gpus:
                 self.cluster.gpus[gid].workload += share
@@ -611,7 +628,13 @@ class EventEngine:
         progress (plus the restore penalty) for requeued jobs."""
         spec = self.jobs[job_id]
         servers = self.cluster.servers_of(gpu_ids)
-        run = JobRun(spec=spec, gpus=list(gpu_ids), servers=servers, placed_at=now)
+        run = JobRun(
+            spec=spec,
+            gpus=list(gpu_ids),
+            servers=servers,
+            placed_at=now,
+            domains=self._domains_of(servers),
+        )
         carry = self._carry.pop(job_id, None)
         if carry is not None:
             run.iter_done = carry.iter_done
@@ -625,6 +648,7 @@ class EventEngine:
         workload = run.remaining_service(self.params, self.bandwidth_aware_srsf)
         self.cluster.place(spec, gpu_ids, workload)
         self._runs[job_id] = run
+        self._live[job_id] = None
         self._dirty_gpus.update(gpu_ids)
         self._first_placed.setdefault(job_id, now)
         return run
@@ -644,6 +668,7 @@ class EventEngine:
         the in-progress iteration is lost, exactly a checkpoint-restart —
         and the next placement pays the checkpoint/restore penalty."""
         run = self._runs.pop(job_id)
+        self._live.pop(job_id, None)
         if run.finished_at is not None:
             raise ValueError(f"cannot preempt finished job {job_id}")
         self._work_lost_samples += self._lost_in_progress(run)
@@ -701,6 +726,7 @@ class EventEngine:
         self.cluster.release(run.spec, run.gpus)
         self._dirty_gpus.update(run.gpus)
         del self._runs[job_id]
+        self._live.pop(job_id, None)
         # re-rank with this gang's workload gone (cluster.release keeps the
         # per-GPU L_g; the freed GPUs must look free to the placement)
         self.refresh_workloads()
@@ -847,6 +873,7 @@ class EventEngine:
             self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
             self._work_lost_samples += self._lost_in_progress(run)
             del self._runs[job_id]
+            self._live.pop(job_id, None)
             for gid in run.gpus:
                 g = self.cluster.gpus[gid]
                 if g.busy_job == job_id:
@@ -886,7 +913,7 @@ class EventEngine:
                     self._waiting_comm.remove(jid)
                     continue
                 servers = run.servers
-                domains = self._domains_of(servers)
+                domains = run.domains
                 olds = [
                     t for t in self._active_comm.values() if t.domains & domains
                 ]
@@ -970,6 +997,7 @@ class EventEngine:
         self.cluster.release(run.spec, run.gpus)
         self._dirty_gpus.update(run.gpus)
         self._unfinished.discard(run.spec.job_id)
+        self._live.pop(run.spec.job_id, None)
 
     def _on_backward_done(self, run: JobRun, now: float) -> None:
         if len(run.b_done) < run.n_world:
@@ -1230,6 +1258,7 @@ class EventEngine:
             events_processed=self._events,
             comm_started_contended=self._comm_contended,
             comm_started_clean=self._comm_clean,
+            peak_calendar=self._peak_heap,
             sched_name=self.sched.name,
             # cancelled jobs are an explicit outcome, not silent truncation:
             # censored counts only jobs cut off by the horizon or stranded

@@ -12,42 +12,73 @@ machine around it.  Feature parity with the event backend:
 
 * every gating policy: AdaDUAL, SRSF(n), and k-way AdaDUAL (``kway2``/
   ``kway3``/...) — k-way runs the *exact* per-bucket lookahead
-  (``netmodel.kway_exact_start``, the closed form of the event backend's
-  option-A/option-B average-finish comparison, vectorized over the
-  overlap mask), not a threshold approximation;
-* per-server heterogeneous NIC bandwidth: each communication task drains
-  at the rate of its slowest member server (no cluster-mean collapse);
-* fabric contention domains (``core/topology.py``): the topology's cut
-  load-rule lowers to a static ``[domains, servers]`` incidence matrix
-  (``netmodel.domain_loads`` — two matmuls, no branching), and drain rates
-  use the oversub-weighted effective k; the NIC-only topology is
-  bit-identical to the pre-topology backend;
-* pluggable gang placement: ``consolidate`` (LWF-1 shape), ``first_fit``
-  (FF shape), ``least_loaded`` (LS/LWF L_S ordering), ``random`` (RAND
-  shape: fresh uniform server order per admission), ``rack_pack``
-  (LWF_RACK shape: pack the emptiest rack, stay off the uplinks).
+  (``netmodel.kway_exact_start``);
+* per-server heterogeneous NIC bandwidth (slowest-member drain rate);
+* fabric contention domains (``core/topology.py``) via a static
+  ``[domains, servers]`` incidence matrix;
+* pluggable gang placement: ``consolidate`` / ``first_fit`` /
+  ``least_loaded`` / ``random`` / ``rack_pack``.
+
+Fast-path architecture (the raw-speed program)
+----------------------------------------------
+
+The hot loop is no longer one monolithic ``lax.while_loop`` over fixed dt
+ticks.  It is a *segmented* driver:
+
+* **Chunked scan** — lanes advance through ``cfg.chunk_steps``-step
+  ``lax.scan`` segments (one jitted launch per segment); finished lanes
+  freeze via a per-lane ``live`` guard.  Between segments the host checks
+  for all-lanes-done early exit and (``cfg.compact``) retires finished
+  lanes, shrinks the lane axis to the next power of two, and trims
+  trailing all-invalid job columns (multiples of 8) and dead bucket
+  columns.  Compaction is bit-exact: lanes are computationally
+  independent, and padded jobs are inert in every reduction (zero member
+  rows, ``inf`` priority keys, ``x + 0.0`` exact in any order).
+
+* **Next-event skip** (``cfg.skip``) — each executed tick is the exact
+  legacy tick; afterwards the step computes, per lane, how many following
+  ticks are *eventless* (pure linear drains: no admission, no phase
+  transition, no gating re-evaluation that could flip) and advances the
+  drains in bulk.  Safety of skipping gating re-evaluations follows from
+  the threshold predicate being antitone in the active set and monotone
+  (non-increasing) in time while the active set is fixed — see
+  :func:`netmodel.gating_fixed_point`; exact-lookahead k-way policies are
+  a cost *comparison*, not a monotone threshold, so the skip is disabled
+  while any transfer waits under exact k-way.  Bulk advancement computes
+  remainders as ``rem - n*dt`` instead of n sequential subtractions, so a
+  skip run may drift from a tick-by-tick run by ulps (≤ one tick per
+  phase segment) — within the differential-harness tolerances; runs with
+  the *same* config remain bit-exact across batching, padding and
+  compaction.
+
+* **One-shot gating fixed point** — bucketed WFBP traces used to run four
+  sequential gating rounds per tick; ``cfg.gating="fixedpoint"`` computes
+  the greedy closure in a single masked pass
+  (:func:`netmodel.gating_fixed_point`), ``"rounds"`` keeps the legacy
+  loop (equivalence locked in tests/test_fastpath.py).
+
+* **Fused step core** — the per-tick contention/rate evaluation (domain
+  incidence matmuls, Eq. 5 rate, slowest-member scale, gating-side
+  ``k_would``/``min_old_rem``) is one call into
+  ``repro.kernels.fluidstep`` with a lax reference path (default, CPU CI)
+  and an optional Pallas kernel (``cfg.kernel`` / ``REPRO_FLUID_KERNEL``
+  = ``"interpret"`` | ``"tpu"``).
 
 Remaining approximations vs the event simulator (``core/simulator.py``),
 all documented and tested for *qualitative* agreement:
 
-* gang placement — a job occupies whole GPUs exclusively (no task-level
-  time-sharing of one GPU between resident jobs);
+* gang placement — a job occupies whole GPUs exclusively;
 * time advances in fixed dt steps; compute/comm remainders drain linearly
   (the Eq. 5 rate model is exact within a step as long as the active comm
   set is unchanged, so dt only quantizes *transition* times);
-* at most one queued job is admitted and one gated all-reduce started per
-  step (admissions/starts are rare relative to dt, so this rarely binds);
-  bucketed WFBP traces get several gating rounds per step instead — one
-  start per dt would throttle the per-bucket streams artificially;
-* WFBP tensor-fusion buckets (``trace_from_jobs(..., fusion=...)``) drain
-  as a chunked FIFO stream over a static ``[jobs, buckets]`` size matrix,
-  each bucket gated afresh; the event backend's *overlap* of transfers
-  with the remaining backward compute is NOT modeled — the fluid backend
-  charges full compute, then the bucket stream (documented pessimism,
-  bounded by the differential harness);
-* the fixed all-reduce latency ``a`` is folded into the bandwidth term, so
-  a slow server also stretches ``a`` (a ≪ dt, negligible; under WFBP it is
-  charged once per bucket, the real cost of finer granularity).
+* at most one queued job is admitted per step and (monolithic traces) one
+  gated all-reduce started per step; bucketed WFBP traces start the full
+  gating closure per step instead;
+* WFBP tensor-fusion buckets drain as a chunked FIFO stream over a static
+  ``[jobs, buckets]`` size matrix; overlap of transfers with remaining
+  backward compute is NOT modeled (documented pessimism);
+* the fixed all-reduce latency ``a`` is folded into the bandwidth term
+  (under WFBP it is charged once per bucket).
 
 State is a struct-of-arrays over jobs plus per-server occupancy; policies
 are branchless masks parameterized by the shared layer.  Traces may carry
@@ -71,9 +102,21 @@ from repro.core.cluster import TABLE_III
 from repro.core.contention import ContentionParams
 from repro.core.topology import Topology, nic_topology
 from repro.core.trace import PAPER_GPU_DISTRIBUTION
+from repro.kernels import fluidstep
 
 # job phases
 QUEUED, COMPUTE, COMM, DONE = 0, 1, 2, 3
+
+#: Safety margin (in ticks) for float tick-count conversions:
+#: ``floor(x/dt - margin) + 1`` never *overestimates* ``ceil(x/dt)``
+#: (proof: ``floor(y - m) + 1 <= ceil(y)`` for all ``y > 0, 0 < m < 1``),
+#: and the margin absorbs f32 division error for counts up to ~1e5 ticks.
+#: Underestimating only delays an event detection by <= 1 executed tick
+#: (the safe direction — the event fires on the ``rem <= 0`` test).
+_TICK_MARGIN = 1e-2
+
+#: "No event" sentinel for per-job tick caps (far above any max_steps).
+_BIG_TICKS = 1 << 30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +142,29 @@ class JaxSimConfig:
     topology: Optional[Topology] = None
     #: PRNG seed for the ``random`` gang placement mode (fold_in per step).
     placement_seed: int = 0
+    # ---- fast-path knobs (all jit-static; see module docstring) --------
+    #: ticks per jitted scan segment between host early-exit/compaction
+    #: checks.
+    chunk_steps: int = 256
+    #: WFBP per-tick re-gating: "fixedpoint" (one-shot greedy closure) or
+    #: "rounds" (legacy 4-round loop); monolithic traces always use the
+    #: single legacy round.
+    gating: str = "fixedpoint"
+    #: bulk-advance eventless ticks (next-event skip).
+    skip: bool = True
+    #: retire finished lanes / trim padding between chunks.
+    compact: bool = True
+    #: fluid step core impl ("" = REPRO_FLUID_KERNEL env, default "ref").
+    kernel: str = ""
+
+    def __post_init__(self) -> None:
+        if self.gating not in ("fixedpoint", "rounds"):
+            raise ValueError(
+                f"unknown gating mode {self.gating!r}: expected "
+                "'fixedpoint' or 'rounds'"
+            )
+        if self.chunk_steps < 1:
+            raise ValueError(f"chunk_steps must be >= 1, got {self.chunk_steps}")
 
 
 def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
@@ -132,15 +198,26 @@ def sample_trace(key, n_jobs: int, horizon: float = 1200.0,
 def _place(free: jnp.ndarray, n_gpus: jnp.ndarray,
            rank_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Gang placement: fill servers in ascending ``rank_key`` order (the
-    shared :func:`netmodel.placement_rank` key; stable sort, server-index
-    ties).  Returns (per-server takes, feasible flag)."""
-    order = jnp.argsort(rank_key)
-    sorted_free = free[order]
-    cum = jnp.cumsum(sorted_free)
+    shared :func:`netmodel.placement_rank` key; stable order, server-index
+    ties).  Returns (per-server takes, feasible flag).
+
+    Sort-free formulation: ``cum[s]`` (GPUs available on servers at or
+    before s in rank order) is a masked sum over the lexicographic
+    comparison matrix instead of a cumsum over ``argsort`` output — pure
+    elementwise + one (S,S) reduction, so XLA fuses it into the
+    surrounding step instead of emitting sort/scatter thunks (the hot-loop
+    profile was dominated by exactly those).  Bit-identical to the sorted
+    version: free counts are small integers, exact in f32 under any
+    summation order."""
+    # before[s, u]: server u precedes-or-equals s in (rank_key, index) order
+    key_u = rank_key[None, :]
+    key_s = rank_key[:, None]
+    idx = jnp.arange(free.shape[0])
+    before = (key_u < key_s) | ((key_u == key_s) & (idx[None, :] <= idx[:, None]))
+    cum = (before * free[None, :]).sum(axis=1)
     want = n_gpus.astype(free.dtype)
-    take_sorted = jnp.clip(want - (cum - sorted_free), 0, sorted_free)
-    feasible = cum[-1] >= want
-    take = jnp.zeros_like(free).at[order].set(take_sorted)
+    take = jnp.clip(want - (cum - free), 0, free)
+    feasible = free.sum() >= want
     return jnp.where(feasible, take, 0), feasible
 
 
@@ -170,7 +247,47 @@ def _policy_args(cfg: JaxSimConfig):
     )
 
 
-def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated):
+def _ticks_to_zero(x, inv_dt):
+    """Safe underestimate of ``ceil(x / dt)`` (see :data:`_TICK_MARGIN`)."""
+    return jnp.floor(x * inv_dt - _TICK_MARGIN).astype(jnp.int32) + 1
+
+
+def _init_lane_state(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
+    """Initial per-lane state (legacy layout + the tick counter ``i``)."""
+    n_jobs = trace["arrival"].shape[0]
+    ns = cfg.n_servers
+    valid = trace.get("valid")
+    if valid is None:
+        valid = jnp.ones((n_jobs,), bool)
+    bucket_bytes = trace.get("bucket_bytes")
+    wfbp = bucket_bytes is not None and int(bucket_bytes.shape[-1]) > 1
+    topo = cfg.topology if cfg.topology is not None else nic_topology(ns)
+    n_domains = np.asarray(topo.incidence()).shape[0]
+    state = {
+        "phase": jnp.where(valid, QUEUED, DONE).astype(jnp.int32),
+        # domain-load mask, maintained incrementally (membership only
+        # changes at admission / completion) so the hot loop never
+        # re-derives it via incidence matmuls
+        "loads": jnp.zeros((n_jobs, n_domains), bool),
+        "iters_left": trace["iters"],
+        "rem": jnp.zeros((n_jobs,), jnp.float32),
+        "servers": jnp.zeros((n_jobs, ns), jnp.int32),
+        "finish": jnp.full((n_jobs,), jnp.inf, jnp.float32),
+        "free": jnp.full((ns,), float(cfg.gpus_per_server), jnp.float32),
+        "t": jnp.asarray(0.0, jnp.float32),
+        "n_done": jnp.asarray(0, jnp.int32),
+        "i": jnp.asarray(0, jnp.int32),
+        "started": jnp.zeros((n_jobs,), bool),
+    }
+    if wfbp:
+        state["bucket"] = jnp.zeros((n_jobs,), jnp.int32)
+    return state
+
+
+def _make_lane_step(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig,
+                    max_ways, gated):
+    """Build the per-lane step function: one *legacy-exact* tick followed
+    (``cfg.skip``) by the bulk advancement of eventless ticks."""
     n_jobs = trace["arrival"].shape[0]
     ns = cfg.n_servers
     assert cfg.policy in (_DYNAMIC_POLICY, _EXACT_KWAY_POLICY), (
@@ -190,21 +307,19 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
             f"topology covers {topo.n_servers} servers, config has {ns}"
         )
     incidence = jnp.asarray(topo.incidence(), jnp.float32)
+    inc_t = incidence.T  # (S, D) for the incremental loads-row update
     oversub = jnp.asarray(topo.oversub_array(), jnp.float32)
     server_rack = jnp.asarray(topo.server_rack(), jnp.int32)
     n_racks = len(topo.rack_groups())
     place_key = jax.random.PRNGKey(cfg.placement_seed)
     server_index = jnp.arange(ns, dtype=jnp.float32)
-    valid = trace.get("valid")
-    if valid is None:
-        valid = jnp.ones((n_jobs,), bool)
+    inv_dt = np.float32(1.0 / cfg.dt)
 
     # WFBP tensor-fusion buckets (layer-granular comm subsystem): a static
     # ``(jobs, B)`` size matrix plus a per-job bucket count.  ``wfbp`` is a
     # COMPILE-TIME flag: without multi-bucket planes (fusion="all" / legacy
     # traces, and (jobs, 1) planes) the emitted graph is exactly the
-    # pre-bucket backend's — bit-identical results AND compile
-    # (regression-locked in tests/test_wfbp.py).
+    # pre-bucket backend's (regression-locked in tests/test_wfbp.py).
     bucket_bytes = trace.get("bucket_bytes")
     b_max = 1 if bucket_bytes is None else int(bucket_bytes.shape[-1])
     wfbp = b_max > 1
@@ -217,26 +332,21 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         comm_total = jnp.where(bucket_live, bucket_t, 0.0).sum(axis=-1)
     else:
         comm_total = cfg.a + cfg.b * trace["msg_bytes"]  # contention-free s
+    # Ticks per full-iteration compute segment (loop-invariant, hoisted
+    # out of the scan by XLA) — the bulk fast-forward quantum for
+    # non-spanning jobs, whose iteration boundaries are externally
+    # invisible (their rings cross no cut => zero domain loads).
+    k_iter = jnp.maximum(_ticks_to_zero(trace["t_iter"], inv_dt), 1)
 
-    state = {
-        "phase": jnp.where(valid, QUEUED, DONE).astype(jnp.int32),
-        "iters_left": trace["iters"],
-        "rem": jnp.zeros((n_jobs,), jnp.float32),       # remaining sec/bytes-time in phase
-        "servers": jnp.zeros((n_jobs, ns), jnp.int32),  # GPUs taken per server
-        "finish": jnp.full((n_jobs,), jnp.inf, jnp.float32),
-        "free": jnp.full((ns,), float(cfg.gpus_per_server), jnp.float32),
-        "t": jnp.asarray(0.0, jnp.float32),
-        "n_done": jnp.asarray(0, jnp.int32),
-    }
-
-    def srsf_key(st):
-        # E_J = 0 before placement (paper Section IV-A): queued-job priority
-        # is compute-only, matching the event backend's _srsf_key_queued.
-        rem_service = st["iters_left"] * trace["t_iter"] * trace["n_gpus"]
-        return jnp.where(st["phase"] == QUEUED, rem_service, jnp.inf)
-
-    def step(st, step_i):
-        t = st["t"] + cfg.dt
+    def step(st):
+        step_i = st["i"]
+        # Derive t from the integer tick counter instead of accumulating
+        # `t += dt`: one f32 multiply has no cumulative rounding, so the
+        # clock is bit-identical whether ticks execute one-by-one or jump
+        # in bulk (next-event skip) — accumulated drift vs exact arrival
+        # times (which sit on dt multiples) would otherwise shift
+        # admissions by a tick and butterfly through placement.
+        t = (step_i + 1).astype(jnp.float32) * cfg.dt
         phase, rem = st["phase"], st["rem"]
 
         spans0 = (st["servers"] > 0).sum(axis=1) > 1
@@ -247,15 +357,27 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
             * (trace["t_iter"] + jnp.where(spans0, comm_total, 0.0))
             * trace["n_gpus"]
         )
-        # Per-server remaining workload (Alg. 3 line 3's L_S in gang form):
-        # each job contributes its remaining service per occupied GPU.
+        # Per-server remaining workload (Alg. 3 line 3's L_S in gang form).
         load = (rem_service[:, None] * st["servers"]).sum(0)
 
         # ---- admission: smallest-SRSF arrived job that FITS (no head-of-
         # line blocking: infeasible jobs don't stall smaller ones) ---------
         fits = trace["n_gpus"].astype(jnp.float32) <= st["free"].sum()
-        arrived = (phase == QUEUED) & (trace["arrival"] <= t) & fits
-        pick = jnp.argmin(jnp.where(arrived, srsf_key(st), jnp.inf))
+        # Strict '<': a job arriving exactly on a tick boundary is seen at
+        # the *next* tick.  The accumulated-f32 clock of the original loop
+        # summed to slightly below k*dt, so its `<=` behaved exactly like
+        # this on lattice arrivals; with the drift-free derived clock the
+        # strictness must be explicit to keep admission timing (and the
+        # placement decisions racing against same-tick completions) stable.
+        arrived = (phase == QUEUED) & (trace["arrival"] < t) & fits
+        # E_J = 0 before placement (paper Section IV-A): queued-job priority
+        # is compute-only, matching the event backend's _srsf_key_queued.
+        queued_key = jnp.where(
+            phase == QUEUED,
+            st["iters_left"] * trace["t_iter"] * trace["n_gpus"],
+            jnp.inf,
+        )
+        pick = jnp.argmin(jnp.where(arrived, queued_key, jnp.inf))
         can_pick = arrived[pick]
         if placement == "random":
             # fresh uniform server order per step: the gang analogue of the
@@ -274,12 +396,26 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         )
         take, feasible = _place(st["free"], trace["n_gpus"][pick], rank_key)
         admit = can_pick & feasible
+        # one-hot select instead of .at[pick].set scatters: selects fuse
+        # into the elementwise step graph, scatters are standalone thunks
+        # that dominated the per-tick profile on CPU
+        hot = (jnp.arange(n_jobs) == pick) & admit
         free = st["free"] - jnp.where(admit, take, 0)
-        servers = st["servers"].at[pick].set(
-            jnp.where(admit, take.astype(jnp.int32), st["servers"][pick])
+        servers = jnp.where(
+            hot[:, None], take.astype(jnp.int32)[None, :], st["servers"]
         )
-        phase = phase.at[pick].set(jnp.where(admit, COMPUTE, phase[pick]))
-        rem = rem.at[pick].set(jnp.where(admit, trace["t_iter"][pick], rem[pick]))
+        phase = jnp.where(hot, COMPUTE, phase)
+        rem = jnp.where(hot, trace["t_iter"], rem)
+        # incremental domain-load update: only the admitted job's row
+        # changes (one S-vector against the static incidence — the full
+        # (J,S)x(S,D) matmuls per tick dominated the CPU profile).
+        # Bit-exact vs recomputing from scratch: pure boolean algebra on
+        # exact {0,1} sums.
+        row_member = (take > 0).astype(jnp.float32)
+        row_in = row_member @ inc_t
+        row_out = row_member @ (1.0 - inc_t)
+        row_loads = (row_in > 0) & (row_out > 0)
+        loads = jnp.where(hot[:, None], row_loads[None, :], st["loads"])
 
         spans = (servers > 0).sum(axis=1) > 1
 
@@ -290,15 +426,23 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         # barrier but is still gated must not count toward contention (it
         # would otherwise see itself and deadlock under ada/srsf1).
         active = in_comm & started & (rem > 0)
-        # Which fabric domains each job's ring crosses (static incidence,
-        # branchless): for the NIC-only topology this is exactly the old
-        # per-server membership of spanning jobs.
         member = (servers > 0).astype(jnp.float32)  # (jobs, ns)
-        loads = netmodel.domain_loads(member, incidence)  # (jobs, n_domains)
-        counts = netmodel.domain_counts(loads, active)  # (n_domains,)
-        # Effective contention for the Eq. (5) rate: per-domain count scaled
-        # by that domain's oversubscription (float; NIC-only => raw count).
-        k_eff = netmodel.domain_k(loads, counts.astype(jnp.float32) * oversub)
+        # ONE fused evaluation of the contention/rate core: in-flight
+        # counts over the carried domain-load mask, oversub-weighted
+        # effective k, Eq. 5 drain ratio, and the gating-side k_would /
+        # min_old_rem (+ the overlap matrix where gating needs it).
+        # Dispatches to the lax reference or the Pallas kernel
+        # (repro.kernels.fluidstep).  Evaluated pre-compute-drain:
+        # min_old_rem/k_would only read COMM rows, whose ``rem`` the
+        # compute drain below cannot touch — bit-exact with the legacy
+        # post-drain evaluation.
+        core = fluidstep.fluid_step_core(
+            loads, member, active, rem, bw, oversub,
+            b=cfg.b, eta=cfg.eta,
+            need_overlap=(wfbp or exact_kway), impl=cfg.kernel,
+        )
+        counts = core["counts"]
+        k_eff, overlap = core["k_eff"], core["overlap"]
 
         # ---- drain compute ---------------------------------------------------
         is_comp = phase == COMPUTE
@@ -310,89 +454,80 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         iter_done_direct = comp_done & ~spans
 
         # ---- comm gating (on jobs in COMM with rem == full, i.e. waiting) ---
-        # One start per gating round, smallest remaining service first —
-        # mirrors the event sim's sorted re-evaluate-after-each-start loop.
-        # Without this, barriers landing on the same step would all start
-        # against a contention state that excludes their co-starters,
-        # violating the srsf1/ada caps.  Each round recomputes the
-        # contention state including the jobs started in earlier rounds.
-        # Monolithic traces keep the single legacy round (bit-exact);
-        # bucketed WFBP traces get several rounds per step, since per-bucket
-        # starts are far more frequent than whole-message starts and one
-        # start per dt would throttle the bucket streams artificially.
-        loads_f = loads.astype(jnp.float32)
-        overlap = (loads_f @ loads_f.T) > 0  # (jobs, jobs) share a domain
+        # Candidate cost is proportional to M_new — the gates are unit-free.
+        # For a waiting WFBP job ``rem`` is the current *bucket's* size
+        # (equal to comm_total while a monolithic job waits), so gating
+        # decides per bucket like the event backend.
+        new_cost = rem if wfbp else comm_total
+        waiting = in_comm & ~started
 
-        def one_start_round(started_now, active_now=None, counts_now=None):
-            waiting_now = in_comm & ~started_now
-            if active_now is None:  # later rounds: refresh the contention state
-                active_now = in_comm & started_now & (rem > 0)
-                counts_now = netmodel.domain_counts(loads, active_now)
-            # raw contention the job would see if it started now (gating
-            # counts contenders, not link capacity — oversub only reshapes
-            # the rate)
-            k_would = netmodel.domain_k(loads, counts_now, extra=1)
-            # Remaining size of the single most-finished overlapping
-            # in-flight task ~ min rem of overlapping started jobs (Theorem
-            # 2's M_old; conservative when several olds overlap, matching
-            # the event backend's all()-quantified Alg. 2 reading).  Two
-            # tasks overlap iff they load a common contention domain.
-            min_old_rem = jnp.where(
-                overlap & active_now[None, :], rem[None, :], jnp.inf
-            ).min(axis=1)
-            # proportional to M_new — the gates are unit-free.  For a
-            # waiting WFBP job ``rem`` is the current *bucket's* size
-            # (equal to comm_total while a monolithic job waits), so
-            # gating decides per bucket like the event backend.
-            new_cost = rem if wfbp else comm_total
+        def may_start_vs(k_would, min_old_rem, olds_mask):
             if exact_kway:
-                # Exact per-bucket k-way lookahead: row i of the mask marks
-                # the in-flight transfers overlapping candidate i's domains
-                # — the closed-form option-A/option-B comparison replaces
-                # the Theorem-2 threshold approximation.  Costs are comm
-                # *seconds* (the folded latency ``a`` rides along per
-                # bucket); the decision is scale-invariant, so the unit
-                # mismatch vs the event backend's raw bytes only perturbs
-                # borderline calls by the a-fold (documented in the module
-                # docstring).
-                may_start = netmodel.may_start_dynamic(
-                    k_would,
-                    new_cost,
-                    min_old_rem,
-                    max_ways,
-                    gated,
-                    cfg.dual_threshold,
-                    exact_kway_olds=overlap & active_now[None, :],
-                    rem=rem,
+                # Exact per-bucket k-way lookahead (closed-form option-A/
+                # option-B comparison); costs are comm *seconds* (the folded
+                # latency ``a`` rides along per bucket) — scale-invariant,
+                # so the unit mismatch vs the event backend's raw bytes only
+                # perturbs borderline calls by the a-fold.
+                return netmodel.may_start_dynamic(
+                    k_would, new_cost, min_old_rem, max_ways, gated,
+                    cfg.dual_threshold, exact_kway_olds=olds_mask, rem=rem,
                     eta_over_b=cfg.eta / cfg.b,
                 )
-            else:
-                may_start = netmodel.may_start_dynamic(
-                    k_would,
-                    new_cost,
-                    min_old_rem,
-                    max_ways,
-                    gated,
-                    cfg.dual_threshold,
-                )
-            start_ok = waiting_now & may_start
-            pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
-            start_now = (
-                jnp.zeros_like(start_ok).at[pick_c].set(True) & start_ok
+            return netmodel.may_start_dynamic(
+                k_would, new_cost, min_old_rem, max_ways, gated,
+                cfg.dual_threshold,
             )
-            return started_now | start_now
 
-        # round 1 reuses the contention state already computed for the
-        # drain rates (the exact legacy graph); later WFBP rounds refresh
-        started = one_start_round(started, active, counts)
-        if wfbp:
-            for _ in range(3):
-                started = one_start_round(started)
+        # round 1 against the base active set, reusing the core outputs
+        # (the exact legacy contention state)
+        olds0 = overlap & active[None, :] if overlap is not None else None
+        start_ok = waiting & may_start_vs(
+            core["k_would"], core["min_old_rem"], olds0
+        )
+        if wfbp and cfg.gating == "fixedpoint":
+            # One-shot greedy closure (see netmodel.gating_fixed_point for
+            # the antitone-predicate argument); replaces the 4-round loop.
+            accept = netmodel.gating_fixed_point(
+                start_ok, rem_service, loads, counts, overlap, active, rem,
+                new_cost, max_ways, gated, cfg.dual_threshold,
+                exact_kway=exact_kway, eta_over_b=cfg.eta / cfg.b,
+            )
+            started = started | accept
+            leftover = start_ok & ~accept
+        else:
+            # Legacy single-start round: smallest remaining service first —
+            # mirrors the event sim's sorted re-evaluate-after-each-start
+            # loop (admissions/starts are rare relative to dt for
+            # monolithic traces, so one start per tick rarely binds).
+            pick_c = jnp.argmin(jnp.where(start_ok, rem_service, jnp.inf))
+            start_now = (jnp.arange(n_jobs) == pick_c) & start_ok
+            started = started | start_now
+            leftover = start_ok & ~start_now
+            if wfbp:
+                # legacy 4-round loop (cfg.gating == "rounds"): each extra
+                # round refreshes the contention state including the jobs
+                # started in earlier rounds and starts one more candidate.
+                for _ in range(3):
+                    active_now = in_comm & started & (rem > 0)
+                    counts_now = netmodel.domain_counts(loads, active_now)
+                    k_would = netmodel.domain_k(loads, counts_now, extra=1)
+                    min_old_rem = jnp.where(
+                        overlap & active_now[None, :], rem[None, :], jnp.inf
+                    ).min(axis=1)
+                    ok = (in_comm & ~started) & may_start_vs(
+                        k_would, min_old_rem, overlap & active_now[None, :]
+                    )
+                    pick_c = jnp.argmin(jnp.where(ok, rem_service, jnp.inf))
+                    started = started | ((jnp.arange(n_jobs) == pick_c) & ok)
+                # conservative skip guard for the legacy path: any waiter
+                # blocks bulk advancement (the closure membership is not
+                # re-derived here)
+                leftover = in_comm & ~started
+
         # ---- drain comm (started only), at the Eq. 5 rate evaluated at the
         # effective (oversub-weighted) contention and scaled by the slowest
         # member server's NIC (per-server heterogeneity) ----------------------
-        scale = netmodel.slowest_member_scale(bw, servers > 0)
-        ratio = scale * netmodel.rate_ratio(k_eff, cfg.b, cfg.eta)
+        ratio = core["ratio"]
         draining = in_comm & started
         rem = jnp.where(draining, rem - cfg.dt * ratio, rem)
         comm_done = draining & (rem <= 0)
@@ -401,14 +536,13 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         # WFBP bucket stream: a finished bucket with buckets left hands the
         # next one to gating afresh (started resets — the FIFO comm stream
         # competes for the fabric per bucket, like the event backend);
-        # only the LAST bucket's completion ends the iteration.  All of
-        # this is gated on the static ``wfbp`` flag, so monolithic traces
-        # compile the exact legacy graph.
+        # only the LAST bucket's completion ends the iteration.
         if wfbp:
             next_b = st["bucket"] + 1
             more_buckets = comm_done & (next_b < n_buckets)
             iter_done = iter_done_direct | (comm_done & ~more_buckets)
         else:
+            more_buckets = jnp.zeros_like(comm_done)
             iter_done = iter_done_direct | comm_done
         iters_left = st["iters_left"] - iter_done.astype(jnp.float32)
         job_done = iter_done & (iters_left <= 0)
@@ -432,9 +566,11 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
         finish = jnp.where(job_done, t, st["finish"])
         free = free + (servers * job_done[:, None].astype(jnp.int32)).sum(0)
         servers = jnp.where(job_done[:, None], 0, servers)
+        loads = loads & ~job_done[:, None]
 
         new_state = {
             "phase": phase,
+            "loads": loads,
             "iters_left": iters_left,
             "rem": rem,
             "servers": servers,
@@ -442,50 +578,247 @@ def _simulate(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig, max_ways, gated)
             "free": free,
             "t": t,
             "n_done": (phase == DONE).sum().astype(jnp.int32),
+            "i": step_i + 1,
             "started": started,
         }
         if wfbp:
             new_state["bucket"] = bucket
-        return new_state, None
+        if not cfg.skip:
+            return new_state
 
-    state["started"] = jnp.zeros((n_jobs,), bool)
-    if wfbp:
-        state["bucket"] = jnp.zeros((n_jobs,), jnp.int32)
+        # ---- next-event skip: bulk-advance eventless ticks ------------------
+        # An executed tick is exactly the legacy tick above; ``extra`` is a
+        # per-lane lower bound on the number of *following* ticks at which
+        # provably nothing discrete happens — no admission, no compute/comm
+        # completion, no gating decision that could flip (the threshold
+        # predicate is antitone in the active set and non-increasing in
+        # time while the set is fixed: min_old_rem only drains).  Those
+        # ticks reduce to linear drains, applied in closed form.
+        rem2, phase2, iters2 = new_state["rem"], new_state["phase"], iters_left
+        in_comm2 = phase2 == COMM
+        is_comp2 = phase2 == COMPUTE
+        started2 = new_state["started"]
+        active2 = in_comm2 & started2 & (rem2 > 0)
+        waiting2 = jnp.any(in_comm2 & ~started2)
+        # Post-tick drain ratio: the active set may have changed this tick
+        # (starts / completions), the member rows of draining jobs cannot
+        # have (only job_done zeroes servers) — so loads and the slowest-
+        # member scale are reusable and only counts/k_eff need refreshing.
+        counts2 = netmodel.domain_counts(loads, active2)
+        k_eff2 = netmodel.domain_k(loads, counts2.astype(jnp.float32) * oversub)
+        ratio2 = (ratio / netmodel.rate_ratio(k_eff, cfg.b, cfg.eta)
+                  ) * netmodel.rate_ratio(k_eff2, cfg.b, cfg.eta)
+        # Gating must re-run next tick when: a passing candidate was not
+        # started (one-start cap / closure pessimism), a completion freed
+        # capacity while transfers wait (antitone: shrinking the active
+        # set can flip a predicate True), a barrier or fresh bucket just
+        # arrived, or the policy is an exact k-way cost comparison (not
+        # monotone in time — never skip while anything waits).
+        gate_block = (
+            jnp.any(leftover)
+            | (jnp.any(comm_done) & waiting2)
+            | jnp.any(to_comm)
+            | jnp.any(more_buckets)
+            | (jnp.asarray(exact_kway) & waiting2)
+        )
+        # Per-job caps: ticks strictly before the next arrival of a job
+        # that fits (free GPUs are constant during a skip), the next
+        # compute completion (non-spanning jobs fast-forward whole
+        # invisible iterations), and the next comm completion.
+        t2 = t
+        queued2 = phase2 == QUEUED
+        fits2 = trace["n_gpus"].astype(jnp.float32) <= new_state["free"].sum()
+        cap_arr = jnp.where(
+            queued2 & fits2,
+            _ticks_to_zero(trace["arrival"] - t2, inv_dt) - 1,
+            _BIG_TICKS,
+        )
+        k_cur = _ticks_to_zero(rem2, inv_dt)
+        iters_i = iters2.astype(jnp.int32)
+        spans2 = (new_state["servers"] > 0).sum(axis=1) > 1
+        ns_comp = is_comp2 & ~spans2
+        cap_comp = jnp.where(
+            is_comp2 & spans2,
+            k_cur - 1,
+            jnp.where(
+                ns_comp, k_cur - 1 + k_iter * (iters_i - 1), _BIG_TICKS
+            ),
+        )
+        cap_comm = jnp.where(
+            active2 & (ratio2 > 0),
+            _ticks_to_zero(rem2 / jnp.where(ratio2 > 0, ratio2, 1.0), inv_dt) - 1,
+            _BIG_TICKS,
+        )
+        caps = jnp.minimum(jnp.minimum(cap_arr, cap_comp), cap_comm).min()
+        extra = jnp.clip(
+            jnp.minimum(caps, cfg.max_steps - new_state["i"]), 0, _BIG_TICKS
+        )
+        extra = jnp.where(gate_block, 0, extra)
+        nf = extra.astype(jnp.float32)
+        # Bulk advance: linear drains, plus whole-iteration jumps for
+        # non-spanning compute jobs crossing >= 1 invisible boundary.
+        cross = ns_comp & (extra >= k_cur) & (extra > 0)
+        m = jnp.maximum(extra - k_cur, 0)
+        aq = m // k_iter
+        rq = m - aq * k_iter
+        rem3 = jnp.where(
+            cross,
+            trace["t_iter"] - rq.astype(jnp.float32) * cfg.dt,
+            jnp.where(
+                is_comp2,
+                rem2 - nf * cfg.dt,
+                jnp.where(active2, rem2 - nf * cfg.dt * ratio2, rem2),
+            ),
+        )
+        new_state["rem"] = rem3
+        new_state["iters_left"] = jnp.where(
+            cross, iters2 - (1 + aq).astype(jnp.float32), iters2
+        )
+        new_state["i"] = new_state["i"] + extra
+        new_state["t"] = new_state["i"].astype(jnp.float32) * cfg.dt
+        return new_state
 
-    def cond(carry):
-        st, i = carry
-        return (st["n_done"] < n_jobs) & (i < cfg.max_steps)
-
-    def body(carry):
-        st, i = carry
-        st, _ = step(st, i)
-        return (st, i + 1)
-
-    final, _ = jax.lax.while_loop(cond, body, (state, jnp.asarray(0)))
-    finished = (final["phase"] == DONE) & valid
-    jct = final["finish"] - trace["arrival"]
-    # Makespan from recorded finish times, not the loop clock: under vmap
-    # the while_loop keeps ticking lanes that finished early until the whole
-    # batch converges, so final["t"] would report the slowest lane's clock.
-    makespan = jnp.max(jnp.where(finished, final["finish"], 0.0))
-    makespan = jnp.where(finished.any(), makespan, final["t"])
-    return {"jct": jct, "finished": finished, "makespan": makespan}
+    return step
 
 
-@functools.partial(jax.jit, static_argnames=("n_jobs", "cfg"))
-def _simulate_one_jit(key, n_jobs: int, cfg: JaxSimConfig, max_ways, gated):
-    trace = sample_trace(key, n_jobs)
-    return _simulate(trace, cfg, max_ways, gated)
+def _lane_chunk(trace, st, cfg: JaxSimConfig, max_ways, gated):
+    """One ``cfg.chunk_steps``-tick scan segment of a single lane; frozen
+    (via the per-leaf ``live`` select) once the lane finishes or hits the
+    step cap, so a vmapped batch can run past early finishers."""
+    n_jobs = trace["arrival"].shape[0]
+    step = _make_lane_step(trace, cfg, max_ways, gated)
 
+    def body(st, _):
+        live = (st["n_done"] < n_jobs) & (st["i"] < cfg.max_steps)
+        st2 = step(st)
+        st2 = {k: jnp.where(live, v, st[k]) for k, v in st2.items()}
+        return st2, None
 
-def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
-    max_ways, gated, cfg_key = _policy_args(cfg)
-    return _simulate_one_jit(key, n_jobs, cfg_key, max_ways, gated)
+    st, _ = jax.lax.scan(body, st, None, length=cfg.chunk_steps)
+    return st
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _simulate_trace_jit(trace, cfg: JaxSimConfig, max_ways, gated):
-    return _simulate(trace, cfg, max_ways, gated)
+def _init_jit(traces, cfg: JaxSimConfig):
+    return jax.vmap(lambda tr: _init_lane_state(tr, cfg))(traces)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _chunk_jit(traces, state, cfg: JaxSimConfig, max_ways, gated):
+    return jax.vmap(
+        lambda tr, st: _lane_chunk(tr, st, cfg, max_ways, gated)
+    )(traces, state)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _drive_batched(traces: Dict[str, jnp.ndarray], cfg: JaxSimConfig,
+                   max_ways, gated) -> Dict[str, np.ndarray]:
+    """Host driver: chunked scan segments with early exit and (optional)
+    lane/job/bucket compaction.  ``cfg`` is the policy-stripped static
+    key from :func:`_policy_args`.  Returns numpy result planes shaped
+    like the input batch."""
+    arrival0 = np.asarray(traces["arrival"], np.float32)
+    n_lanes0, n_jobs0 = arrival0.shape
+    if "valid" not in traces:
+        traces = dict(traces)
+        traces["valid"] = jnp.ones((n_lanes0, n_jobs0), bool)
+    wfbp = "bucket_bytes" in traces and int(traces["bucket_bytes"].shape[-1]) > 1
+    results = {
+        "jct": np.full((n_lanes0, n_jobs0), np.inf, np.float32),
+        "finished": np.zeros((n_lanes0, n_jobs0), bool),
+        "makespan": np.zeros((n_lanes0,), np.float32),
+    }
+    orig = np.arange(n_lanes0)  # current lane -> original row (-1 = retired)
+    state = _init_jit(traces, cfg)
+
+    while True:
+        state = _chunk_jit(traces, state, cfg, max_ways, gated)
+        n_jobs_cur = int(traces["arrival"].shape[1])
+        n_done = np.asarray(state["n_done"])
+        tick = np.asarray(state["i"])
+        done = (n_done >= n_jobs_cur) | (tick >= cfg.max_steps)
+        newly = [l for l in np.nonzero(done)[0] if orig[l] >= 0]
+        if newly:
+            phase = np.asarray(state["phase"])
+            finish = np.asarray(state["finish"])
+            t_now = np.asarray(state["t"])
+            valid = np.asarray(traces["valid"])
+            arr = np.asarray(traces["arrival"], np.float32)
+            for l in newly:
+                row = orig[l]
+                fin = (phase[l] == DONE) & valid[l]
+                results["jct"][row, :n_jobs_cur] = finish[l] - arr[l]
+                results["finished"][row, :n_jobs_cur] = fin
+                results["makespan"][row] = (
+                    finish[l][fin].max() if fin.any() else t_now[l]
+                )
+                orig[l] = -1
+        if done.all():
+            break
+        if not (cfg.compact and done.any()):
+            continue
+
+        # ---- compaction: retire finished lanes, shrink the batch --------
+        # Shapes are bucketed (pow2 lanes, jobs in multiples of 8, >= 2
+        # buckets) to bound recompiles; dropped lanes are finished (their
+        # results are already finalized) and dropped job columns are
+        # all-invalid across the surviving lanes, so results are
+        # unchanged bit-for-bit (padded jobs are inert in every
+        # reduction of the step).
+        live = np.nonzero(~done)[0]
+        n_live = len(live)
+        lanes_new = _next_pow2(n_live)
+        valid = np.asarray(traces["valid"])
+        pad_lane = int(np.nonzero(done)[0][0])
+        sel = np.concatenate(
+            [live, np.full(lanes_new - n_live, pad_lane, live.dtype)]
+        )
+        col_used = valid[live].any(axis=0)
+        jobs_need = (
+            int(np.nonzero(col_used)[0][-1]) + 1 if col_used.any() else 1
+        )
+        jobs_new = min(n_jobs_cur, max(8, -(-jobs_need // 8) * 8))
+        if lanes_new >= len(done) and jobs_new > 3 * n_jobs_cur // 4:
+            continue
+        sel_dev = jnp.asarray(sel)
+        traces = {
+            k: jnp.take(v, sel_dev, axis=0)[:, :jobs_new]
+            for k, v in traces.items()
+        }
+        state = {
+            k: (
+                jnp.take(v, sel_dev, axis=0)[:, :jobs_new]
+                if v.ndim >= 2 and v.shape[1] == n_jobs_cur
+                else jnp.take(v, sel_dev, axis=0)
+            )
+            for k, v in state.items()
+        }
+        state["n_done"] = (state["phase"] == DONE).sum(axis=1).astype(jnp.int32)
+        if wfbp:
+            b_cur = int(traces["bucket_bytes"].shape[-1])
+            # keep >= 2 bucket columns: collapsing to one would flip the
+            # static wfbp flag (a different gating cadence, not just a
+            # smaller graph)
+            b_need = max(2, int(np.asarray(traces["n_buckets"]).max()))
+            if b_need < b_cur:
+                traces["bucket_bytes"] = traces["bucket_bytes"][:, :, :b_need]
+        orig = np.concatenate(
+            [orig[live], np.full(lanes_new - n_live, -1, orig.dtype)]
+        )
+    return results
+
+
+def simulate_one(key, n_jobs: int, cfg: JaxSimConfig):
+    trace = _sample_trace_jit(key, n_jobs)
+    return simulate_trace(trace, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("n_jobs",))
+def _sample_trace_jit(key, n_jobs: int):
+    return sample_trace(key, n_jobs)
 
 
 def simulate_trace(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
@@ -495,21 +828,31 @@ def simulate_trace(trace: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
     (:func:`_policy_args`), so sweeping policies over one trace shape
     reuses a single XLA compilation."""
     max_ways, gated, cfg_key = _policy_args(cfg)
-    return _simulate_trace_jit(trace, cfg_key, max_ways, gated)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _simulate_batched_jit(traces, cfg: JaxSimConfig, max_ways, gated):
-    return jax.vmap(lambda tr: _simulate(tr, cfg, max_ways, gated))(traces)
+    batch = {k: jnp.asarray(v)[None] for k, v in trace.items()}
+    out = _drive_batched(batch, cfg_key, max_ways, gated)
+    return {
+        "jct": jnp.asarray(out["jct"][0]),
+        "finished": jnp.asarray(out["finished"][0]),
+        "makespan": jnp.asarray(out["makespan"][0]),
+    }
 
 
 def simulate_traces_batched(traces: Dict[str, jnp.ndarray], cfg: JaxSimConfig):
-    """One vmapped launch over a stacked batch of traces (leading axis =
-    seed; see :func:`stack_traces`).  Returns per-lane jct/finished arrays
-    and a per-lane makespan vector — the scenario Monte-Carlo entry point.
-    Policy-dynamic like :func:`simulate_trace`."""
+    """Chunked-scan launches over a stacked batch of traces (leading axis
+    = seed; see :func:`stack_traces`).  Returns per-lane jct/finished
+    arrays and a per-lane makespan vector — the scenario Monte-Carlo
+    entry point.  Policy-dynamic like :func:`simulate_trace`; finished
+    lanes retire between chunks (``cfg.compact``) so stragglers don't pay
+    full batch width."""
     max_ways, gated, cfg_key = _policy_args(cfg)
-    return _simulate_batched_jit(traces, cfg_key, max_ways, gated)
+    out = _drive_batched(
+        {k: jnp.asarray(v) for k, v in traces.items()}, cfg_key, max_ways, gated
+    )
+    return {
+        "jct": jnp.asarray(out["jct"]),
+        "finished": jnp.asarray(out["finished"]),
+        "makespan": jnp.asarray(out["makespan"]),
+    }
 
 
 def trace_from_jobs(jobs, fusion: object = "all") -> Dict[str, jnp.ndarray]:
@@ -608,8 +951,8 @@ def monte_carlo_jct(
 ) -> Dict[str, np.ndarray]:
     """vmap over seeds; returns mean/std of avg-JCT across sampled traces.
 
-    One jitted launch through :func:`simulate_traces_batched` (sampling is
-    vmapped too) — no per-seed recompiles or redundant jit nesting."""
+    Sampling is one vmapped jit; the simulation runs through the chunked
+    batched driver — no per-seed recompiles or redundant jit nesting."""
     cfg = JaxSimConfig(policy=policy, **cfg_kw)
     keys = jax.random.split(jax.random.PRNGKey(base_seed), n_seeds)
     traces = jax.vmap(lambda k: sample_trace(k, n_jobs))(keys)

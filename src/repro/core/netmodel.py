@@ -357,6 +357,118 @@ def may_start_dynamic(
     return uncontended | contended_ok
 
 
+def gating_fixed_point(
+    r1,
+    priority,
+    loads,
+    counts,
+    overlap,
+    active,
+    rem,
+    new_cost,
+    max_ways,
+    threshold_gated,
+    dual_threshold: float,
+    *,
+    exact_kway: bool = False,
+    eta_over_b=None,
+):
+    """One-shot fixed point of the per-step greedy re-gating loop.
+
+    The fluid backend's bucketed (WFBP) traces used to run FOUR sequential
+    gating rounds per step — start the smallest-remaining-service eligible
+    candidate, recompute the contention state, repeat — mirroring the event
+    backend's re-evaluate-after-each-start loop.  This computes the greedy
+    closure in a single masked pass instead.
+
+    Why a single pass suffices — monotonicity of the gating predicate in
+    the active set.  Write the threshold predicate for candidate ``i``
+    against an active in-flight set ``A``::
+
+        P_i(A) = (k_i(A∪{i}) <= 1)
+               | (k_i(A∪{i}) <= max_ways
+                  & (~gated | new_cost_i < thr * min_old_rem_i(A)))
+
+    Growing ``A`` by another started task ``j`` can only (a) *increase*
+    every per-domain count, hence ``k_i`` is non-decreasing in ``A``, and
+    (b) add one more term to the min over overlapping in-flight
+    remainders, hence ``min_old_rem_i`` is non-increasing in ``A``.  The
+    predicate is non-increasing in ``k_i`` and non-decreasing in
+    ``min_old_rem_i``, so ``P_i`` is *antitone* in the active set: adding
+    starts can flip a candidate True -> False but never False -> True.
+    Consequences for the greedy loop seeded with candidates
+    ``r1 = {i : P_i(A0)}`` against the base set ``A0``:
+
+    * no candidate outside ``r1`` can enter in a later round (the active
+      set only grows), so ``r1`` bounds the closure from above;
+    * any candidate passing the *pessimistic* test
+      ``r2_i = P_i(A0 ∪ r1 \\ {i})`` passes against every intermediate
+      active set of every greedy order (each is a subset), so
+      ``r1 & r2`` is a sound start set under any order;
+    * the greedy head ``c1`` (smallest ``priority`` in ``r1``) is started
+      first by the loop against ``A0`` itself — sound by construction.
+
+    The returned set ``(r1 & r2) | c1`` therefore never violates a cap or
+    threshold that the sequential loop enforces, and equals the loop's
+    closure whenever the greedy outcome is order-independent (the loop was
+    itself truncated at 4 rounds, so neither side is the untruncated
+    closure in pathological many-simultaneous-barrier steps).  Bit-exact
+    agreement with the 4-round loop across the fusion × policy grid is
+    locked in tests/test_fastpath.py.
+
+    For exact-lookahead k-way policies (``exact_kway=True``) the predicate
+    is a cost *comparison* (option A vs option B), not an antitone
+    threshold, so the same pessimistic construction is used but the
+    monotonicity argument does not apply; the simulator compensates by
+    never skipping gating re-evaluation steps under exact k-way (see
+    core/jaxsim.py) and the same grid lock applies.
+
+    Args:
+      r1: ``(J,)`` bool — candidates passing the predicate vs the base
+        active set (round 1's eligibility).
+      priority: ``(J,)`` float — greedy order key, smallest first
+        (remaining service).
+      loads: ``(J, D)`` bool — per-job domain loads.
+      counts: ``(D,)`` int — per-domain in-flight counts of the base set.
+      overlap: ``(J, J)`` bool — jobs sharing a contention domain.
+      active: ``(J,)`` bool — base in-flight set.
+      rem: ``(J,)`` float — remaining cost of each job's current transfer.
+      new_cost: ``(J,)`` float — cost of each candidate's next transfer.
+      max_ways / threshold_gated / dual_threshold: runtime policy params
+        (:func:`may_start_dynamic`).
+      exact_kway: route the pessimistic re-test through
+        :func:`kway_exact_start`.
+      eta_over_b: required when ``exact_kway``.
+
+    Returns the ``(J,)`` bool start set.
+    """
+    import numpy as _np
+
+    n_jobs = r1.shape[-1]
+    eye = _np.eye(n_jobs, dtype=bool)  # constant under jit
+    # Pessimistic active set per candidate: base ∪ (r1 \ {self}).  Every
+    # r1 member contributes 1 to each domain it loads; excluding self from
+    # its own lookahead reduces, for i ∈ r1, to the raw counts2 (the +1 of
+    # k_would and the -1 of self-exclusion cancel).
+    counts2 = counts + domain_counts(loads, r1)
+    k_would2 = domain_k(loads, counts2)
+    olds2 = (overlap & (active | r1)[..., None, :]) & ~eye
+    big = 1e30  # finite "absent" sentinel: 0 * big stays NaN-free
+    o2 = olds2 * 1.0
+    min_old2 = (o2 * rem[..., None, :] + (1.0 - o2) * big).min(-1)
+    if exact_kway:
+        r2 = kway_exact_start(new_cost, rem, olds2, max_ways, eta_over_b)
+    else:
+        r2 = may_start_dynamic(
+            k_would2, new_cost, min_old2, max_ways, threshold_gated,
+            dual_threshold,
+        )
+    # Greedy head: smallest-priority r1 candidate (round 1's start).
+    head = (r1 * priority + (1.0 - r1 * 1.0) * big).argmin(-1)
+    c1 = r1 & (_np.arange(n_jobs) == head)
+    return (r1 & r2) | c1
+
+
 def _pairwise_min(x, y):
     """Branchless elementwise min (broadcasting) that works identically on
     numpy and jax arrays: ``min(x, y) = (x + y - |x - y|) / 2``."""
@@ -530,6 +642,7 @@ __all__ = [
     "domain_loads",
     "fusion_plan",
     "fusion_threshold",
+    "gating_fixed_point",
     "kway_exact_start",
     "may_start",
     "may_start_dynamic",

@@ -77,13 +77,17 @@ def place_lwf_rack(
     n = job.n_gpus
     if n <= kappa:
         return place_list_scheduling(cluster, job)
+    # one workload sum per server per call (the sort keys previously
+    # recomputed the per-server sum for every key evaluation; identical
+    # values, identical ordering)
+    load = [cluster.server_workload(s) for s in range(cluster.n_servers)]
     rack_order = sorted(
         range(len(racks)),
-        key=lambda r: (sum(cluster.server_workload(s) for s in racks[r]), r),
+        key=lambda r: (sum(load[s] for s in racks[r]), r),
     )
     ordered: List[GpuState] = []
     for r in rack_order:
-        servers = sorted(racks[r], key=lambda s: (cluster.server_workload(s), s))
+        servers = sorted(racks[r], key=lambda s: (load[s], s))
         for s in servers:
             gpus = [
                 g

@@ -212,12 +212,25 @@ class StaticGangPolicy(SchedPolicy):
         eng.refresh_workloads()
         eng.queue.sort(key=eng.srsf_key_queued)
         placed: List[int] = []
+        # Every placement policy is a pure function of (n_gpus, mem_mb)
+        # given a fixed cluster state, and a failed attempt mutates nothing
+        # (the rand policy draws from its rng only on success) — so within
+        # one scan a resource profile that failed keeps failing until some
+        # job actually places.  Memoizing the failures makes a long blocked
+        # queue cost O(distinct profiles) placement attempts per event
+        # instead of O(queue), with an identical event stream.
+        failed = set()
         for jid in eng.queue:
             spec = eng.jobs[jid]
+            profile = (spec.n_gpus, spec.model.mem_mb)
+            if profile in failed:
+                continue  # no head-of-line blocking (Alg. 3 loops the queue)
             gpu_ids = eng.placement(eng.cluster, spec)
             if gpu_ids is None:
-                continue  # no head-of-line blocking (Alg. 3 loops the queue)
+                failed.add(profile)
+                continue
             eng.place_job(jid, gpu_ids, now)
+            failed.clear()
             placed.append(jid)
         for jid in placed:
             eng.queue.remove(jid)

@@ -1,0 +1,75 @@
+"""Impl-dispatching wrapper for the fluid step core.
+
+``fluid_step_core`` is the single entry point the fluid simulator's hot
+loop calls once per executed tick.  The implementation is chosen by the
+``impl`` argument, defaulting to the ``REPRO_FLUID_KERNEL`` environment
+variable and finally to ``"ref"``:
+
+* ``ref``       — the historical lax composition (ref.py).  Default
+                  everywhere, including CPU CI: XLA fuses it fine and it
+                  is the bit-exactness anchor.
+* ``interpret`` — the Pallas kernel in interpreter mode (runs on CPU;
+                  used by the parity test, and useful for debugging).
+* ``tpu``       — the compiled Pallas kernel (real TPU hardware).
+
+The flag is read at trace time (the simulator jit-retraces per config),
+so flipping the env var between calls behaves as expected.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.fluidstep.kernel import _BIG, fluid_step_core_pallas
+from repro.kernels.fluidstep.ref import fluid_step_core_ref
+
+#: Environment variable selecting the implementation ("ref" default).
+FLUID_KERNEL_ENV = "REPRO_FLUID_KERNEL"
+
+FLUID_KERNEL_IMPLS = ("ref", "interpret", "tpu")
+
+
+def default_impl() -> str:
+    return os.environ.get(FLUID_KERNEL_ENV, "ref") or "ref"
+
+
+def fluid_step_core(loads, member, active, rem, bw, oversub, *,
+                    b: float, eta: float, need_overlap: bool = False,
+                    impl: str = ""):
+    """Contention/rate core of one fluid step (see ref.py for semantics).
+
+    ``loads`` is the precomputed ``(J, D)`` domain-load mask (maintained
+    incrementally by the simulator).  ``impl`` = "" resolves through
+    :data:`FLUID_KERNEL_ENV`; outputs are dtype-identical across
+    implementations (counts/k_would int32, rates float32, absent-old
+    sentinel mapped back to +inf).  ``overlap`` is None when
+    ``need_overlap`` is False on the reference path; the Pallas kernel
+    computes it unconditionally (one MXU matmul, free on TPU).
+    """
+    impl = impl or default_impl()
+    if impl not in FLUID_KERNEL_IMPLS:
+        raise ValueError(
+            f"unknown fluid step impl {impl!r}; expected one of "
+            f"{FLUID_KERNEL_IMPLS}"
+        )
+    if impl == "ref":
+        return fluid_step_core_ref(
+            loads, member, active, rem, bw, oversub,
+            b=b, eta=eta, need_overlap=need_overlap,
+        )
+    counts, k_eff, ratio, overlap, k_would, min_old = fluid_step_core_pallas(
+        loads, member, active, rem, bw, oversub,
+        b=b, eta=eta, interpret=(impl == "interpret"),
+    )
+    return {
+        "counts": counts[0].astype(jnp.int32),
+        "k_eff": k_eff[:, 0],
+        "ratio": ratio[:, 0],
+        "overlap": overlap > 0,
+        "k_would": k_would[:, 0].astype(jnp.int32),
+        "min_old_rem": jnp.where(
+            min_old[:, 0] >= _BIG / 2, jnp.inf, min_old[:, 0]
+        ),
+    }

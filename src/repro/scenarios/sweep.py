@@ -95,13 +95,16 @@ def fluid_config(
     placement: str = "lwf",
     dt: float = 0.05,
     max_steps: int = 400_000,
+    **fast_kw,
 ):
     """JaxSimConfig for a scenario: per-server bandwidth and the fabric
     topology pass through verbatim (the fluid backend drains each transfer
     at its slowest member server and at the oversub-weighted per-domain
     contention); event placement names map to their gang analogues
     (lwf->consolidate, ff->first_fit, ls->least_loaded, rand->random,
-    lwf_rack->rack_pack)."""
+    lwf_rack->rack_pack).  ``fast_kw`` forwards the fast-path knobs
+    (``skip``, ``gating``, ``compact``, ``chunk_steps``, ``kernel``) —
+    how the equivalence tests pin e.g. ``gating="rounds", skip=False``."""
     from repro.core.jaxsim import JaxSimConfig
 
     comm = canonical_comm(comm)
@@ -133,6 +136,7 @@ def fluid_config(
         # the seed is jit-static config: keep it constant unless the
         # placement actually consumes it, so seed sweeps share one compile
         placement_seed=scenario.seed if gang_mode == "random" else 0,
+        **fast_kw,
     )
 
 
@@ -142,6 +146,7 @@ def run_scenario_fluid(
     placement: str = "lwf",
     dt: float = 0.05,
     max_steps: int = 400_000,
+    **fast_kw,
 ) -> Dict[str, object]:
     """Fluid (vectorized JAX) simulation of one scenario instance (the
     scenario's WFBP ``fusion`` spec shapes the bucket planes of the
@@ -149,7 +154,8 @@ def run_scenario_fluid(
     from repro.core.jaxsim import simulate_jobs
 
     cfg = fluid_config(
-        scenario, comm=comm, placement=placement, dt=dt, max_steps=max_steps
+        scenario, comm=comm, placement=placement, dt=dt,
+        max_steps=max_steps, **fast_kw,
     )
     return simulate_jobs(scenario.job_list(), cfg, fusion=scenario.fusion)
 
@@ -302,13 +308,21 @@ def monte_carlo_fluid(
     overrides: Optional[Dict[str, object]] = None,
     dt: float = 0.05,
     max_steps: int = 400_000,
+    **fast_kw,
 ) -> List[metrics_mod.RunMetrics]:
     """All seeds of one scenario x policy x placement cell in ONE vmapped
     fluid launch: per-seed traces are padded/stacked
     (``jaxsim.stack_traces``) and swept by ``simulate_traces_batched`` —
     one XLA compilation, one device launch, one :class:`RunMetrics` per
     seed.  The contention model/cluster shape must not vary with the seed
-    (true for every registered scenario); the seed only resamples jobs."""
+    (true for every registered scenario); the seed only resamples jobs.
+
+    Stacking pads every seed's trace to the batch-max job count, but the
+    padding does NOT persist for the whole run: the chunked driver re-pads
+    per chunk, retiring finished lanes and trimming the job axis down to
+    the widest *live* lane after each compaction, so one long-tailed seed
+    no longer drags the whole batch at max width (the old driver ran every
+    lane at the global max shape for every step)."""
     import numpy as np
 
     from repro.core.jaxsim import (
@@ -320,7 +334,8 @@ def monte_carlo_fluid(
     seeds = list(seeds)
     scns = [get_scenario(scenario, seed=s, **(overrides or {})) for s in seeds]
     cfg = fluid_config(
-        scns[0], comm=comm, placement=placement, dt=dt, max_steps=max_steps
+        scns[0], comm=comm, placement=placement, dt=dt,
+        max_steps=max_steps, **fast_kw,
     )
     t0 = time.time()
     batch = stack_traces(

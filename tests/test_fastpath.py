@@ -1,0 +1,153 @@
+"""Fast-path equivalence locks for the chunked fluid simulator.
+
+The hot-loop rebuild (``core/jaxsim.py``) introduced three switchable
+mechanisms — the one-shot gating fixed point (``gating="fixedpoint"`` vs
+the legacy 4-round loop), periodic lane/job compaction (``compact``), and
+next-event skipping (``skip``).  This module pins the equivalences the
+refactor promised:
+
+* fixed point vs rounds: bit-exact metrics on the fusion x policy grid
+  (both sides run ``skip=False`` — the two gating variants define the
+  conservative ``leftover`` mask differently, which legitimately changes
+  *which* ticks the skipper may jump, so skip must be held constant for a
+  bit-exact comparison);
+* compaction on vs off: bit-exact metrics on two registry cells (lane
+  retirement + job-axis trimming are pure re-indexing);
+* recompile guard: the whole 6-policy gating matrix shares at most two
+  compiled chunk graphs per trace shape (threshold policies ride the
+  dynamic-policy sentinel, exact k-way the second graph);
+* the streaming-arrival engine stress cell scales linearly in events and
+  keeps the calendar bounded by arrivals + O(cluster).
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import jaxsim
+from repro.core.jaxsim import (
+    simulate_traces_batched,
+    stack_traces,
+    trace_from_jobs,
+)
+from repro.scenarios import QUICK_OVERRIDES, get_scenario
+from repro.scenarios.sweep import FLUID_POLICIES, fluid_config
+
+
+def _run_cell(scn_name, seeds, comm="ada", placement="lwf", fusion=None,
+              dt=0.05, **fast_kw):
+    """One batched fluid run of a registry cell, as plain numpy arrays."""
+    over = QUICK_OVERRIDES.get(scn_name, {})
+    scns = [get_scenario(scn_name, seed=s, **over) for s in seeds]
+    cfg = fluid_config(scns[0], comm=comm, placement=placement, dt=dt,
+                       **fast_kw)
+    fus = scns[0].fusion if fusion is None else fusion
+    batch = stack_traces(
+        [trace_from_jobs(s.job_list(), fusion=fus) for s in scns]
+    )
+    out = simulate_traces_batched(batch, cfg)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a["finished"], b["finished"])
+    np.testing.assert_array_equal(a["jct"], b["jct"])
+    np.testing.assert_array_equal(a["makespan"], b["makespan"])
+
+
+class TestGatingFixedPoint:
+    """One-shot analytic gating == the legacy 4-round re-gating loop."""
+
+    @pytest.mark.parametrize("fusion", ["none", 16e6])
+    @pytest.mark.parametrize("comm", ["ada", "srsf2", "kway2"])
+    def test_bit_exact_on_fusion_policy_grid(self, fusion, comm):
+        kw = dict(seeds=(0, 1), comm=comm, fusion=fusion, skip=False)
+        fp = _run_cell("model_zoo", gating="fixedpoint", **kw)
+        rounds = _run_cell("model_zoo", gating="rounds", **kw)
+        _assert_identical(fp, rounds)
+        assert fp["finished"].any()  # the cell actually exercises gating
+
+    def test_monolithic_trace_unaffected_by_gating_knob(self):
+        # fusion="all" has one bucket: the wfbp closure never runs, so the
+        # knob must be inert there (same compiled mono path)
+        kw = dict(seeds=(0,), comm="ada", fusion="all", skip=False)
+        fp = _run_cell("model_zoo", gating="fixedpoint", **kw)
+        rounds = _run_cell("model_zoo", gating="rounds", **kw)
+        _assert_identical(fp, rounds)
+
+    def test_unknown_gating_rejected(self):
+        scn = get_scenario("smoke")
+        with pytest.raises(ValueError, match="gating"):
+            cfg = fluid_config(scn, gating="psychic")
+            batch = stack_traces([trace_from_jobs(scn.job_list())])
+            simulate_traces_batched(batch, cfg)
+
+
+class TestCompaction:
+    """Lane retirement / job-axis trimming is pure re-indexing: metrics on
+    the registry cells are bit-identical with compaction disabled."""
+
+    def test_oversub_fabric_cell(self):
+        kw = dict(seeds=(0, 1, 2, 3), comm="ada")
+        on = _run_cell("oversub_fabric", compact=True, **kw)
+        off = _run_cell("oversub_fabric", compact=False, **kw)
+        _assert_identical(on, off)
+
+    def test_model_zoo_wfbp_cell(self):
+        kw = dict(seeds=(0, 1), comm="srsf2", fusion=16e6)
+        on = _run_cell("model_zoo", compact=True, **kw)
+        off = _run_cell("model_zoo", compact=False, **kw)
+        _assert_identical(on, off)
+
+
+class TestRecompileGuard:
+    def test_policy_matrix_shares_compiled_graphs(self):
+        """All six gating policies at one trace shape compile at most two
+        chunk graphs: every threshold policy (ada / srsf1-3) traces through
+        the dynamic-policy sentinel with thresholds as runtime arrays, and
+        the exact k-way policies share the lookahead graph.  ``compact``
+        is off so the whole run stays at one (lane, job, bucket) shape."""
+        over = QUICK_OVERRIDES["oversub_fabric"]
+        scn = get_scenario("oversub_fabric", seed=0, **over)
+        batch = stack_traces([trace_from_jobs(scn.job_list())])
+        before = jaxsim._chunk_jit._cache_size()
+        for comm in FLUID_POLICIES:
+            cfg = fluid_config(scn, comm=comm, compact=False)
+            out = simulate_traces_batched(batch, cfg)
+            assert np.asarray(out["finished"]).any()
+        grown = jaxsim._chunk_jit._cache_size() - before
+        assert grown <= 2, (
+            f"6-policy matrix compiled {grown} new chunk graphs (expected "
+            "<= 2: one dynamic-threshold, one exact k-way)"
+        )
+
+
+class TestEngineStreamStress:
+    """Smoke-sized twin of the ``--only engine`` 10k-job stress cell."""
+
+    def _run(self, n_jobs):
+        from benchmarks.run import stream_trace
+
+        from repro.core import simulate
+
+        jobs = stream_trace(n_jobs, seed=0)
+        return simulate(jobs, placement="lwf", comm="ada",
+                        n_servers=16, gpus_per_server=2)
+
+    def test_events_linear_and_calendar_bounded(self):
+        small = self._run(250)
+        big = self._run(500)
+        assert len(small.jct) == 250 and len(big.jct) == 500
+        # iteration counts are iid across jobs: events scale ~linearly
+        ratio = big.events_processed / small.events_processed
+        assert 1.7 < ratio < 2.3, ratio
+        # the calendar holds every future arrival (pushed up front) plus a
+        # bounded set of live simulation events — O(cluster), not O(jobs)
+        n_gpus = 16 * 2
+        assert small.peak_calendar <= 250 + 2 * n_gpus
+        assert big.peak_calendar <= 500 + 2 * n_gpus
+        assert big.peak_calendar >= 500  # arrivals alone reach n_jobs
