@@ -14,6 +14,16 @@ Multiple baseline/current pairs can be gated in one invocation:
 
     python -m benchmarks.compare a_base.json a_new.json b_base.json b_new.json
 
+``--max-wall KEY=SECONDS`` (repeatable) additionally bounds absolute
+wall-clock keys in the *current* files — how the nightly run asserts the
+100k-job trace replay still finishes inside its budget:
+
+    python -m benchmarks.compare BENCH_engine.json results/BENCH_engine.json \
+        --max-wall replay_wall_s=900
+
+A named key missing from every current file fails the gate too (a silent
+key rename must not disarm the bound).
+
 Provenance blocks (git sha / timestamp / host) from both files are
 printed alongside any regression so a nightly alert is attributable —
 absolute throughput is machine-dependent, and a cross-host comparison is
@@ -97,9 +107,25 @@ def main(argv: List[str] | None = None) -> int:
         default=0.2,
         help="max allowed fractional throughput drop (default 0.2 = 20%%)",
     )
+    ap.add_argument(
+        "--max-wall",
+        action="append",
+        default=[],
+        metavar="KEY=SECONDS",
+        help="absolute wall-clock bound on a numeric key of the current "
+        "files (repeatable); exceeding it — or the key being absent from "
+        "every current file — fails the gate",
+    )
     args = ap.parse_args(argv)
     if len(args.files) % 2:
         ap.error("expected an even number of files (baseline/current pairs)")
+    bounds: List[Tuple[str, float]] = []
+    for spec in args.max_wall:
+        key, _, limit = spec.partition("=")
+        try:
+            bounds.append((key, float(limit)))
+        except ValueError:
+            ap.error(f"bad --max-wall {spec!r}: expected KEY=SECONDS")
     all_regressions: List[str] = []
     for i in range(0, len(args.files), 2):
         lines, regressions = compare_pair(
@@ -107,6 +133,26 @@ def main(argv: List[str] | None = None) -> int:
         )
         print("\n".join(lines))
         all_regressions.extend(regressions)
+    for key, limit in bounds:
+        found = False
+        for cur_path in args.files[1::2]:
+            with open(cur_path) as f:
+                cur = json.load(f)
+            val = cur.get(key)
+            if isinstance(val, (int, float)):
+                found = True
+                verdict = "ok" if val <= limit else "OVER BUDGET"
+                print(f"{cur_path}: {key} = {val:.4g}s (max {limit:.4g}s) {verdict}")
+                if val > limit:
+                    all_regressions.append(
+                        f"{cur_path}: {key} {val:.4g}s exceeds the "
+                        f"{limit:.4g}s wall-clock bound"
+                    )
+        if not found:
+            all_regressions.append(
+                f"--max-wall {key}: key absent from every current file "
+                "(renamed or dropped? the bound cannot be enforced)"
+            )
     if all_regressions:
         print("\nTHROUGHPUT REGRESSIONS:", file=sys.stderr)
         for r in all_regressions:

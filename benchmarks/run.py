@@ -259,10 +259,14 @@ def _scenario_sweep(
     if names == ["all"]:
         names = scenario_names()
         if backend == "fluid":
-            # fault injection is event-only (run_scenario_fluid raises on
-            # an armed chaos spec): 'all' means 'all supported' here, while
-            # naming a chaos scenario explicitly still fails loudly
-            names = [n for n in names if not n.startswith("chaos_")]
+            # fault injection and streaming trace replay are event-only
+            # (run_scenario_fluid raises on an armed chaos spec or an
+            # unmaterialized source): 'all' means 'all supported' here,
+            # while naming such a scenario explicitly still fails loudly
+            names = [
+                n for n in names
+                if not n.startswith(("chaos_", "trace_replay_"))
+            ]
     sim_kw = {}
     if sched is not None:
         sim_kw["sched"] = sched
@@ -544,14 +548,28 @@ def stream_trace(n_jobs: int, seed: int = 0, mean_gap: float = 0.05,
     ]
 
 
-def bench_engine(full: bool) -> None:
+def bench_engine(
+    full: bool, n_jobs: int = None, trace_source: str = "synth"
+) -> None:
     """Throughput of the refactored event engine (events/sec on the quick
     paper cell, vs the recorded pre-refactor baseline), the 10k-job
-    streaming-arrival stress cell (events/sec + peak calendar size), plus
-    the preemptive-vs-static and elastic-vs-static avg-JCT cells on their
-    regression seeds; persists ``BENCH_engine.json`` (path override:
-    ``REPRO_BENCH_ENGINE_JSON``) for nightly trend tracking."""
-    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    streaming-arrival stress cell (events/sec + peak calendar size + the
+    per-event phase breakdown), the streaming TraceSource replay cell
+    (``n_jobs`` lazy arrivals — 100k nightly — with windowed steady-state
+    metrics), plus the preemptive-vs-static and elastic-vs-static avg-JCT
+    cells on their regression seeds; persists ``BENCH_engine.json`` (path
+    override: ``REPRO_BENCH_ENGINE_JSON``) for nightly trend tracking.
+
+    ``n_jobs`` sizes the replay cell (CLI ``--n-jobs``; default 20k quick /
+    100k with ``--full``); ``trace_source`` picks its arrival feed (CLI
+    ``--trace-source``: 'synth', 'philly', 'alibaba', or
+    'csv:<dialect>:<path>')."""
+    from repro.scenarios import (
+        QUICK_OVERRIDES,
+        get_scenario,
+        trace_source_from_spec,
+    )
+    from repro.scenarios import metrics as metrics_mod
     from repro.scenarios.sweep import run_scenario_event
 
     overrides = {} if full else QUICK_OVERRIDES["paper"]
@@ -571,21 +589,49 @@ def bench_engine(full: bool) -> None:
     )
 
     # 10k-job streaming-arrival stress cell: online arrivals at ~20 jobs/s
-    # against a 16x2 cluster — the calendar holds every future arrival up
-    # front, so peak size ~ n_jobs + O(cluster); events/sec is the
-    # engine-scalability headline the nightly run trends.
+    # against a 16x2 cluster, list mode — the calendar holds every future
+    # arrival up front, so peak size ~ n_jobs + O(cluster); events/sec is
+    # the engine-scalability headline the nightly run trends.  Profiling is
+    # on: 4 perf_counter reads per ~100us event are noise, and the phase
+    # split (gating / dispatch / comm-advance / gpu-schedule) is what makes
+    # a throughput regression attributable.
     stress_n = 10_000
     jobs = stream_trace(stress_n, seed=0)
     t0 = time.time()
     stress = simulate(jobs, placement="lwf", comm="ada",
-                      n_servers=16, gpus_per_server=2)
+                      n_servers=16, gpus_per_server=2, profile_phases=True)
     stress_wall = time.time() - t0
     stress_eps = stress.events_processed / stress_wall
+    phases = stress.phase_seconds or {}
     emit(
         "engine/stress_10k_stream",
         stress_wall * 1e6,
         f"events_per_sec={stress_eps:.0f};events={stress.events_processed};"
-        f"peak_calendar={stress.peak_calendar};finished={len(stress.jct)}",
+        f"peak_calendar={stress.peak_calendar};finished={len(stress.jct)};"
+        + ";".join(f"phase_{k}={v:.2f}" for k, v in sorted(phases.items())),
+    )
+
+    # Streaming TraceSource replay cell: the same engine consuming a lazy
+    # arrival feed — the calendar stays O(live jobs + cluster) however long
+    # the trace is, and the windowed steady-state metrics (sustained
+    # goodput, p99 JCT, queueing delay over a sliding horizon) replace
+    # whole-run averages that a 100k-job stream would wash out.
+    replay_n = n_jobs if n_jobs is not None else (100_000 if full else 20_000)
+    replay_src = trace_source_from_spec(trace_source, n_jobs=replay_n, seed=0)
+    t0 = time.time()
+    replay = simulate(replay_src, placement="lwf", comm="ada",
+                      n_servers=16, gpus_per_server=2)
+    replay_wall = time.time() - t0
+    replay_eps = replay.events_processed / replay_wall
+    replay_ss = metrics_mod.replay_summary(replay, window_s=60.0)
+    emit(
+        f"engine/trace_replay_{trace_source}",
+        replay_wall * 1e6,
+        f"events_per_sec={replay_eps:.0f};n_jobs={replay_n};"
+        f"events={replay.events_processed};"
+        f"peak_calendar={replay.peak_calendar};finished={len(replay.jct)};"
+        f"sustained_goodput={replay_ss['sustained_goodput']:.1f};"
+        f"p99_jct={replay_ss['p99_jct']:.2f}",
     )
 
     pre_scn = get_scenario("preemption_gain", seed=2)
@@ -628,6 +674,15 @@ def bench_engine(full: bool) -> None:
                 "stress_events_processed": stress.events_processed,
                 "stress_peak_calendar": stress.peak_calendar,
                 "stress_finished": len(stress.jct),
+                "stress_phase_seconds": phases,
+                "replay_trace_source": trace_source,
+                "replay_n_jobs": replay_n,
+                "replay_events_per_sec": replay_eps,
+                "replay_events_processed": replay.events_processed,
+                "replay_peak_calendar": replay.peak_calendar,
+                "replay_finished": len(replay.jct),
+                "replay_wall_s": replay_wall,
+                "replay_steady_state": replay_ss,
                 "preemption_gain_seed": 2,
                 "static_avg_jct": static.avg_jct(),
                 "preemptive_avg_jct": pre.avg_jct(),
@@ -849,6 +904,19 @@ def main() -> None:
         default=None,
         help="multiprocessing fan-out for --scenario (event backend)",
     )
+    ap.add_argument(
+        "--n-jobs",
+        type=int,
+        default=None,
+        help="job count of the --only engine streaming replay cell "
+        "(default: 20000, or 100000 with --full)",
+    )
+    ap.add_argument(
+        "--trace-source",
+        default="synth",
+        help="arrival feed of the --only engine replay cell: 'synth', "
+        "'philly', 'alibaba' (bundled samples), or 'csv:<dialect>:<path>'",
+    )
     args = ap.parse_args()
     if args.scenario:
         _scenario_sweep(
@@ -868,7 +936,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     names = args.only or list(BENCHES)
     for name in names:
-        BENCHES[name](args.full)
+        if name == "engine":
+            bench_engine(
+                args.full, n_jobs=args.n_jobs, trace_source=args.trace_source
+            )
+        else:
+            BENCHES[name](args.full)
 
 
 if __name__ == "__main__":

@@ -196,6 +196,12 @@ class Cluster:
             [self.gpus[(s, g)] for g in range(gpus_per_server)]
             for s in range(n_servers)
         ]
+        #: bumped whenever placeable capacity can have *grown* (release,
+        #: server repair).  Placement feasibility of a resource profile is
+        #: monotone between bumps — placing jobs only shrinks the feasible
+        #: set — so a failed-placement memo keyed on this epoch stays valid
+        #: across events (StaticGangPolicy._place_queue).
+        self.capacity_epoch: int = 0
 
     # -- queries -------------------------------------------------------------
     def gpu(self, gpu_id: GpuId) -> GpuState:
@@ -249,3 +255,4 @@ class Cluster:
             g = self.gpus[gid]
             g.mem_used_mb -= job.model.mem_mb
             g.resident_jobs.discard(job.job_id)
+        self.capacity_epoch += 1

@@ -58,6 +58,9 @@ import dataclasses
 import heapq
 import itertools
 import math
+import os
+import time
+from bisect import insort
 from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.core import netmodel
@@ -70,6 +73,7 @@ from repro.core.chaos import (
 )
 from repro.core.cluster import Cluster, GpuId, JobSpec
 from repro.core.contention import ContentionParams
+from repro.core.trace import TraceSource
 from repro.core.placement import PlacementPolicy
 from repro.core.schedpolicy import (
     AdaDual,
@@ -150,6 +154,13 @@ class JobRun:
     restore_cost: float = 0.0
     #: Elastic world size requested for the next iteration boundary.
     pending_resize: Optional[int] = None
+    #: memo for the nominal (non-bandwidth-aware) per-iteration service
+    #: time — the SRSF keys recompute it on every comparison, but for one
+    #: incarnation it only changes with the fusion plan / gang span (a
+    #: re-placement builds a fresh JobRun, so staleness is impossible)
+    _svc_cache: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def __post_init__(self) -> None:
         if self.samples_total == 0:
@@ -186,10 +197,21 @@ class JobRun:
         job placed on degraded links is recognized as having more service
         left.  Default False = the paper-faithful nominal estimate.
         """
+        if not bandwidth_aware:
+            # nominal estimate: pure function of (gang span, bucket count,
+            # a, b) for this incarnation — memoized, recomputed only when
+            # the fusion plan or span changes (bandwidth-aware estimates
+            # read the mutable degradation state and are never cached)
+            key = (len(self.servers) > 1, self.n_buckets, params.a, params.b)
+            cached = self._svc_cache
+            if cached is not None and cached[0] == key:
+                return cached[1]
         t = self.spec.model.t_iter_compute
         if self.has_comm:
             scale = params.bandwidth_scale(self.servers) if bandwidth_aware else 1.0
             t += self.n_buckets * params.a + params.b * self.spec.model.size_bytes / scale
+        if not bandwidth_aware:
+            self._svc_cache = (key, t)
         return t
 
     def remaining_service(
@@ -243,9 +265,11 @@ class SimResult:
     comm_started_contended: int
     comm_started_clean: int
     #: high-water mark of the event calendar (heap length) over the run —
-    #: the engine's memory footprint driver under streaming arrivals
-    #: (every arrival is pushed up front, so this is >= n_jobs; the live
-    #: simulation adds only O(cluster) outstanding events on top)
+    #: the engine's memory footprint driver.  With a materialized job list
+    #: every arrival is pushed up front, so this is >= n_jobs; with a
+    #: streaming :class:`~repro.core.trace.TraceSource` feed at most one
+    #: future arrival is in the calendar at a time, so the high-water mark
+    #: is O(cluster), independent of trace length.
     peak_calendar: int = 0
     #: name of the job scheduling policy (engine/policy split)
     sched_name: str = "static"
@@ -272,6 +296,14 @@ class SimResult:
     #: nothing — their partial progress was never delivered to anyone.
     goodput: float = 0.0
     task_trace: Optional[List[Tuple]] = None  # (job, iter, kind, worker, t0, t1)
+    #: per-job delivered samples at finish time — the basis of the windowed
+    #: goodput view (long replays care about *sustained* throughput, not the
+    #: single makespan-frame average)
+    job_samples: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: opt-in (``profile_phases=True``) wall seconds per engine phase over
+    #: the whole run: comm_advance / dispatch / gating / gpu_schedule.
+    #: None when profiling was off (the default — zero overhead).
+    phase_seconds: Optional[Dict[str, float]] = None
 
     def avg_jct(self) -> float:
         return sum(self.jct.values()) / len(self.jct)
@@ -287,6 +319,104 @@ class SimResult:
         restarts hit the tail far harder than the mean)."""
         return percentile(list(self.jct.values()), 0.99)
 
+    # -- windowed steady-state view (trace-replay scale) ----------------------
+    def windowed(self, window_s: float) -> List[Dict[str, float]]:
+        """Bucket finished jobs into ``[i*w, (i+1)*w)`` windows over the run
+        and report per-window completion stats.
+
+        The finite-makespan frame (one average over the whole run) is the
+        wrong lens for a 100k-arrival replay: it mixes the empty ramp-up,
+        the steady state, and the final drain.  Each window row carries::
+
+            t0, t1              window bounds (seconds)
+            n_finished          jobs completing in the window
+            goodput             delivered samples / window_s
+            jobs_per_sec        completion rate
+            p99_jct             nearest-rank p99 JCT of the window's jobs
+            queueing_delay_mean mean queueing delay of the window's jobs
+
+        Jobs are attributed to the window containing their *finish* time
+        (the only instant at which JCT exists).
+        """
+        if window_s <= 0:
+            raise ValueError(f"window_s must be positive, got {window_s}")
+        if not self.finish:
+            return []
+        rows = sorted(
+            (
+                f,
+                self.jct[j],
+                self.queueing_delay.get(j, 0.0),
+                self.job_samples.get(j, 0),
+            )
+            for j, f in self.finish.items()
+        )
+        n_win = int(self.makespan // window_s) + 1
+        out: List[Dict[str, float]] = []
+        i = 0
+        for w in range(n_win):
+            t0, t1 = w * window_s, (w + 1) * window_s
+            jcts: List[float] = []
+            qds: List[float] = []
+            samples = 0
+            while i < len(rows) and rows[i][0] < t1:
+                _, jct, qd, s = rows[i]
+                jcts.append(jct)
+                qds.append(qd)
+                samples += s
+                i += 1
+            out.append(
+                {
+                    "t0": t0,
+                    "t1": t1,
+                    "n_finished": float(len(jcts)),
+                    "goodput": samples / window_s,
+                    "jobs_per_sec": len(jcts) / window_s,
+                    "p99_jct": percentile(jcts, 0.99),
+                    "queueing_delay_mean": (
+                        sum(qds) / len(qds) if qds else math.nan
+                    ),
+                }
+            )
+        return out
+
+    def steady_state(
+        self, window_s: float, warmup_frac: float = 0.1
+    ) -> Dict[str, float]:
+        """Sliding-horizon summary for long replays: drop the warmup prefix
+        (first ``warmup_frac`` of the makespan) and the trailing partial
+        window (the drain), then summarize the surviving body windows.
+
+        ``sustained_goodput`` / ``sustained_jobs_per_sec`` are *medians* over
+        the body windows (robust to a single empty or bursty window); the
+        JCT/queueing-delay tails are nearest-rank percentiles over every job
+        finishing inside the body interval.  Falls back to all windows when
+        the run is too short for a warmup cut to leave anything."""
+        wins = self.windowed(window_s)
+        if not wins:
+            return {}
+        warmup_t = warmup_frac * self.makespan
+        body = [w for w in wins[:-1] if w["t0"] >= warmup_t] or wins
+        t_lo, t_hi = body[0]["t0"], body[-1]["t1"]
+        jcts = [self.jct[j] for j, f in self.finish.items() if t_lo <= f < t_hi]
+        qds = [
+            self.queueing_delay.get(j, 0.0)
+            for j, f in self.finish.items()
+            if t_lo <= f < t_hi
+        ]
+        return {
+            "window_s": window_s,
+            "t_lo": t_lo,
+            "t_hi": t_hi,
+            "n_windows": float(len(body)),
+            "n_jobs": float(len(jcts)),
+            "sustained_goodput": median([w["goodput"] for w in body]),
+            "sustained_jobs_per_sec": median([w["jobs_per_sec"] for w in body]),
+            "p99_jct": percentile(jcts, 0.99),
+            "queueing_delay_mean": sum(qds) / len(qds) if qds else math.nan,
+            "queueing_delay_p99": percentile(qds, 0.99),
+        }
+
 
 # ---------------------------------------------------------------------------
 # The engine
@@ -300,7 +430,7 @@ class EventEngine:
 
     def __init__(
         self,
-        jobs: Sequence[JobSpec],
+        jobs: Union[Sequence[JobSpec], TraceSource],
         cluster: Optional[Cluster] = None,
         placement: Optional[PlacementPolicy] = None,
         comm_policy: Optional[CommPolicy] = None,
@@ -317,8 +447,20 @@ class EventEngine:
         preemption_quantum: Optional[float] = None,  # tick for named scheds
         checkpoint_cost: Optional[float] = None,  # None = netmodel model
         chaos: Optional[ChaosSpec] = None,  # fault injection (core/chaos.py)
+        gating: Optional[str] = None,  # incremental (default) | rescan
+        profile_phases: bool = False,  # per-phase wall-clock counters
     ) -> None:
-        self.jobs = {j.job_id: j for j in jobs}
+        # Streaming arrival feed (trace-replay scale): a TraceSource yields
+        # arrivals lazily, so the calendar holds at most ONE future arrival
+        # instead of the whole trace — O(cluster) memory at 100k+ jobs.
+        # A materialized job list keeps the legacy all-up-front behaviour
+        # bit-for-bit.
+        if isinstance(jobs, TraceSource):
+            self._source: Optional[TraceSource] = jobs
+            self.jobs: Dict[int, JobSpec] = {}
+        else:
+            self._source = None
+            self.jobs = {j.job_id: j for j in jobs}
         self.cluster = cluster or Cluster()
         self.placement = placement or PlacementPolicy("lwf", kappa=1)
         self.comm_policy = comm_policy or AdaDual()
@@ -390,6 +532,27 @@ class EventEngine:
             sched = sched_policy_from_name(sched, quantum=preemption_quantum)
         self.sched = sched
         self.checkpoint_cost = checkpoint_cost
+        # Communication gating strategy: "incremental" re-evaluates only
+        # waiters whose contention domains were touched since their last
+        # evaluation (bit-exact with the full rescan — see
+        # _try_start_comms_incremental); "rescan" is the legacy
+        # every-waiter-every-event reference the differential tests lock
+        # against.  REPRO_GATING overrides the default for A/B runs.
+        if gating is None:
+            gating = os.environ.get("REPRO_GATING", "incremental")
+        if gating not in ("incremental", "rescan"):
+            raise ValueError(
+                f"unknown gating mode {gating!r} (expected 'incremental' or "
+                "'rescan')"
+            )
+        self.gating = gating
+        self.profile_phases = profile_phases
+        self._phase_seconds: Optional[Dict[str, float]] = (
+            {"comm_advance": 0.0, "dispatch": 0.0, "gating": 0.0,
+             "gpu_schedule": 0.0}
+            if profile_phases
+            else None
+        )
 
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._peak_heap = 0
@@ -409,6 +572,13 @@ class EventEngine:
         #: produced (bit-exact), without the O(active^2) rescans.
         self._domain_load: Dict[object, int] = {}
         self._waiting_comm: List[int] = []  # job ids with gated all-reduce
+        self._waiting_set: Set[int] = set()  # same ids, O(1) membership
+        #: incremental gating indexes: waiters per contention domain, and
+        #: the set of waiters whose gating decision may have changed since
+        #: their last evaluation (new waiters + waiters on domains touched
+        #: by a comm start/end/abort) — see _try_start_comms_incremental
+        self._domain_waiters: Dict[object, Set[int]] = {}
+        self._gate_candidates: Set[int] = set()
         self._comm_epoch = 0
         self._last_comm_update = 0.0
         self._dirty_gpus: Set[GpuId] = set()
@@ -417,6 +587,23 @@ class EventEngine:
         self._comm_clean = 0
         self._trace: List[Tuple] = []
         self._unfinished = set(self.jobs)
+        # Streaming-feed state: the lazy arrival iterator, how many arrival
+        # events are in the calendar but not yet processed (at most 1), the
+        # monotonicity check on source order, how many jobs have *entered*
+        # the system (== len(jobs) in list mode), and runs awaiting
+        # end-of-event retirement (streaming keeps memory O(live jobs)).
+        self._stream: Optional[Iterator[JobSpec]] = None
+        self._arrivals_pending = 0
+        self._last_arrival = -math.inf
+        self._n_seen = len(self.jobs)
+        self._retire_buf: List[int] = []
+        # Per-job results recorded at finish time (the streaming feed
+        # retires finished runs, so results cannot be collected from _runs
+        # at the end the way list mode does).
+        self._jct_at_finish: Dict[int, float] = {}
+        self._finish_at: Dict[int, float] = {}
+        self._qdelay_at_finish: Dict[int, float] = {}
+        self._job_samples: Dict[int, int] = {}
         # Preemption/elasticity mechanism state:
         self._carry: Dict[int, _Carry] = {}  # progress of requeued jobs
         self._epoch_of: Dict[int, int] = {}  # run incarnation (tombstones)
@@ -490,6 +677,7 @@ class EventEngine:
     def _comm_started(self, task: CommTask) -> None:
         for d in task.domains:
             self._domain_load[d] = self._domain_load.get(d, 0) + 1
+        self._mark_domains_dirty(task.domains)
 
     def _comm_ended(self, task: CommTask) -> None:
         for d in task.domains:
@@ -498,6 +686,41 @@ class EventEngine:
                 self._domain_load[d] = left
             else:
                 del self._domain_load[d]
+        self._mark_domains_dirty(task.domains)
+
+    # -- incremental gating indexes -------------------------------------------
+    def _waiter_add(self, jid: int, run: JobRun) -> None:
+        """Enqueue a gated all-reduce: the waiter list (SRSF evaluation
+        order lives there), the per-domain index, and the candidate set —
+        a fresh waiter always gets its first evaluation."""
+        self._waiting_comm.append(jid)
+        self._waiting_set.add(jid)
+        for d in run.domains:
+            self._domain_waiters.setdefault(d, set()).add(jid)
+        self._gate_candidates.add(jid)
+
+    def _waiter_drop(self, jid: int, domains: frozenset) -> None:
+        """Remove a waiter from every gating index (started / preempted /
+        cancelled).  ``domains`` is passed explicitly because teardown
+        paths pop the run from ``_runs`` before cleaning the indexes."""
+        self._waiting_comm.remove(jid)
+        self._waiting_set.discard(jid)
+        for d in domains:
+            ws = self._domain_waiters.get(d)
+            if ws is not None:
+                ws.discard(jid)
+                if not ws:
+                    del self._domain_waiters[d]
+        self._gate_candidates.discard(jid)
+
+    def _mark_domains_dirty(self, domains: frozenset) -> None:
+        """A comm start/end/abort touched these domains: every waiter
+        sharing one must be re-evaluated (its ``olds`` set or ``max_conc``
+        input just changed)."""
+        for d in domains:
+            ws = self._domain_waiters.get(d)
+            if ws:
+                self._gate_candidates.update(ws)
 
     def _comm_k_eff(self, task: CommTask) -> float:
         """Effective contention for the Eq. (5) *rate*: per-domain count
@@ -598,12 +821,12 @@ class EventEngine:
         workers have finished its backward segment and (b) the job's comm
         stream is free (buckets serialize FIFO, the PyTorch-DDP model)."""
         jid = run.spec.job_id
-        if run.comm_active or jid in self._waiting_comm:
+        if run.comm_active or jid in self._waiting_set:
             return
         if run.next_bucket >= run.n_buckets:
             return
         if run.next_bucket < min(run.b_prog):
-            self._waiting_comm.append(jid)
+            self._waiter_add(jid, run)
 
     # -- the decision API (called by SchedPolicy hooks) ------------------------
     def refresh_workloads(self) -> None:
@@ -682,8 +905,8 @@ class EventEngine:
                 g.busy_job = None
             self._dirty_gpus.add(gid)
         self.cluster.release(run.spec, run.gpus)
-        if job_id in self._waiting_comm:
-            self._waiting_comm.remove(job_id)
+        if job_id in self._waiting_set:
+            self._waiter_drop(job_id, run.domains)
         if job_id in self._active_comm:
             self._abort_comm(job_id)
         self._carry[job_id] = _Carry(
@@ -692,7 +915,9 @@ class EventEngine:
             samples_total=run.samples_total,
             restore_cost=self._checkpoint_cost_of(run),
         )
-        self._queue.append(job_id)
+        # the queue is kept sorted by srsf_key_queued (the carry above is
+        # what the key reads, so it must be set before this insort)
+        insort(self._queue, job_id, key=self.srsf_key_queued)
         self._preemptions += 1
         if self.record_trace:
             # drop the aborted in-progress iteration's records (they will
@@ -828,6 +1053,7 @@ class EventEngine:
         self._down_servers.discard(server)
         for g in self.cluster.gpus_of_server(server):
             g.down = False
+        self.cluster.capacity_epoch += 1  # placeable capacity grew
         self._advance_failure(server)
         self.sched.on_recovery(now, server)
 
@@ -883,8 +1109,8 @@ class EventEngine:
                     g.busy_job = None
                 self._dirty_gpus.add(gid)
             self.cluster.release(run.spec, run.gpus)
-            if job_id in self._waiting_comm:
-                self._waiting_comm.remove(job_id)
+            if job_id in self._waiting_set:
+                self._waiter_drop(job_id, run.domains)
             if job_id in self._active_comm:
                 self._abort_comm(job_id)
             if self.record_trace:
@@ -898,9 +1124,74 @@ class EventEngine:
         self.sched.on_job_finish(now, job_id)
 
     # -- communication gating -----------------------------------------------------
+    def _gate_try_one(self, jid: int, run: JobRun, now: float) -> bool:
+        """Evaluate the gating policy for one waiter and commit the start
+        when it accepts.  Returns True iff a transfer started.  This body
+        is shared verbatim by the rescan and incremental paths, so the two
+        modes can only differ in *which* waiters they evaluate."""
+        servers = run.servers
+        domains = run.domains
+        olds = [t for t in self._active_comm.values() if t.domains & domains]
+        max_conc = 0
+        for d in domains:
+            max_conc = max(max_conc, self._domain_load.get(d, 0))
+        # WFBP: the gating decision and the transfer carry the
+        # current *bucket's* bytes, not the whole message.
+        if run.plan is not None:
+            bucket = run.next_bucket
+            new_bytes = run.plan[0][bucket]
+        else:
+            bucket = -1
+            new_bytes = run.spec.model.size_bytes
+        ok = self.comm_policy.should_start(
+            new_bytes,
+            [t.remaining_bytes for t in olds],
+            max_conc,
+            self.params,
+        )
+        if not ok:
+            return False
+        self._waiter_drop(jid, domains)
+        task = CommTask(
+            job_id=jid,
+            servers=set(servers),
+            remaining_bytes=(
+                new_bytes
+                if run.plan is not None
+                else run.spec.model.size_bytes / self.comm_chunks
+            ),
+            latency_left=self.params.a,
+            domains=domains,
+            bucket=bucket,
+        )
+        self._active_comm[jid] = task
+        self._comm_started(task)
+        if run.plan is not None:
+            run.next_bucket += 1
+        else:
+            run.comm_chunks_left -= 1
+        run.comm_active = True
+        if max_conc > 0:
+            self._comm_contended += 1
+        else:
+            self._comm_clean += 1
+        if self.record_trace:
+            kind = "c" if bucket < 0 else f"c{bucket}"
+            self._trace.append((jid, run.iter_done, kind, -1, now, None))
+        return True
+
     def _try_start_comms(self, now: float) -> bool:
         if not self._waiting_comm:
             return False
+        if self.gating == "rescan":
+            return self._try_start_comms_rescan(now)
+        return self._try_start_comms_incremental(now)
+
+    def _try_start_comms_rescan(self, now: float) -> bool:
+        """Legacy reference gating: evaluate EVERY waiter in SRSF order on
+        every call, restarting from the top after each start.  O(waiters x
+        evaluations) per event — kept as the differential-test oracle for
+        the incremental path (REPRO_GATING=rescan)."""
         any_started = False
         # Alg. 3 line 16: consider ready communication tasks in SRSF order.
         self._waiting_comm.sort(key=self.srsf_key_running)
@@ -910,64 +1201,83 @@ class EventEngine:
             for jid in list(self._waiting_comm):
                 run = self._runs[jid]
                 if run.comm_active or jid in self._active_comm:
-                    self._waiting_comm.remove(jid)
+                    self._waiter_drop(jid, run.domains)
                     continue
-                servers = run.servers
-                domains = run.domains
-                olds = [
-                    t for t in self._active_comm.values() if t.domains & domains
-                ]
-                max_conc = 0
-                for d in domains:
-                    max_conc = max(max_conc, self._domain_load.get(d, 0))
-                # WFBP: the gating decision and the transfer carry the
-                # current *bucket's* bytes, not the whole message.
-                if run.plan is not None:
-                    bucket = run.next_bucket
-                    new_bytes = run.plan[0][bucket]
-                else:
-                    bucket = -1
-                    new_bytes = run.spec.model.size_bytes
-                ok = self.comm_policy.should_start(
-                    new_bytes,
-                    [t.remaining_bytes for t in olds],
-                    max_conc,
-                    self.params,
-                )
-                if not ok:
-                    continue
-                self._waiting_comm.remove(jid)
-                task = CommTask(
-                    job_id=jid,
-                    servers=set(servers),
-                    remaining_bytes=(
-                        new_bytes
-                        if run.plan is not None
-                        else run.spec.model.size_bytes / self.comm_chunks
-                    ),
-                    latency_left=self.params.a,
-                    domains=domains,
-                    bucket=bucket,
-                )
-                self._active_comm[jid] = task
-                self._comm_started(task)
-                if run.plan is not None:
-                    run.next_bucket += 1
-                else:
-                    run.comm_chunks_left -= 1
-                run.comm_active = True
-                if max_conc > 0:
-                    self._comm_contended += 1
-                else:
-                    self._comm_clean += 1
-                if self.record_trace:
-                    kind = "c" if bucket < 0 else f"c{bucket}"
-                    self._trace.append(
-                        (jid, run.iter_done, kind, -1, now, None)
-                    )
-                started_any = True
-                any_started = True
-                break  # re-evaluate contention state after each start
+                if self._gate_try_one(jid, run, now):
+                    started_any = True
+                    any_started = True
+                    break  # re-evaluate contention state after each start
+        return any_started
+
+    def _try_start_comms_incremental(self, now: float) -> bool:
+        """Dirty-domain gating: evaluate only waiters whose decision inputs
+        may have changed — fresh waiters, plus waiters sharing a contention
+        domain with any comm start/end/abort since their last evaluation
+        (``_gate_candidates``, maintained by ``_comm_started`` /
+        ``_comm_ended`` / ``_waiter_add``).
+
+        Bit-exactness with the rescan rests on three facts:
+
+        1. Within one pass, candidates are evaluated in the same SRSF order
+           the rescan sorts the full waiter list into (identical keys), and
+           a start restarts evaluation with the fresh contention state —
+           waiters woken by the start (its domains just got dirtied) merge
+           into the candidate set, exactly the waiters whose inputs the
+           start changed.  A waiter NOT sharing a domain with the start has
+           an unchanged ``olds`` list (``_active_comm`` is insertion-
+           ordered and only appended to here) and unchanged ``max_conc``,
+           so re-evaluating it (as the rescan does) provably returns the
+           same False as its last evaluation this pass.
+        2. Between events under a *fixed* active set, in-flight transfers
+           only drain.  For the drain-monotone policies (AdaDUAL: start iff
+           ``new < min(olds) * threshold`` with a ``max_conc`` cap — drain
+           shrinks ``min(olds)``; SRSF(n): depends on ``max_conc`` only) a
+           False decision stays False until a start/end/abort touches the
+           waiter's domains, which is precisely when it re-enters the
+           candidate set.  Skipping the re-evaluation is unobservable.
+        3. Policies that are NOT drain-monotone (the k-way exact lookahead
+           integrates the actual remaining bytes, so mere drain can flip
+           its decision) declare ``drain_monotone = False`` and are
+           re-evaluated in full every event — the rescan itself, through
+           the shared ``_gate_try_one`` body.
+
+        Chaos paths that mutate comm state outside this function
+        (``_abort_comm``, NIC bandwidth changes replacing ``params``) set
+        ``_comm_dirty``, which forces a full-waiter pass for that event.
+
+        Locked by tests/test_gating_incremental.py across the fusion x
+        policy x chaos x sched grid."""
+        if self._comm_dirty or not self.comm_policy.drain_monotone:
+            cand = set(self._waiting_comm)
+            self._gate_candidates.clear()
+        else:
+            if not self._gate_candidates:
+                return False
+            cand = self._gate_candidates
+            self._gate_candidates = set()
+        any_started = False
+        while cand:
+            restart = False
+            for jid in sorted(cand, key=self.srsf_key_running):
+                run = self._runs[jid]
+                if run.comm_active or jid in self._active_comm:
+                    # defensive mirror of the rescan's cleanup path
+                    self._waiter_drop(jid, run.domains)
+                    cand.discard(jid)
+                    restart = True
+                    break
+                if self._gate_try_one(jid, run, now):
+                    any_started = True
+                    cand.discard(jid)
+                    # the start dirtied its domains: merge the woken
+                    # waiters and restart with fresh contention state
+                    cand |= self._gate_candidates
+                    self._gate_candidates.clear()
+                    restart = True
+                    break
+                cand.discard(jid)
+            if not restart:
+                break  # every candidate evaluated False — pass complete
         return any_started
 
     # -- iteration/worker state machine ---------------------------------------------
@@ -994,10 +1304,26 @@ class EventEngine:
 
     def _finish_job(self, run: JobRun, now: float) -> None:
         run.finished_at = now
+        jid = run.spec.job_id
         self.cluster.release(run.spec, run.gpus)
         self._dirty_gpus.update(run.gpus)
-        self._unfinished.discard(run.spec.job_id)
-        self._live.pop(run.spec.job_id, None)
+        self._unfinished.discard(jid)
+        self._live.pop(jid, None)
+        # Results are recorded at finish time (list mode re-derives them
+        # from _runs at collection for the legacy float-order guarantees;
+        # streaming mode retires the run below, so this is the only copy).
+        self._finish_at[jid] = now
+        self._jct_at_finish[jid] = now - run.spec.arrival
+        self._qdelay_at_finish[jid] = (
+            self._first_placed.get(jid, run.placed_at) - run.spec.arrival
+        )
+        self._job_samples[jid] = run.samples_done
+        if self._source is not None:
+            # streaming feed: drop the finished run's state at the end of
+            # this event so memory stays O(live jobs) over a 100k+ replay
+            # (not immediately — the current event's handlers may still
+            # hold references, e.g. the finished-comms loop)
+            self._retire_buf.append(jid)
 
     def _on_backward_done(self, run: JobRun, now: float) -> None:
         if len(run.b_done) < run.n_world:
@@ -1005,12 +1331,12 @@ class EventEngine:
         # Barrier reached (Fig. 3: all-reduce waits for all backprops).
         if run.has_comm:
             jid = run.spec.job_id
-            assert jid not in self._waiting_comm and not run.comm_active, (
+            assert jid not in self._waiting_set and not run.comm_active, (
                 f"duplicate barrier for job {jid}"
             )
             run.comm_ready_at = now
             run.comm_chunks_left = self.comm_chunks
-            self._waiting_comm.append(jid)
+            self._waiter_add(jid, run)
         else:
             self._complete_iteration(run, now)
 
@@ -1100,17 +1426,79 @@ class EventEngine:
                     tkind = kind if seg < 0 else f"{kind}{seg}"
                     self._trace.append((jid, run.iter_done, tkind, w, now, now + dur))
 
+    # -- streaming arrival feed (TraceSource) -------------------------------------
+    def _push_next_arrival(self) -> None:
+        """Pull ONE arrival ahead from the streaming source into the
+        calendar.  Exactly one future arrival is outstanding at a time, so
+        the calendar stays O(cluster) regardless of trace length."""
+        spec = next(self._stream, None)
+        if spec is None:
+            self._stream = None
+            return
+        if spec.arrival < self._last_arrival:
+            raise ValueError(
+                f"TraceSource must yield arrivals in nondecreasing order: "
+                f"job {spec.job_id} arrives at {spec.arrival} after "
+                f"{self._last_arrival}"
+            )
+        if spec.job_id in self.jobs:
+            raise ValueError(f"TraceSource repeated job_id {spec.job_id}")
+        self._last_arrival = spec.arrival
+        self._push(spec.arrival, "arrival", (spec,))
+        self._arrivals_pending += 1
+
+    def _register_arrival(self, spec: JobSpec, now: float) -> None:
+        """A streamed arrival event fired: the job enters the system now
+        (list mode registers everything in __init__ instead)."""
+        jid = spec.job_id
+        self.jobs[jid] = spec
+        self._unfinished.add(jid)
+        self._n_seen += 1
+        self._arrivals_pending -= 1
+        if self._chaos is not None:
+            # per-arrival twin of _seed_chaos_events' cancellation seeding
+            t_c = cancel_time(self._chaos, jid, spec.arrival)
+            if t_c is not None:
+                self._push(max(t_c, spec.arrival), "cancel", (jid,))
+        self._push_next_arrival()
+
+    def _retire_finished(self) -> None:
+        """Streaming-only end-of-event cleanup: drop finished runs' state so
+        a 100k-job replay holds O(live jobs) memory.  Results were already
+        recorded at finish time; gpu_done tombstones survive via the
+        ``_runs.get`` guard in the main loop (a stale event of a retired
+        job simply finds no run)."""
+        for jid in self._retire_buf:
+            self._runs.pop(jid, None)
+            self.jobs.pop(jid, None)
+            self._first_placed.pop(jid, None)
+            self._epoch_of.pop(jid, None)
+        self._retire_buf.clear()
+
     # -- main loop ----------------------------------------------------------------
     def run(self, max_time: float = math.inf) -> SimResult:
-        for spec in self.jobs.values():
-            self._push(spec.arrival, "arrival", (spec.job_id,))
-        if self.sched.quantum is not None and self.jobs:
-            first = min(s.arrival for s in self.jobs.values())
-            self._push(first + self.sched.quantum, "quantum", ())
+        if self._source is not None:
+            self._stream = iter(self._source.arrivals())
+            self._push_next_arrival()
+        else:
+            for spec in self.jobs.values():
+                self._push(spec.arrival, "arrival", (spec.job_id,))
+        if self.sched.quantum is not None:
+            if self.jobs:
+                first = min(s.arrival for s in self.jobs.values())
+            elif self._heap:
+                first = self._heap[0][0]  # streaming: the one-ahead arrival
+            else:
+                first = None
+            if first is not None:
+                self._push(first + self.sched.quantum, "quantum", ())
         if self._chaos is not None:
             self._seed_chaos_events()
+        prof = self._phase_seconds
+        perf = time.perf_counter
+        streaming = self._source is not None
         now = 0.0
-        while self._heap and self._unfinished:
+        while self._heap and (self._unfinished or self._arrivals_pending):
             t, _, kind, data = heapq.heappop(self._heap)
             if kind == "comm_check" and data[0] != self._comm_epoch:
                 continue
@@ -1119,6 +1507,8 @@ class EventEngine:
             now = t
             self._events += 1
             self._comm_dirty = False
+            if prof is not None:
+                t0 = perf()
 
             finished_comms = self._advance_comm(now)
             for jid in finished_comms:
@@ -1144,21 +1534,33 @@ class EventEngine:
                 elif run.comm_chunks_left > 0:
                     # chunked comm: re-queue the next chunk (it competes for
                     # the link like a fresh task — preemption point)
-                    self._waiting_comm.append(jid)
+                    self._waiter_add(jid, run)
                 else:
                     self._complete_iteration(run, now)
+            if prof is not None:
+                t1 = perf()
+                prof["comm_advance"] += t1 - t0
 
             if kind == "arrival":
-                self._queue.append(data[0])
-                self.sched.on_arrival(now, data[0])
+                if streaming:
+                    spec = data[0]
+                    jid = spec.job_id
+                    self._register_arrival(spec, now)
+                else:
+                    jid = data[0]
+                # the queue is kept in srsf_key_queued order (the key is
+                # static while a job waits, so one insort here replaces the
+                # pre-split full sort on every placement scan)
+                insort(self._queue, jid, key=self.srsf_key_queued)
+                self.sched.on_arrival(now, jid)
             elif kind == "gpu_done":
                 gid, jid, w, tkind, seg, epoch = data
-                if epoch == self._epoch_of.get(jid, 0):
+                run = self._runs.get(jid)
+                if run is not None and epoch == self._epoch_of.get(jid, 0):
                     g = self.cluster.gpus[gid]
                     g.busy_until = None
                     g.busy_job = None
                     self._dirty_gpus.add(gid)
-                    run = self._runs[jid]
                     if run.plan is not None:
                         if tkind == "f":
                             run.f_done.add(w)
@@ -1185,7 +1587,7 @@ class EventEngine:
                 # or a pending event; otherwise the tick would spin forever
                 # on a stuck (never-placeable) queue the way the pre-split
                 # simulator's drained heap never could
-                if self._unfinished and (
+                if (self._unfinished or self._arrivals_pending) and (
                     self._heap
                     or any(r.finished_at is None for r in self._runs.values())
                 ):
@@ -1210,11 +1612,19 @@ class EventEngine:
                     if run is not None and run.finished_at is not None:
                         self.sched.on_job_finish(now, j)
                         break  # one re-evaluation per event (pre-split shape)
+            if prof is not None:
+                t2 = perf()
+                prof["dispatch"] += t2 - t1
 
             # Gating re-evaluated whenever comm state may have changed or new
             # barriers were reached this event.
             started = self._try_start_comms(now)
+            if prof is not None:
+                t3 = perf()
+                prof["gating"] += t3 - t2
             self._schedule_gpus(now)
+            if prof is not None:
+                prof["gpu_schedule"] += perf() - t3
             # Rates only change when the active comm set changes, so the
             # pending finish prediction stays valid otherwise.  A comm_check
             # that finished nothing (float drift) must still reschedule, or
@@ -1222,29 +1632,48 @@ class EventEngine:
             # abort an active transfer (preemption) also change the rates.
             if started or finished_comms or kind == "comm_check" or self._comm_dirty:
                 self._reschedule_comm_check()
+            if self._retire_buf:
+                self._retire_finished()
 
         return self._collect(now)
 
     # -- results ------------------------------------------------------------------
     def _collect(self, now: float) -> SimResult:
-        jct, finish, qdelay = {}, {}, {}
-        for jid, run in self._runs.items():
-            if run.finished_at is not None:
-                finish[jid] = run.finished_at
-                jct[jid] = run.finished_at - run.spec.arrival
-                qdelay[jid] = (
-                    self._first_placed.get(jid, run.placed_at) - run.spec.arrival
-                )
+        if self._source is None:
+            # List mode: re-derive results from the (never-retired) runs in
+            # their _runs insertion order — the pre-split float accumulation
+            # order, kept bit-exact for the captured-baseline locks.
+            jct, finish, qdelay = {}, {}, {}
+            for jid, run in self._runs.items():
+                if run.finished_at is not None:
+                    finish[jid] = run.finished_at
+                    jct[jid] = run.finished_at - run.spec.arrival
+                    qdelay[jid] = (
+                        self._first_placed.get(jid, run.placed_at)
+                        - run.spec.arrival
+                    )
+            # Delivered throughput: samples completed by finished or still-
+            # live jobs (runs + requeued carries).  Cancelled jobs left the
+            # system with their partial progress — not delivered, not
+            # counted.
+            delivered = sum(r.samples_done for r in self._runs.values()) + sum(
+                c.samples_done for c in self._carry.values()
+            )
+        else:
+            # Streaming mode: finished runs were retired as the replay went,
+            # so the finish-time records are the only copy (finish order).
+            jct = self._jct_at_finish
+            finish = self._finish_at
+            qdelay = self._qdelay_at_finish
+            delivered = (
+                sum(self._job_samples.values())
+                + sum(r.samples_done for r in self._runs.values())
+                + sum(c.samples_done for c in self._carry.values())
+            )
         makespan = max(finish.values()) if finish else now
         busy = {gid: g.busy_accum for gid, g in self.cluster.gpus.items()}
         util = (
             sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
-        )
-        # Delivered throughput: samples completed by finished or still-live
-        # jobs (runs + requeued carries).  Cancelled jobs left the system
-        # with their partial progress — not delivered, not counted.
-        delivered = sum(r.samples_done for r in self._runs.values()) + sum(
-            c.samples_done for c in self._carry.values()
         )
         return SimResult(
             policy_name=self.comm_policy.name,
@@ -1263,8 +1692,12 @@ class EventEngine:
             # cancelled jobs are an explicit outcome, not silent truncation:
             # censored counts only jobs cut off by the horizon or stranded
             # unplaced (a breakdown-preempted job still queued at max_time
-            # lands here — it must not vanish from the aggregates)
-            censored=len(self.jobs) - len(finish) - self._cancelled,
+            # lands here — it must not vanish from the aggregates).
+            # _n_seen is the number of jobs that ENTERED the system: all of
+            # them in list mode, only processed arrivals in streaming mode
+            # (an un-yielded arrival past the horizon was never censored —
+            # it never existed).
+            censored=self._n_seen - len(finish) - self._cancelled,
             preemptions=self._preemptions,
             resizes=self._resizes,
             faults=self._faults,
@@ -1272,4 +1705,8 @@ class EventEngine:
             work_lost_samples=self._work_lost_samples,
             goodput=(delivered / makespan) if makespan > 0 else 0.0,
             task_trace=self._trace if self.record_trace else None,
+            job_samples=dict(self._job_samples),
+            phase_seconds=(
+                dict(self._phase_seconds) if self._phase_seconds else None
+            ),
         )

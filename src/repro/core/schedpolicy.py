@@ -67,6 +67,19 @@ class CommPolicy:
     """
 
     name = "base"
+    #: Declares that a False ``should_start`` decision cannot flip to True
+    #: while the in-flight transfers merely *drain* (no start/end/abort on
+    #: the waiter's domains).  The engine's incremental gating skips
+    #: re-evaluating stably-False waiters only when this is True; False is
+    #: the safe default — the engine then re-evaluates every waiter on
+    #: every event, which is the full-rescan behaviour through the
+    #: incremental code path.  AdaDUAL qualifies (start iff ``new_bytes <
+    #: min(old_remaining) * threshold`` under a ``max_concurrent`` cap, and
+    #: drain only shrinks ``min(old_remaining)``); SRSF(n) qualifies
+    #: trivially (reads ``max_concurrent`` only).  The exact k-way
+    #: lookahead does NOT — it integrates the actual remaining bytes, so
+    #: drain alone can flip its decision.
+    drain_monotone = False
 
     def should_start(
         self,
@@ -81,6 +94,8 @@ class CommPolicy:
 class SrsfN(CommPolicy):
     """SRSF(n): accept at most n-way contention, blindly (paper baselines)."""
 
+    drain_monotone = True  # decision reads max_concurrent only
+
     def __init__(self, n: int) -> None:
         self.n = n
         self.name = f"SRSF({n})"
@@ -93,6 +108,10 @@ class AdaDual(CommPolicy):
     """The paper's AdaDUAL (Algorithm 2)."""
 
     name = "Ada-SRSF"
+    #: Theorem 2's test is ``new/min(old) < threshold`` (plus the 2-way
+    #: cap): drain shrinks ``min(old)``, so False decisions stay False
+    #: until the active set itself changes.
+    drain_monotone = True
 
     def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
         return adadual_should_start(new_bytes, old_remaining, max_concurrent, params)
@@ -100,6 +119,9 @@ class AdaDual(CommPolicy):
 
 class KWayAdaDual(CommPolicy):
     """Beyond-paper: exact-lookahead k-way generalization (future work #2)."""
+
+    drain_monotone = False  # exact lookahead over remaining bytes: drain
+    #                         alone can flip wait -> start
 
     def __init__(self, max_ways: int = 3) -> None:
         self.max_ways = max_ways
@@ -183,6 +205,11 @@ class StaticGangPolicy(SchedPolicy):
 
     name = "static"
 
+    def bind(self, engine) -> None:
+        super().bind(engine)
+        self._failed_profiles: set = set()
+        self._failed_epoch = -1
+
     def on_arrival(self, now: float, job_id: int) -> None:
         self._place_queue(now)
 
@@ -209,22 +236,42 @@ class StaticGangPolicy(SchedPolicy):
         eng = self.engine
         if not eng.queue:
             return
-        eng.refresh_workloads()
-        eng.queue.sort(key=eng.srsf_key_queued)
+        # eng.queue is maintained in srsf_key_queued order by the engine
+        # itself (insort on arrival and preemption requeue; the key is
+        # static while a job waits), so the pre-split per-event sort became
+        # a no-op and was dropped — same scan order, O(log n) per insert
+        # instead of O(n log n) per event.
         placed: List[int] = []
         # Every placement policy is a pure function of (n_gpus, mem_mb)
         # given a fixed cluster state, and a failed attempt mutates nothing
-        # (the rand policy draws from its rng only on success) — so within
-        # one scan a resource profile that failed keeps failing until some
-        # job actually places.  Memoizing the failures makes a long blocked
-        # queue cost O(distinct profiles) placement attempts per event
-        # instead of O(queue), with an identical event stream.
-        failed = set()
+        # (the rand policy draws from its rng only on success) — so a
+        # resource profile that failed keeps failing until some job places.
+        # Memoizing the failures makes a long blocked queue cost O(distinct
+        # profiles) placement attempts per event instead of O(queue), with
+        # an identical event stream.  The memo survives *across* events:
+        # placement success is determined by feasible-GPU count alone
+        # (workloads only order the choice), and the feasible set only
+        # grows at a release/repair — which bumps ``capacity_epoch`` — so
+        # at an unchanged epoch (e.g. a pure-arrival burst into a saturated
+        # cluster) nothing needs re-attempting.
+        failed = self._failed_profiles
+        epoch = eng.cluster.capacity_epoch
+        if self._failed_epoch != epoch:
+            failed.clear()
+            self._failed_epoch = epoch
+        refreshed = False
         for jid in eng.queue:
             spec = eng.jobs[jid]
             profile = (spec.n_gpus, spec.model.mem_mb)
             if profile in failed:
                 continue  # no head-of-line blocking (Alg. 3 loops the queue)
+            if not refreshed:
+                # Alg. 3 line 3, deferred to the first real attempt: the
+                # workloads only order a placement's GPU choice, so a scan
+                # the memo fully short-circuits needs no refresh at all
+                # (nothing mutates between here and the scan's start)
+                eng.refresh_workloads()
+                refreshed = True
             gpu_ids = eng.placement(eng.cluster, spec)
             if gpu_ids is None:
                 failed.add(profile)

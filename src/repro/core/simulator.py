@@ -69,6 +69,7 @@ from repro.core.schedpolicy import (  # noqa: F401  (re-exports)
     sched_policy_from_name,
 )
 from repro.core.topology import Topology
+from repro.core.trace import ListTraceSource, TraceSource  # noqa: F401
 
 #: Pre-split name of the engine: the constructor signature is unchanged
 #: (plus the new ``sched``/``preemption_quantum``/``checkpoint_cost``
@@ -77,7 +78,7 @@ ClusterSimulator = EventEngine
 
 
 def simulate(
-    jobs: Sequence[JobSpec],
+    jobs: Union[Sequence[JobSpec], TraceSource],
     placement: str = "lwf",
     kappa: int = 1,
     comm: str = "ada",
@@ -99,8 +100,20 @@ def simulate(
     checkpoint_cost: Optional[float] = None,
     chaos: Optional[ChaosSpec] = None,
     max_time: float = math.inf,
+    gating: Optional[str] = None,
+    profile_phases: bool = False,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
+
+    jobs may be a materialized JobSpec list (every arrival pushed up
+    front, the legacy behaviour) or a ``TraceSource`` — a streaming
+    arrival feed that keeps the event calendar O(cluster) for 100k+-job
+    trace replays.
+    gating ('incremental', the default, or 'rescan'; REPRO_GATING
+    overrides) selects the communication-gating evaluation strategy —
+    bit-exact event streams either way, see core/engine.py.
+    profile_phases=True records per-phase wall-clock totals in
+    ``SimResult.phase_seconds``.
 
     comm: 'ada' (AdaDUAL), 'srsf1'/'srsf2'/'srsf3', or 'kway2'/'kway3'/'kway4'.
     placement: 'rand' | 'ff' | 'ls' | 'lwf' | 'lwf_rack'.
@@ -150,5 +163,7 @@ def simulate(
         preemption_quantum=preemption_quantum,
         checkpoint_cost=checkpoint_cost,
         chaos=chaos,
+        gating=gating,
+        profile_phases=profile_phases,
     )
     return sim.run(max_time=max_time)

@@ -11,14 +11,61 @@
 
 A job is "large" if it needs > 4 GPUs, "long" if it runs > 1600 iterations
 (paper's characterization).
+
+Trace-replay scale: :class:`TraceSource` is the streaming-arrival protocol
+the event engine accepts in place of a materialized job list — arrivals
+are yielded lazily in nondecreasing order, so a 100k+-job replay holds
+O(live jobs) memory instead of the whole trace.  Synthetic generators and
+Philly/Alibaba-style CSV loaders live in ``repro.scenarios.tracesource``;
+:class:`ListTraceSource` adapts any in-memory job list.
 """
 
 from __future__ import annotations
 
 import random
-from typing import List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence
 
 from repro.core.cluster import TABLE_III, JobSpec, ModelProfile
+
+
+class TraceSource:
+    """Streaming arrival feed: the engine pulls arrivals one at a time.
+
+    Subclasses implement :meth:`arrivals` to yield :class:`JobSpec`s in
+    **nondecreasing arrival order with unique job ids** (the engine
+    validates both and raises on violations).  ``n_jobs_hint`` is the
+    expected job count when knowable up front (synthetic generators), or
+    None (e.g. a CSV being streamed) — callers that need the exact count
+    must materialize.
+
+    ``arrivals`` must be restartable: each call returns a fresh iterator
+    over the same deterministic trace (sweeps and differential tests rely
+    on replaying one source several times).
+    """
+
+    def arrivals(self) -> Iterator[JobSpec]:
+        raise NotImplementedError
+
+    def n_jobs_hint(self) -> Optional[int]:
+        return None
+
+    def materialize(self) -> List[JobSpec]:
+        """The whole trace as an in-memory list (list-mode twin runs,
+        fluid-backend handoff, small-scenario registry plumbing)."""
+        return list(self.arrivals())
+
+
+class ListTraceSource(TraceSource):
+    """Adapter: an in-memory job list behind the streaming protocol."""
+
+    def __init__(self, jobs: Sequence[JobSpec]) -> None:
+        self._jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+
+    def arrivals(self) -> Iterator[JobSpec]:
+        return iter(self._jobs)
+
+    def n_jobs_hint(self) -> Optional[int]:
+        return len(self._jobs)
 
 PAPER_GPU_DISTRIBUTION = ((1, 80), (2, 14), (4, 26), (8, 30), (16, 8), (2 * 16, 2))
 

@@ -11,6 +11,11 @@ from repro.scenarios.registry import (
     scenario_names,
 )
 from repro.scenarios.library import QUICK_OVERRIDES  # also registers the library
+from repro.scenarios.tracesource import (  # registers the trace_replay_* scenarios
+    CsvTraceSource,
+    SyntheticTraceSource,
+    trace_source_from_spec,
+)
 from repro.scenarios.metrics import (
     CellCI,
     RunMetrics,
@@ -33,6 +38,9 @@ from repro.scenarios.sweep import (
 
 __all__ = [
     "QUICK_OVERRIDES",
+    "CsvTraceSource",
+    "SyntheticTraceSource",
+    "trace_source_from_spec",
     "Scenario",
     "describe",
     "get_scenario",

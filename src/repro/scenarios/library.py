@@ -77,6 +77,12 @@ QUICK_OVERRIDES = {
     "chaos_steady": {},
     "chaos_recovery_storm": {},
     "chaos_stragglers": {},
+    # trace-replay family (scenarios/tracesource.py): the synth cell
+    # downsizes to a seconds-long stream; the CSV cells replay their
+    # bundled 40-row samples as-is
+    "trace_replay_synth": dict(n_jobs=64),
+    "trace_replay_philly": {},
+    "trace_replay_alibaba": {},
 }
 
 

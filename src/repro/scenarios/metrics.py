@@ -185,6 +185,27 @@ def from_event_result(
     )
 
 
+def replay_summary(
+    res: SimResult, window_s: float, warmup_frac: float = 0.1
+) -> Dict[str, float]:
+    """Flat windowed steady-state summary of one (typically streaming)
+    replay run — the ``SimResult.steady_state`` sliding-horizon metrics
+    (sustained goodput, sustained finish rate, p99 JCT, queueing delay)
+    plus the run-level scale counters, in one JSON-ready dict.  This is
+    what ``benchmarks/run.py --only engine`` records for the trace-replay
+    cell."""
+    out = dict(res.steady_state(window_s, warmup_frac=warmup_frac))
+    out.update(
+        makespan=res.makespan,
+        n_finished=float(len(res.jct)),
+        censored=float(res.censored),
+        goodput=res.goodput,
+        events=float(res.events_processed),
+        peak_calendar=float(res.peak_calendar),
+    )
+    return out
+
+
 CI_CSV_FIELDS = (
     "scenario",
     "backend",

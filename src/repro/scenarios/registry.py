@@ -26,6 +26,7 @@ from repro.core.chaos import ChaosSpec
 from repro.core.cluster import Cluster, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.topology import Topology
+from repro.core.trace import TraceSource
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +74,13 @@ class Scenario:
     #: Event-only — the fluid backend's static traces cannot express gang
     #: teardown mid-run (sweep.py raises; see the parity matrix).
     chaos: Optional["ChaosSpec"] = None
+    #: Streaming arrival feed (trace-replay scale): when set, the event
+    #: backend consumes arrivals lazily from this source instead of the
+    #: materialized ``jobs`` tuple (which is then empty).  ``job_list()``
+    #: still materializes on demand for tests, the fluid handoff, and
+    #: small-scale runs.  Event-only at replay scale — sweep.py raises for
+    #: the fluid backend.
+    source: Optional[TraceSource] = None
 
     def make_cluster(self) -> Cluster:
         """A fresh (mutable) cluster — one per simulation run."""
@@ -83,6 +91,8 @@ class Scenario:
         )
 
     def job_list(self) -> List[JobSpec]:
+        if self.source is not None and not self.jobs:
+            return self.source.materialize()
         return list(self.jobs)
 
     def build(self) -> Tuple[Cluster, List[JobSpec], ContentionParams]:
@@ -92,6 +102,9 @@ class Scenario:
 
     @property
     def n_jobs(self) -> int:
+        if self.source is not None and not self.jobs:
+            hint = self.source.n_jobs_hint()
+            return hint if hint is not None else len(self.job_list())
         return len(self.jobs)
 
     @property

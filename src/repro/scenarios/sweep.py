@@ -66,8 +66,16 @@ def run_scenario_event(
     scenario's scheduling knobs (``sched``, ``preemption_quantum``,
     ``checkpoint_cost``, ``exclusive_gpus``) are defaults; any ``sim_kw``
     override wins — that is how the regression tests compare
-    preemptive-vs-static on the same workload."""
-    cluster, jobs, params = scenario.build()
+    preemptive-vs-static on the same workload.
+
+    A scenario carrying a streaming ``source`` (trace-replay scale) feeds
+    the engine the lazy arrival stream instead of a materialized list, so
+    the event calendar stays O(live jobs + cluster) at 100k+-job scale —
+    results are identical either way (the engine's streaming mode is
+    regression-locked against list mode in tests/test_tracesource.py)."""
+    cluster = scenario.make_cluster()
+    params = scenario.params
+    jobs = scenario.source if scenario.source is not None else scenario.job_list()
     sim_kw.setdefault("fusion", scenario.fusion)
     sim_kw.setdefault("sched", scenario.sched)
     sim_kw.setdefault("preemption_quantum", scenario.preemption_quantum)
@@ -117,6 +125,13 @@ def fluid_config(
             f"scenario {scenario.name!r} arms fault injection (chaos=), "
             "which is event-backend only: the fluid backend's static "
             "traces cannot express mid-run gang teardown/repair"
+        )
+    if scenario.source is not None and not scenario.jobs:
+        raise ValueError(
+            f"scenario {scenario.name!r} is an unmaterialized streaming "
+            "trace replay (source= without jobs), which is event-backend "
+            "only: the fluid backend needs the whole trace as one static "
+            "tensor, defeating the O(live jobs) replay memory bound"
         )
     p = scenario.params
     gang_mode = netmodel.canonical_placement(placement)

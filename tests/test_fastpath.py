@@ -151,3 +151,31 @@ class TestEngineStreamStress:
         assert small.peak_calendar <= 250 + 2 * n_gpus
         assert big.peak_calendar <= 500 + 2 * n_gpus
         assert big.peak_calendar >= 500  # arrivals alone reach n_jobs
+
+    def test_streaming_feed_keeps_calendar_o_cluster(self):
+        """The same workload through a TraceSource: identical results, but
+        the calendar peak is bounded by live jobs + O(cluster) instead of
+        growing with the trace length — the invariant that lets the nightly
+        100k-job replay run in bounded memory."""
+        from benchmarks.run import stream_trace
+
+        from repro.core import simulate
+        from repro.core.trace import ListTraceSource
+
+        n_gpus = 16 * 2
+        peaks = {}
+        for n_jobs in (250, 500):
+            jobs = stream_trace(n_jobs, seed=0)
+            kw = dict(placement="lwf", comm="ada",
+                      n_servers=16, gpus_per_server=2)
+            lst = simulate(jobs, **kw)
+            stream = simulate(ListTraceSource(jobs), **kw)
+            assert stream.jct == lst.jct
+            assert stream.finish == lst.finish
+            assert stream.events_processed == lst.events_processed
+            peaks[n_jobs] = stream.peak_calendar
+            # one-ahead arrival + per-run events: O(live + cluster)
+            assert stream.peak_calendar <= 4 * n_gpus, stream.peak_calendar
+        # doubling the trace must NOT grow the streaming calendar —
+        # footprint tracks concurrency, not trace length
+        assert peaks[500] <= peaks[250] + n_gpus // 2, peaks

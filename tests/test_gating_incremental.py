@@ -1,0 +1,213 @@
+"""Differential lock: incremental (dirty-domain) communication gating is
+bit-identical to the legacy full rescan.
+
+The engine's ``gating="incremental"`` path re-evaluates only waiters whose
+contention domains were touched by a comm start/end/abort (plus a full
+re-evaluation fallback for drain-sensitive policies like the exact k-way
+lookahead, and whenever chaos dirtied the comm state).  Correctness rests
+on the drain-monotonicity argument documented in
+``EventEngine._try_start_comms_incremental``; this module locks the claim
+differentially: same workload, both gating modes, *every* observable field
+equal — including the per-task trace, so not just the aggregate stats but
+the entire schedule must coincide.
+
+Grid covered: comm policy (ada / srsf1 / srsf2 / kway2 — the last is the
+non-drain-monotone fallback) x WFBP fusion (monolithic + bucketed zoo
+models) x scheduling policy (static / preemptive_srsf / elastic) x chaos
+(off / breakdowns+stragglers+cancellations, which exercises the
+``_abort_comm`` re-gating path).  A hypothesis property fuzzes further
+seeds when the library is installed.
+"""
+
+import pytest
+
+from repro.core.chaos import ChaosSpec
+from repro.core.simulator import simulate
+from repro.core.trace import paper_trace
+
+from tests._hypothesis_compat import given, settings, st
+
+#: Every SimResult field that must coincide between the two gating modes.
+#: ``task_trace`` makes the lock schedule-exact, not just stats-exact.
+IDENTICAL_FIELDS = (
+    "jct",
+    "finish",
+    "makespan",
+    "queueing_delay",
+    "events_processed",
+    "comm_started_contended",
+    "comm_started_clean",
+    "peak_calendar",
+    "censored",
+    "preemptions",
+    "resizes",
+    "faults",
+    "cancelled",
+    "work_lost_samples",
+    "goodput",
+    "job_samples",
+    "task_trace",
+)
+
+
+def tiny_trace(seed=0, n_jobs=60, horizon_s=90.0):
+    """Seconds-fast differential workload: many short mixed-size jobs.
+
+    The GPU mix tops out at 8 so every job fits the 4x4 test cluster — a
+    stranded (never-placeable) job would keep ``_unfinished`` non-empty
+    forever, and under chaos the self-regenerating fault events then never
+    let the calendar drain."""
+    return paper_trace(
+        seed=seed,
+        n_jobs=n_jobs,
+        horizon_s=horizon_s,
+        min_iters=3,
+        max_iters=9,
+        gpu_distribution=((1, 8), (2, 4), (4, 5), (8, 3)),
+    )
+
+
+def assert_bit_identical(jobs, **sim_kw):
+    sim_kw.setdefault("record_trace", True)
+    rescan = simulate(jobs, gating="rescan", **sim_kw)
+    incr = simulate(jobs, gating="incremental", **sim_kw)
+    for field in IDENTICAL_FIELDS:
+        assert getattr(rescan, field) == getattr(incr, field), (
+            f"gating modes diverge on {field!r}"
+        )
+    return rescan
+
+
+class TestGatingDifferential:
+    @pytest.mark.parametrize("comm", ["ada", "srsf1", "srsf2", "kway2"])
+    def test_comm_policies(self, comm):
+        res = assert_bit_identical(
+            tiny_trace(), comm=comm, n_servers=4, gpus_per_server=4
+        )
+        assert res.comm_started_contended + res.comm_started_clean > 0
+
+    @pytest.mark.parametrize("comm", ["ada", "kway2"])
+    def test_wfbp_bucketed(self, comm):
+        """Layer-granular WFBP buckets: per-bucket gated transfers overlap
+        the backward pass, so the waiter set churns far faster than with
+        monolithic messages."""
+        from repro.scenarios import get_scenario
+        from repro.scenarios.sweep import run_scenario_event
+
+        scn = get_scenario("fusion_sweep", seed=1, base_iters=25)
+        results = [
+            run_scenario_event(scn, comm=comm, gating=mode, record_trace=True)
+            for mode in ("rescan", "incremental")
+        ]
+        for field in IDENTICAL_FIELDS:
+            assert getattr(results[0], field) == getattr(results[1], field), field
+
+    @pytest.mark.parametrize("sched", ["static", "preemptive_srsf", "elastic"])
+    def test_sched_policies(self, sched):
+        assert_bit_identical(
+            tiny_trace(seed=3, n_jobs=40),
+            comm="ada",
+            sched=sched,
+            n_servers=4,
+            gpus_per_server=4,
+        )
+
+    @pytest.mark.parametrize("sched", ["static", "preemptive_srsf"])
+    def test_chaos_grid(self, sched):
+        """Fault injection dirties comm state out-of-band (breakdown-driven
+        ``_abort_comm``, NIC degradation rate changes, stochastic cancels):
+        the incremental path must re-gate identically through all of it."""
+        chaos = ChaosSpec(
+            seed=5,
+            server_mtbf_s=60.0,
+            server_mttr_s=8.0,
+            straggler_prob=0.1,
+            straggler_slowdown=1.0,
+            cancel_prob=0.15,
+            cancel_after_s=4.0,
+        )
+        res = assert_bit_identical(
+            tiny_trace(seed=7, n_jobs=40),
+            comm="ada",
+            sched=sched,
+            chaos=chaos,
+            n_servers=4,
+            gpus_per_server=4,
+        )
+        assert res.faults > 0  # the injector actually fired
+
+    def test_abort_regating(self):
+        """A scripted mid-run breakdown aborts in-flight all-reduces; the
+        freed link capacity must re-gate waiting transfers identically in
+        both modes (the ``_abort_comm`` dirty-domain path)."""
+        jobs = tiny_trace(seed=11, n_jobs=30, horizon_s=30.0)
+        chaos = ChaosSpec(seed=0, scripted_failures=((0, 6.0, 14.0),))
+        res = assert_bit_identical(
+            jobs, comm="ada", chaos=chaos, n_servers=4, gpus_per_server=4
+        )
+        assert res.faults > 0
+        assert res.work_lost_samples > 0  # a teardown hit in-flight work
+
+    def test_streaming_source(self):
+        """Both gating modes also coincide in streaming-arrival mode."""
+        from repro.core.trace import ListTraceSource
+
+        jobs = tiny_trace(seed=2, n_jobs=50)
+        rescan = simulate(
+            ListTraceSource(jobs), comm="ada", gating="rescan",
+            n_servers=4, gpus_per_server=4,
+        )
+        incr = simulate(
+            ListTraceSource(jobs), comm="ada", gating="incremental",
+            n_servers=4, gpus_per_server=4,
+        )
+        assert rescan.jct == incr.jct
+        assert rescan.finish == incr.finish
+        assert rescan.events_processed == incr.events_processed
+
+
+class TestGatingConfig:
+    def test_unknown_gating_raises(self):
+        with pytest.raises(ValueError, match="gating"):
+            simulate(tiny_trace(n_jobs=4), gating="bogus")
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GATING", "rescan")
+        jobs = tiny_trace(seed=0, n_jobs=20)
+        via_env = simulate(jobs, n_servers=4, gpus_per_server=4)
+        explicit = simulate(
+            jobs, gating="rescan", n_servers=4, gpus_per_server=4
+        )
+        assert via_env.jct == explicit.jct
+        assert via_env.events_processed == explicit.events_processed
+        monkeypatch.setenv("REPRO_GATING", "nonsense")
+        with pytest.raises(ValueError, match="gating"):
+            simulate(jobs, n_servers=4, gpus_per_server=4)
+
+    def test_drain_monotone_attributes(self):
+        """The monotonicity declarations the incremental fast path rests
+        on: SRSF(n) and AdaDUAL qualify, the exact k-way lookahead (whose
+        acceptance can flip as old transfers drain) must NOT."""
+        from repro.core.schedpolicy import (
+            AdaDual,
+            CommPolicy,
+            KWayAdaDual,
+            SrsfN,
+        )
+
+        assert CommPolicy.drain_monotone is False  # safe default
+        assert SrsfN(1).drain_monotone is True
+        assert AdaDual().drain_monotone is True
+        assert KWayAdaDual(2).drain_monotone is False
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10, deadline=None)
+def test_gating_differential_property(seed):
+    """Property fuzz over workload seeds: rescan == incremental."""
+    assert_bit_identical(
+        tiny_trace(seed=seed, n_jobs=30, horizon_s=45.0),
+        comm="ada",
+        n_servers=4,
+        gpus_per_server=4,
+    )

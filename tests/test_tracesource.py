@@ -1,0 +1,257 @@
+"""TraceSource streaming-arrival layer: list-vs-streaming equivalence,
+synthetic/CSV sources, the replay scenarios, and the windowed
+steady-state metrics of long replays."""
+
+import math
+
+import pytest
+
+from repro.core.simulator import simulate
+from repro.core.trace import ListTraceSource, TraceSource, paper_trace
+from repro.scenarios import (
+    CsvTraceSource,
+    SyntheticTraceSource,
+    get_scenario,
+    trace_source_from_spec,
+)
+from repro.scenarios.tracesource import DATA_DIR
+
+
+def small_trace(seed=0, n_jobs=60):
+    return paper_trace(
+        seed=seed, n_jobs=n_jobs, horizon_s=90.0, min_iters=3, max_iters=9,
+        gpu_distribution=((1, 8), (2, 4), (4, 5), (8, 3)),
+    )
+
+
+class TestStreamingEquivalence:
+    """Streaming mode is bit-identical to list mode on every per-job
+    outcome — only the calendar footprint differs."""
+
+    @pytest.mark.parametrize("sched", ["static", "preemptive_srsf"])
+    def test_list_vs_streaming(self, sched):
+        jobs = small_trace()
+        kw = dict(comm="ada", sched=sched, n_servers=4, gpus_per_server=4)
+        lst = simulate(jobs, **kw)
+        stream = simulate(ListTraceSource(jobs), **kw)
+        assert stream.jct == lst.jct
+        assert stream.finish == lst.finish
+        assert stream.queueing_delay == lst.queueing_delay
+        assert stream.events_processed == lst.events_processed
+        assert stream.censored == lst.censored == 0
+        assert stream.goodput == pytest.approx(lst.goodput)
+        assert stream.preemptions == lst.preemptions
+        # the whole point: O(live + cluster), not O(n_jobs)
+        assert stream.peak_calendar < lst.peak_calendar
+
+    def test_streaming_censoring_counts_seen_jobs_only(self):
+        """Cutting a streamed run at a horizon censors only the arrivals
+        the engine actually saw — jobs still inside the source are not
+        phantom-censored."""
+        jobs = small_trace()
+        kw = dict(comm="ada", n_servers=4, gpus_per_server=4, max_time=30.0)
+        lst = simulate(jobs, **kw)
+        stream = simulate(ListTraceSource(jobs), **kw)
+        assert lst.jct == stream.jct
+        # list mode censors every never-finished job in the trace; the
+        # stream only censors arrivals it actually pulled (<= one ahead
+        # of the horizon)
+        assert lst.censored == len(jobs) - len(lst.jct)
+        assert stream.censored <= lst.censored
+        arrived = len([j for j in jobs if j.arrival <= 30.0])
+        assert stream.censored <= arrived + 1 - len(stream.jct)
+
+    def test_engine_rejects_unsorted_stream(self):
+        class Unsorted(TraceSource):
+            def arrivals(self):
+                return iter(small_trace()[::-1])
+
+        with pytest.raises(ValueError, match="arrival"):
+            simulate(Unsorted(), n_servers=4, gpus_per_server=4)
+
+    def test_engine_rejects_duplicate_job_ids(self):
+        class Duped(TraceSource):
+            def arrivals(self):
+                j = small_trace()[0]
+                return iter([j, j])
+
+        with pytest.raises(ValueError, match="job"):
+            simulate(Duped(), n_servers=4, gpus_per_server=4)
+
+
+class TestSyntheticSource:
+    def test_deterministic_and_restartable(self):
+        src = SyntheticTraceSource(n_jobs=50, seed=3)
+        a, b = src.materialize(), src.materialize()
+        assert a == b
+        assert len(a) == 50 == src.n_jobs_hint()
+        assert [j.job_id for j in a] == list(range(50))
+        assert all(
+            a[i].arrival <= a[i + 1].arrival for i in range(len(a) - 1)
+        )
+
+    def test_seed_changes_stream(self):
+        a = SyntheticTraceSource(n_jobs=30, seed=0).materialize()
+        b = SyntheticTraceSource(n_jobs=30, seed=1).materialize()
+        assert a != b
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="n_jobs"):
+            SyntheticTraceSource(n_jobs=0)
+        with pytest.raises(ValueError, match="rate"):
+            SyntheticTraceSource(n_jobs=1, rate=0.0)
+
+
+class TestCsvSource:
+    def test_philly_sample_parses(self):
+        src = CsvTraceSource(str(DATA_DIR / "philly_sample.csv"), "philly")
+        jobs = src.materialize()
+        assert len(jobs) == 40
+        assert [j.job_id for j in jobs] == list(range(40))
+        assert all(j.iterations >= 1 for j in jobs)
+        assert all(1 <= j.n_gpus <= 8 for j in jobs)
+        # model assignment is a deterministic round-robin over sorted names
+        assert jobs[0].model.name != jobs[1].model.name
+        assert jobs[0].model == jobs[4].model
+
+    def test_alibaba_gpu_percent_scaling(self):
+        src = CsvTraceSource(str(DATA_DIR / "alibaba_sample.csv"), "alibaba")
+        jobs = src.materialize()
+        assert len(jobs) == 40
+        # plan_gpu is a percentage: 100 -> 1 GPU, 800 -> 8 GPUs
+        assert all(1 <= j.n_gpus <= 8 for j in jobs)
+        assert {j.n_gpus for j in jobs} <= {1, 2, 4, 8}
+
+    def test_time_scale_compresses(self):
+        path = str(DATA_DIR / "philly_sample.csv")
+        full = CsvTraceSource(path, "philly").materialize()
+        half = CsvTraceSource(path, "philly", time_scale=0.5).materialize()
+        assert half[-1].arrival == pytest.approx(full[-1].arrival * 0.5)
+        assert all(
+            h.iterations <= f.iterations for h, f in zip(half, full)
+        )
+
+    def test_max_jobs_truncates(self):
+        src = CsvTraceSource(
+            str(DATA_DIR / "philly_sample.csv"), "philly", max_jobs=7
+        )
+        assert len(src.materialize()) == 7
+
+    def test_unknown_dialect_raises(self):
+        with pytest.raises(ValueError, match="dialect"):
+            CsvTraceSource("x.csv", dialect="borg")
+
+
+class TestSourceSpec:
+    def test_synth(self):
+        src = trace_source_from_spec("synth", n_jobs=123, seed=9)
+        assert isinstance(src, SyntheticTraceSource)
+        assert src.n_jobs_hint() == 123
+
+    def test_bundled_csvs(self):
+        for name in ("philly", "alibaba"):
+            src = trace_source_from_spec(name, n_jobs=5)
+            assert isinstance(src, CsvTraceSource)
+            assert len(src.materialize()) == 5
+
+    def test_csv_spec(self):
+        src = trace_source_from_spec(
+            f"csv:alibaba:{DATA_DIR / 'alibaba_sample.csv'}", n_jobs=3
+        )
+        assert src.dialect == "alibaba"
+        assert len(src.materialize()) == 3
+
+    def test_bad_specs_raise(self):
+        with pytest.raises(ValueError, match="trace source"):
+            trace_source_from_spec("nope")
+        with pytest.raises(ValueError, match="csv"):
+            trace_source_from_spec("csv:only-one-colon")
+
+
+class TestReplayScenarios:
+    def test_materialized_jobs_match_source(self):
+        scn = get_scenario("trace_replay_synth", seed=0, n_jobs=40)
+        assert scn.source is not None
+        assert list(scn.jobs) == scn.source.materialize()
+        assert scn.n_jobs == 40
+
+    def test_large_scale_stays_lazy(self):
+        scn = get_scenario("trace_replay_synth", seed=0, n_jobs=50_000)
+        assert scn.jobs == ()
+        assert scn.n_jobs == 50_000  # from the hint, nothing materialized
+
+    def test_event_sweep_runs_streaming(self):
+        from repro.scenarios.sweep import run_scenario_event
+
+        scn = get_scenario("trace_replay_synth", seed=0, n_jobs=40)
+        res = run_scenario_event(scn, comm="ada")
+        assert len(res.jct) == 40
+        assert res.censored == 0
+        # streaming: calendar stays O(cluster), far below n_jobs
+        assert res.peak_calendar < 40 + 2 * scn.total_gpus
+
+    def test_fluid_raises_on_unmaterialized_source(self):
+        from repro.scenarios.sweep import fluid_config
+
+        scn = get_scenario("trace_replay_synth", seed=0, n_jobs=50_000)
+        with pytest.raises(ValueError, match="streaming"):
+            fluid_config(scn, comm="ada")
+
+
+class TestWindowedMetrics:
+    def _res(self):
+        return simulate(
+            ListTraceSource(small_trace()),
+            comm="ada", n_servers=4, gpus_per_server=4,
+        )
+
+    def test_windows_partition_the_run(self):
+        res = self._res()
+        wins = res.windowed(20.0)
+        assert wins, "run produced no finishes?"
+        assert sum(w["n_finished"] for w in wins) == len(res.jct)
+        for w in wins:
+            assert w["t1"] == pytest.approx(w["t0"] + 20.0)
+            assert w["jobs_per_sec"] == pytest.approx(w["n_finished"] / 20.0)
+
+    def test_bad_window_raises(self):
+        with pytest.raises(ValueError, match="window"):
+            self._res().windowed(0.0)
+
+    def test_steady_state_summary(self):
+        res = self._res()
+        ss = res.steady_state(20.0)
+        assert ss["n_jobs"] > 0
+        assert ss["sustained_goodput"] >= 0.0
+        assert ss["p99_jct"] >= max(res.jct.values()) * 0.0
+        assert not math.isnan(ss["queueing_delay_mean"])
+        assert ss["t_lo"] >= 0.0 and ss["t_hi"] <= res.makespan + 20.0
+
+    def test_replay_summary_keys(self):
+        from repro.scenarios.metrics import replay_summary
+
+        out = replay_summary(self._res(), window_s=20.0)
+        for key in (
+            "sustained_goodput", "sustained_jobs_per_sec", "p99_jct",
+            "queueing_delay_mean", "queueing_delay_p99", "makespan",
+            "n_finished", "censored", "events", "peak_calendar",
+        ):
+            assert key in out, key
+        assert out["censored"] == 0.0
+
+
+class TestPhaseProfiling:
+    def test_off_by_default(self):
+        res = simulate(small_trace(n_jobs=10), n_servers=4, gpus_per_server=4)
+        assert res.phase_seconds is None
+
+    def test_phase_breakdown_populated(self):
+        res = simulate(
+            small_trace(), n_servers=4, gpus_per_server=4,
+            profile_phases=True,
+        )
+        assert set(res.phase_seconds) == {
+            "comm_advance", "dispatch", "gating", "gpu_schedule",
+        }
+        assert all(v >= 0.0 for v in res.phase_seconds.values())
+        assert sum(res.phase_seconds.values()) > 0.0
