@@ -48,21 +48,45 @@ def throughput_keys(base: Dict, cur: Dict) -> List[str]:
     )
 
 
+def vanished_keys(base: Dict, cur: Dict) -> List[str]:
+    """Baseline ``*_per_sec`` keys with no numeric counterpart in the
+    current file — a renamed or dropped bench cell.  Warned about loudly:
+    a silently-vanishing key would detach that cell from the gate."""
+    return sorted(
+        k
+        for k in base
+        if k.endswith("_per_sec")
+        and isinstance(base.get(k), (int, float))
+        and not isinstance(cur.get(k), (int, float))
+    )
+
+
 def compare_pair(
     base_path: str, cur_path: str, threshold: float
-) -> Tuple[List[str], List[str]]:
-    """Returns (report_lines, regression_lines) for one baseline/current
-    pair; an empty regression list means the pair passes."""
+) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (report_lines, regression_lines, warning_lines) for one
+    baseline/current pair; an empty regression list means the pair
+    passes.  Warnings flag baseline ``*_per_sec`` keys that vanished from
+    the current file — a renamed bench cell must be renamed in the
+    committed baseline too, not silently dropped from the gate."""
     with open(base_path) as f:
         base = json.load(f)
     with open(cur_path) as f:
         cur = json.load(f)
     lines: List[str] = [f"{base_path} -> {cur_path}"]
     regressions: List[str] = []
+    warnings: List[str] = []
+    for k in vanished_keys(base, cur):
+        warnings.append(
+            f"{cur_path}: baseline key {k!r} has no numeric counterpart in "
+            "the current file — renamed or dropped bench cell? it is no "
+            "longer gated (update the committed baseline)"
+        )
+        lines.append(f"  {k}: {float(base[k]):.4g} -> MISSING (ungated!)")
     keys = throughput_keys(base, cur)
     if not keys:
         lines.append("  (no shared *_per_sec keys — nothing to gate)")
-        return lines, regressions
+        return lines, regressions, warnings
     bp = base.get("provenance") or {}
     cp = cur.get("provenance") or {}
     if bp or cp:
@@ -90,7 +114,7 @@ def compare_pair(
                 f"({b:.4g} -> {c:.4g}, threshold {threshold * 100.0:.0f}%)"
             )
         lines.append(f"  {k}: {b:.4g} -> {c:.4g} ({change:+.1%}) {verdict}")
-    return lines, regressions
+    return lines, regressions, warnings
 
 
 def main(argv: List[str] | None = None) -> int:
@@ -127,12 +151,18 @@ def main(argv: List[str] | None = None) -> int:
         except ValueError:
             ap.error(f"bad --max-wall {spec!r}: expected KEY=SECONDS")
     all_regressions: List[str] = []
+    all_warnings: List[str] = []
     for i in range(0, len(args.files), 2):
-        lines, regressions = compare_pair(
+        lines, regressions, warnings = compare_pair(
             args.files[i], args.files[i + 1], args.threshold
         )
         print("\n".join(lines))
         all_regressions.extend(regressions)
+        all_warnings.extend(warnings)
+    if all_warnings:
+        print("\nWARNINGS (ungated keys):", file=sys.stderr)
+        for w in all_warnings:
+            print(f"  {w}", file=sys.stderr)
     for key, limit in bounds:
         found = False
         for cur_path in args.files[1::2]:

@@ -29,7 +29,7 @@ import json
 import os
 import sys
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 from repro.core import (
     ContentionParams,
@@ -251,7 +251,7 @@ def bench_chunked(full: bool) -> None:
 
 def _scenario_sweep(
     names, policies, placements, seeds, backend, processes, full, ci=False,
-    kappas=(1,), sched=None, bw_aware_srsf=False,
+    kappas=(1,), sched=None, bw_aware_srsf=False, obs=False,
 ) -> None:
     from repro.scenarios import QUICK_OVERRIDES, metrics as metrics_mod
     from repro.scenarios import scenario_names, sweep, sweep_ci
@@ -272,6 +272,15 @@ def _scenario_sweep(
         sim_kw["sched"] = sched
     if bw_aware_srsf:
         sim_kw["bandwidth_aware_srsf"] = True
+    if obs:
+        # arm the JCT decomposition so the stretch_frac / gating_frac CSV
+        # columns carry data (event backend only — the fluid sweep rejects
+        # engine sim_kw)
+        if backend == "fluid":
+            raise SystemExit("--obs requires the event backend")
+        from repro.obs import ObsConfig
+
+        sim_kw["observe"] = ObsConfig(decompose=True)
     header_done = False
     for kappa in kappas:
         kw = dict(
@@ -700,13 +709,171 @@ def bench_engine(
         f.write("\n")
 
 
+def obs_overhead_paired(
+    run_off, run_on, rounds: int = 4
+) -> Tuple[float, float, float]:
+    """Fractional slowdown of ``run_on`` over ``run_off`` from
+    order-alternated paired CPU-time rounds, as a ratio of total times —
+    the estimator the slow-marked guard test shares.  Wall-clock
+    min-of-N is hopeless for a <3 % signal on a noisy shared host:
+    ``process_time`` excludes scheduler preemption and summing over
+    alternated pairs cancels drift.  Returns (overhead_frac, t_off,
+    t_on)."""
+    t_off = t_on = 0.0
+    for i in range(rounds):
+        pair = (run_off, run_on) if i % 2 == 0 else (run_on, run_off)
+        for fn in pair:
+            t0 = time.process_time()
+            fn()
+            dt = time.process_time() - t0
+            if fn is run_off:
+                t_off += dt
+            else:
+                t_on += dt
+    return (t_on / t_off) - 1.0, t_off, t_on
+
+
+def bench_obs(full: bool) -> None:
+    """Observability overhead cells: ``observe=None`` vs
+    ``ObsConfig.full()`` (all four channels armed).
+
+    Two cells, deliberately opposite regimes:
+
+    * ``paper`` quick — the events/sec microbenchmark (~10 us/event, ~2
+      obs records per event).  Upper bound: every record's cost is
+      visible against the tiny per-event baseline.
+    * preemptive streaming replay — the engine's feature-complete mode
+      (preemptive SRSF + gating + WFBP over streaming arrivals), where
+      scheduling work dominates the event loop.  This is the <3 %
+      guard cell (mirrored by the slow-marked test in
+      ``tests/test_obs.py``).
+
+    The off-path must be free (the hooks are never entered).  Persists
+    ``BENCH_obs.json`` (path override: ``REPRO_BENCH_OBS_JSON``)."""
+    from repro.obs import ObsConfig
+    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    from repro.scenarios.sweep import run_scenario_event
+
+    overrides = {} if full else QUICK_OVERRIDES["paper"]
+    scn = get_scenario("paper", seed=0, **overrides)
+    cfg = ObsConfig.full()
+    run_scenario_event(scn, comm="ada")  # warm caches
+
+    res_off = run_scenario_event(scn, comm="ada")
+    res_on = run_scenario_event(scn, comm="ada", observe=cfg)
+    assert res_on.jct == res_off.jct, "observability changed the simulation"
+    paper_ov, t_off, _ = obs_overhead_paired(
+        lambda: run_scenario_event(scn, comm="ada"),
+        lambda: run_scenario_event(scn, comm="ada", observe=cfg),
+    )
+    eps_off = res_off.events_processed * 4 / t_off
+    obs = res_on.obs
+    emit(
+        "obs/overhead_paper",
+        0.0,
+        f"events_per_sec_off={eps_off:.0f};overhead_frac={paper_ov:.4f};"
+        f"decomposed={len(obs.decomp)};audit={len(obs.audit)};"
+        f"spans={len(obs.spans)}",
+    )
+
+    guard_n = 800 if full else 400
+    jobs = stream_trace(guard_n, seed=0)
+    guard_kw = dict(
+        placement="lwf", comm="ada", n_servers=16, gpus_per_server=2,
+        sched="preemptive_srsf",
+    )
+    g_off = simulate(jobs, **guard_kw)
+    g_on = simulate(jobs, **guard_kw, observe=cfg)
+    assert g_on.jct == g_off.jct, "observability changed the guard cell"
+    guard_ov, g_t_off, _ = obs_overhead_paired(
+        lambda: simulate(jobs, **guard_kw),
+        lambda: simulate(jobs, **guard_kw, observe=cfg),
+    )
+    emit(
+        "obs/overhead_guard",
+        0.0,
+        f"n_jobs={guard_n};events={g_off.events_processed};"
+        f"overhead_frac={guard_ov:.4f};budget=0.03",
+    )
+    path = os.environ.get("REPRO_BENCH_OBS_JSON", "BENCH_obs.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "provenance": provenance(),
+                "full": full,
+                "scenario": "paper",
+                "obs_off_events_per_sec": eps_off,
+                "obs_overhead_frac": paper_ov,
+                "obs_guard_overhead_frac": guard_ov,
+                "obs_guard_n_jobs": guard_n,
+                "n_jobs_decomposed": len(obs.decomp),
+                "mean_stretch_frac": obs.mean_stretch_frac(),
+                "mean_gating_frac": obs.mean_gating_frac(),
+                "audit_entries": len(obs.audit),
+                "span_entries": len(obs.spans),
+                "timeline_points": len(obs.timeline),
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+
+def export_traces(
+    out_dir: str,
+    names,
+    comm: str = "ada",
+    seed: int = 2,
+    full: bool = False,
+    sched: str = None,
+) -> List[str]:
+    """``--trace-out``: one fully-observed run per scenario, written as a
+    Perfetto-loadable Chrome trace JSON plus the per-job JCT-decomposition
+    CSV.  Returns the written paths."""
+    from repro.obs import ObsConfig
+    from repro.scenarios import QUICK_OVERRIDES, get_scenario
+    from repro.scenarios.sweep import run_scenario_event
+
+    os.makedirs(out_dir, exist_ok=True)
+    written: List[str] = []
+    for name in names:
+        overrides = {} if full else QUICK_OVERRIDES.get(name, {})
+        scn = get_scenario(name, seed=seed, **overrides)
+        kw = {} if sched is None else {"sched": sched}
+        res = run_scenario_event(
+            scn, comm=comm, observe=ObsConfig.full(), **kw
+        )
+        tag = "" if sched is None else f"_{sched}"
+        stem = os.path.join(out_dir, f"{name}_seed{seed}_{comm}{tag}")
+        trace_path = stem + ".perfetto.json"
+        res.obs.to_chrome_trace(trace_path)
+        csv_path = stem + ".decomp.csv"
+        with open(csv_path, "w") as f:
+            f.write(res.obs.decomposition_csv())
+        written += [trace_path, csv_path]
+        print(
+            f"trace-out,{name},seed={seed},comm={comm},"
+            f"jobs={len(res.obs.decomp)},spans={len(res.obs.spans)},"
+            f"files={trace_path};{csv_path}",
+            flush=True,
+        )
+    return written
+
+
 def bench_chaos(full: bool) -> None:
     """Fault-injection SLO grid: every ``chaos_*`` scenario under the
     static ada/srsf1/srsf2 schedulers plus ada under ``preemptive_srsf``,
     over multiple seeds.  Prints the full RunMetrics CSV (including the
     goodput / work_lost / p99_jct fault columns) and persists the
     per-cell means plus the per-seed recovery-storm ada/srsf2 ratios to
-    ``BENCH_chaos.json`` (path override: ``REPRO_BENCH_CHAOS_JSON``)."""
+    ``BENCH_chaos.json`` (path override: ``REPRO_BENCH_CHAOS_JSON``).
+
+    Every run is observed (``ObsConfig(decompose=True)`` — bit-exact with
+    unobserved, locked in tests/test_obs.py) so the CSV's
+    stretch_frac/gating_frac columns carry data, and each run asserts the
+    conservation law: the engine's ``work_lost_samples`` fault counter
+    must equal the decomposition's total lost samples."""
+    from repro.obs import ObsConfig
     from repro.scenarios import get_scenario
     from repro.scenarios import metrics as metrics_mod
     from repro.scenarios.sweep import run_scenario_event
@@ -729,7 +896,15 @@ def bench_chaos(full: bool) -> None:
             per_comm = {}
             for comm, sched in grid:
                 t0 = time.time()
-                res = run_scenario_event(scn, comm=comm, sched=sched)
+                res = run_scenario_event(
+                    scn, comm=comm, sched=sched,
+                    observe=ObsConfig(decompose=True),
+                )
+                assert res.obs.work_lost_total == res.work_lost_samples, (
+                    f"{name}/{comm}/{sched} seed={seed}: decomposition lost "
+                    f"{res.obs.work_lost_total} samples but the engine "
+                    f"counted {res.work_lost_samples}"
+                )
                 m = metrics_mod.from_event_result(
                     res,
                     scenario=name,
@@ -830,6 +1005,7 @@ BENCHES: Dict[str, Callable[[bool], None]] = {
     "wfbp": bench_wfbp,
     "engine": bench_engine,
     "chaos": bench_chaos,
+    "obs": bench_obs,
     "roofline": bench_roofline,
 }
 
@@ -917,7 +1093,32 @@ def main() -> None:
         help="arrival feed of the --only engine replay cell: 'synth', "
         "'philly', 'alibaba' (bundled samples), or 'csv:<dialect>:<path>'",
     )
+    ap.add_argument(
+        "--obs",
+        action="store_true",
+        help="with --scenario (event backend): arm the JCT decomposition "
+        "so the stretch_frac/gating_frac CSV columns carry data",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="DIR",
+        help="export one fully-observed run per scenario (--scenario names, "
+        "default: paper chaos_recovery_storm fusion_sweep) as Perfetto "
+        "trace JSON + JCT-decomposition CSV into DIR, then exit; "
+        "--policy/--seeds pick the (single) comm policy and seed",
+    )
     args = ap.parse_args()
+    if args.trace_out:
+        export_traces(
+            args.trace_out,
+            args.scenario or ["paper", "chaos_recovery_storm", "fusion_sweep"],
+            comm=args.policy[0] if args.policy else "ada",
+            seed=args.seeds[0],
+            full=args.full,
+            sched=args.sched,
+        )
+        return
     if args.scenario:
         _scenario_sweep(
             args.scenario,
@@ -931,6 +1132,7 @@ def main() -> None:
             kappas=args.kappa,
             sched=args.sched,
             bw_aware_srsf=args.bw_aware_srsf,
+            obs=args.obs,
         )
         return
     print("name,us_per_call,derived")

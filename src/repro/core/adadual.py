@@ -225,7 +225,20 @@ def kway_adadual_should_start(
         return True
     if k + 1 > max_ways:
         return False
+    avg_a, avg_b = kway_lookahead_costs(new_bytes, olds, params)
+    return avg_a < avg_b
 
+
+def kway_lookahead_costs(
+    new_bytes: float,
+    olds: Sequence[float],
+    params: ContentionParams,
+) -> Tuple[float, float]:
+    """The two evaluated averages of the k-way rule: ``(avg_start_now,
+    avg_wait)`` over {olds..., new}.  Factored out of the decision so the
+    observability audit log can record exactly what the policy compared.
+    ``olds`` must be non-empty with positive remaining bytes."""
+    k = len(olds)
     # Option A: everything in flight now.
     now = [0.0] * (k + 1)
     sizes_a = list(olds) + [new_bytes]
@@ -252,7 +265,7 @@ def kway_adadual_should_start(
     avg_b = (
         n_done * t_first + sum(t_first + f for f in fin_b_rel)
     ) / (n_done + len(fin_b_rel))
-    return avg_a < avg_b
+    return avg_a, avg_b
 
 
 def srsf_n_should_start(

@@ -74,6 +74,7 @@ from repro.core.chaos import (
 from repro.core.cluster import Cluster, GpuId, JobSpec
 from repro.core.contention import ContentionParams
 from repro.core.trace import TraceSource
+from repro.obs.recorder import ObsRecorder
 from repro.core.placement import PlacementPolicy
 from repro.core.schedpolicy import (
     AdaDual,
@@ -304,6 +305,12 @@ class SimResult:
     #: the whole run: comm_advance / dispatch / gating / gpu_schedule.
     #: None when profiling was off (the default — zero overhead).
     phase_seconds: Optional[Dict[str, float]] = None
+    #: opt-in (``observe=ObsConfig(...)``) observability report
+    #: (``repro.obs.ObsReport``): exact per-job JCT decomposition,
+    #: per-domain contention timelines, the gating audit log, and the
+    #: Perfetto span records.  None when observability was off (the
+    #: default — zero overhead, bit-exact event stream either way).
+    obs: Optional[object] = None
 
     def avg_jct(self) -> float:
         return sum(self.jct.values()) / len(self.jct)
@@ -449,6 +456,7 @@ class EventEngine:
         chaos: Optional[ChaosSpec] = None,  # fault injection (core/chaos.py)
         gating: Optional[str] = None,  # incremental (default) | rescan
         profile_phases: bool = False,  # per-phase wall-clock counters
+        observe: Optional[object] = None,  # repro.obs.ObsConfig | None
     ) -> None:
         # Streaming arrival feed (trace-replay scale): a TraceSource yields
         # arrivals lazily, so the calendar holds at most ONE future arrival
@@ -616,6 +624,34 @@ class EventEngine:
         # event stream is bit-exact with the unfaulted engine (the zero-rate
         # no-op, regression-locked in tests/test_chaos.py).
         self._chaos = chaos if (chaos is not None and chaos.active) else None
+        # Observability (repro.obs).  Same pattern as chaos: an absent or
+        # inactive config keeps every obs hook cold — the recorder never
+        # mutates engine state, so the event stream is bit-exact with
+        # observability on OR off (locked in tests/test_obs.py).
+        self._obs = (
+            ObsRecorder(observe)
+            if (observe is not None and observe.active)
+            else None
+        )
+        if self._obs is not None:
+            # the deferred replay needs the Eq. 5 constants and the gating
+            # policy (for audit `explain` terms) — both fixed for the run
+            self._obs.bind(self.params, self.comm_policy)
+        # Hot-stream caches: the highest-frequency obs hooks (comm windows,
+        # compute spans, gating audits, gating queue enter/leave, transfer
+        # ends) are plain flat-list extends inlined at the call sites below
+        # — a None cache means that record family is off and costs one
+        # is-check.  The recorder's flush clears the log in place, so these
+        # references never go stale.
+        o = self._obs
+        self._obs_win = o.log if (o is not None and o.decompose_on) else None
+        self._obs_comm = o.log if (o is not None and o.log_comm) else None
+        self._obs_gate = o.log if (o is not None and o.log_gate) else None
+        self._obs_rc = o.raw_compute if (o is not None and o.spans_on) else None
+        # raw_compute is flat at stride 6, so the element cap is 6x
+        self._obs_rc_cap = o.config.span_cap * 6 if o is not None else 0
+        self._obs_audit = o.audit_raw if (o is not None and o.audit_on) else None
+        self._obs_audit_left = o.config.audit_cap if o is not None else 0
         self._faults = 0
         self._cancelled = 0
         self._work_lost_samples = 0
@@ -698,6 +734,11 @@ class EventEngine:
         for d in run.domains:
             self._domain_waiters.setdefault(d, set()).add(jid)
         self._gate_candidates.add(jid)
+        lg = self._obs_gate
+        if lg is not None:
+            # _advance_comm unconditionally stamps _last_comm_update with
+            # the current event time before any dispatch reaches here
+            lg.extend((4, self._last_comm_update, jid))
 
     def _waiter_drop(self, jid: int, domains: frozenset) -> None:
         """Remove a waiter from every gating index (started / preempted /
@@ -712,6 +753,9 @@ class EventEngine:
                 if not ws:
                     del self._domain_waiters[d]
         self._gate_candidates.discard(jid)
+        lg = self._obs_gate
+        if lg is not None:
+            lg.extend((5, self._last_comm_update, jid))
 
     def _mark_domains_dirty(self, domains: frozenset) -> None:
         """A comm start/end/abort touched these domains: every waiter
@@ -749,6 +793,18 @@ class EventEngine:
         # active set); use the rate as of the window start — this stays an
         # exact piecewise-rate integration under any topology.
         ks = {jid: self._comm_k_eff(t) for jid, t in self._active_comm.items()}
+        lg = self._obs_win
+        if lg is not None:
+            # decomposition record: the window's per-task rates, logged
+            # before the drain loop consumes latency_left (the deferred
+            # replay re-consumes the latency slice identically).  Flat
+            # layout — 0, dt, n, jid*n, k*n — so only scalars are
+            # retained (a retained tuple per window is real GC pressure)
+            lg.extend((0, dt, len(ks)))
+            lg.extend(ks)
+            lg.extend(ks.values())
+            if len(lg) >= self._obs.flush_at:
+                self._obs._flush()
         for jid, task in list(self._active_comm.items()):
             lat = min(task.latency_left, dt)
             task.latency_left -= lat
@@ -762,9 +818,12 @@ class EventEngine:
                 # tolerance: 1 byte ~ 1e-9 s — absorbs float drift in the
                 # piecewise integration
                 finished.append(jid)
+        lg = self._obs_comm
         for jid in finished:
             self._comm_ended(self._active_comm[jid])
             del self._active_comm[jid]
+            if lg is not None:
+                lg.extend((2, now, jid))
         return finished
 
     def _next_comm_finish(self) -> Optional[float]:
@@ -796,6 +855,10 @@ class EventEngine:
         task = self._active_comm.pop(job_id)
         self._comm_ended(task)
         self._comm_dirty = True
+        if self._obs is not None:
+            # the aborted transfer's accrued comm time delivered nothing:
+            # reattribute it to preemption/fault overhead
+            self._obs.comm_abort(job_id, self._last_comm_update)
 
     # -- WFBP fusion plans -------------------------------------------------------
     def _assign_plan(self, run: JobRun) -> None:
@@ -874,6 +937,8 @@ class EventEngine:
         self._live[job_id] = None
         self._dirty_gpus.update(gpu_ids)
         self._first_placed.setdefault(job_id, now)
+        if self._obs is not None:
+            self._obs.placed(job_id, run, now)
         return run
 
     def _checkpoint_cost_of(self, run: JobRun) -> float:
@@ -894,7 +959,8 @@ class EventEngine:
         self._live.pop(job_id, None)
         if run.finished_at is not None:
             raise ValueError(f"cannot preempt finished job {job_id}")
-        self._work_lost_samples += self._lost_in_progress(run)
+        lost = self._lost_in_progress(run)
+        self._work_lost_samples += lost
         self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
         for gid in run.gpus:
             g = self.cluster.gpus[gid]
@@ -919,6 +985,10 @@ class EventEngine:
         # what the key reads, so it must be set before this insort)
         insort(self._queue, job_id, key=self.srsf_key_queued)
         self._preemptions += 1
+        if self._obs is not None:
+            # after the waiter-drop/abort hooks above, so the aborted
+            # transfer's reattribution already landed in the ledger
+            self._obs.preempted(job_id, now, lost)
         if self.record_trace:
             # drop the aborted in-progress iteration's records (they will
             # be re-executed after resume) and mark the preemption point
@@ -973,6 +1043,8 @@ class EventEngine:
         self.place_job(job_id, gpu_ids, now)
         if applied:
             self._resizes += 1
+            if self._obs is not None:
+                self._obs.resized(job_id, now)
             if self.record_trace:
                 self._trace.append((job_id, run.iter_done, "resize", -1, now, now))
         self.sched.on_resize(now, job_id)
@@ -1047,6 +1119,8 @@ class EventEngine:
         for jid in victims:
             self.preempt_job(jid, now)
         self._push(repair_t, "repair", (server,))
+        if self._obs is not None:
+            self._obs.fault("breakdown", server, now)
         self.sched.on_fault(now, server, victims)
 
     def _on_repair(self, server: int, now: float) -> None:
@@ -1055,6 +1129,8 @@ class EventEngine:
             g.down = False
         self.cluster.capacity_epoch += 1  # placeable capacity grew
         self._advance_failure(server)
+        if self._obs is not None:
+            self._obs.fault("repair", server, now)
         self.sched.on_recovery(now, server)
 
     def _apply_nic_bandwidth(self) -> None:
@@ -1080,11 +1156,15 @@ class EventEngine:
         self._nic_degraded.add(server)
         self._apply_nic_bandwidth()
         self._push(end_t, "nic_up", (server,))
+        if self._obs is not None:
+            self._obs.fault("nic_down", server, now)
 
     def _on_nic_up(self, server: int, now: float) -> None:
         self._nic_degraded.discard(server)
         self._apply_nic_bandwidth()
         self._advance_nic(server)
+        if self._obs is not None:
+            self._obs.fault("nic_up", server, now)
 
     def _on_cancel(self, job_id: int, now: float) -> None:
         """Stochastic cancellation: the job leaves the system — running
@@ -1095,9 +1175,11 @@ class EventEngine:
         if job_id not in self._unfinished:
             return  # finished before the axe fell
         run = self._runs.get(job_id)
+        lost = 0.0
         if run is not None:
             self._epoch_of[job_id] = self._epoch_of.get(job_id, 0) + 1
-            self._work_lost_samples += self._lost_in_progress(run)
+            lost = self._lost_in_progress(run)
+            self._work_lost_samples += lost
             del self._runs[job_id]
             self._live.pop(job_id, None)
             for gid in run.gpus:
@@ -1120,18 +1202,25 @@ class EventEngine:
             self._carry.pop(job_id, None)
         self._cancelled += 1
         self._unfinished.discard(job_id)
+        if self._obs is not None:
+            self._obs.cancelled(job_id, now, lost)
         # freed memory/GPUs (or a shorter queue) may admit other jobs
         self.sched.on_job_finish(now, job_id)
 
     # -- communication gating -----------------------------------------------------
-    def _gate_try_one(self, jid: int, run: JobRun, now: float) -> bool:
+    def _gate_try_one(
+        self, jid: int, run: JobRun, now: float, qpos: int = -1
+    ) -> bool:
         """Evaluate the gating policy for one waiter and commit the start
         when it accepts.  Returns True iff a transfer started.  This body
         is shared verbatim by the rescan and incremental paths, so the two
-        modes can only differ in *which* waiters they evaluate."""
+        modes can only differ in *which* waiters they evaluate.  ``qpos``
+        is the waiter's rank in the pass's SRSF evaluation order — audit
+        metadata only, never a decision input."""
         servers = run.servers
         domains = run.domains
         olds = [t for t in self._active_comm.values() if t.domains & domains]
+        old_rem = [t.remaining_bytes for t in olds]
         max_conc = 0
         for d in domains:
             max_conc = max(max_conc, self._domain_load.get(d, 0))
@@ -1145,10 +1234,35 @@ class EventEngine:
             new_bytes = run.spec.model.size_bytes
         ok = self.comm_policy.should_start(
             new_bytes,
-            [t.remaining_bytes for t in olds],
+            old_rem,
             max_conc,
             self.params,
         )
+        obs = self._obs
+        lg = self._obs_audit
+        if lg is not None:
+            # audit record, inlined — the densest hook on contended cells
+            # (one per gate evaluation); dedicated flat stream, engine-
+            # side budget countdown
+            n = self._obs_audit_left
+            if n > 0:
+                self._obs_audit_left = n - 1
+                lg.extend(
+                    (
+                        now,
+                        jid,
+                        bucket,
+                        new_bytes,
+                        max_conc,
+                        ok,
+                        qpos,
+                        len(self._waiting_comm),
+                        len(old_rem),
+                    )
+                )
+                lg.extend(old_rem)
+            else:
+                obs.audit_dropped += 1
         if not ok:
             return False
         self._waiter_drop(jid, domains)
@@ -1175,6 +1289,8 @@ class EventEngine:
             self._comm_contended += 1
         else:
             self._comm_clean += 1
+        if obs is not None:
+            obs.comm_start(jid, bucket, now, task)
         if self.record_trace:
             kind = "c" if bucket < 0 else f"c{bucket}"
             self._trace.append((jid, run.iter_done, kind, -1, now, None))
@@ -1198,12 +1314,12 @@ class EventEngine:
         started_any = True
         while started_any:
             started_any = False
-            for jid in list(self._waiting_comm):
+            for qpos, jid in enumerate(list(self._waiting_comm)):
                 run = self._runs[jid]
                 if run.comm_active or jid in self._active_comm:
                     self._waiter_drop(jid, run.domains)
                     continue
-                if self._gate_try_one(jid, run, now):
+                if self._gate_try_one(jid, run, now, qpos):
                     started_any = True
                     any_started = True
                     break  # re-evaluate contention state after each start
@@ -1258,7 +1374,7 @@ class EventEngine:
         any_started = False
         while cand:
             restart = False
-            for jid in sorted(cand, key=self.srsf_key_running):
+            for qpos, jid in enumerate(sorted(cand, key=self.srsf_key_running)):
                 run = self._runs[jid]
                 if run.comm_active or jid in self._active_comm:
                     # defensive mirror of the rescan's cleanup path
@@ -1266,7 +1382,7 @@ class EventEngine:
                     cand.discard(jid)
                     restart = True
                     break
-                if self._gate_try_one(jid, run, now):
+                if self._gate_try_one(jid, run, now, qpos):
                     any_started = True
                     cand.discard(jid)
                     # the start dirtied its domains: merge the woken
@@ -1318,6 +1434,8 @@ class EventEngine:
             self._first_placed.get(jid, run.placed_at) - run.spec.arrival
         )
         self._job_samples[jid] = run.samples_done
+        if self._obs is not None:
+            self._obs.finished(jid, run, now)
         if self._source is not None:
             # streaming feed: drop the finished run's state at the end of
             # this event so memory stays O(live jobs) over a 100k+ replay
@@ -1418,6 +1536,12 @@ class EventEngine:
                 "gpu_done",
                 (gid, jid, w, kind, seg, self._epoch_of.get(jid, 0)),
             )
+            rc = self._obs_rc
+            if rc is not None:
+                if len(rc) < self._obs_rc_cap:
+                    rc.extend((jid, w, kind, seg, now, now + dur))
+                else:
+                    self._obs.span_dropped += 1
             if self.record_trace:
                 if kind == "fb":
                     self._trace.append((jid, run.iter_done, "f", w, now, now + run.spec.model.t_f))
@@ -1631,7 +1755,20 @@ class EventEngine:
             # the in-flight task would stall forever.  Policy actions that
             # abort an active transfer (preemption) also change the rates.
             if started or finished_comms or kind == "comm_check" or self._comm_dirty:
-                self._reschedule_comm_check()
+                if prof is not None:
+                    # The finish-time re-prediction belongs to gating when it
+                    # was forced by a gating/abort action this event (a new
+                    # transfer started or the rate set was invalidated), and
+                    # to comm integration when it merely tracks transfers
+                    # draining on a stable rate set.
+                    t4 = perf()
+                    self._reschedule_comm_check()
+                    phase = (
+                        "gating" if (self._comm_dirty or started) else "comm_advance"
+                    )
+                    prof[phase] += perf() - t4
+                else:
+                    self._reschedule_comm_check()
             if self._retire_buf:
                 self._retire_finished()
 
@@ -1675,6 +1812,14 @@ class EventEngine:
         util = (
             sum(busy.values()) / (len(busy) * makespan) if makespan > 0 else 0.0
         )
+        obs_report = None
+        if self._obs is not None:
+            obs_report = self._obs.build_report(
+                topology=self.topology,
+                params=self.params,
+                makespan=makespan,
+                horizon=now,
+            )
         return SimResult(
             policy_name=self.comm_policy.name,
             placement_name=repr(self.placement),
@@ -1709,4 +1854,5 @@ class EventEngine:
             phase_seconds=(
                 dict(self._phase_seconds) if self._phase_seconds else None
             ),
+            obs=obs_report,
         )

@@ -49,6 +49,7 @@ from typing import List, Optional, Sequence
 from repro.core.adadual import (
     adadual_should_start,
     kway_adadual_should_start,
+    kway_lookahead_costs,
     srsf_n_should_start,
 )
 from repro.core.cluster import JobSpec
@@ -90,6 +91,19 @@ class CommPolicy:
     ) -> bool:
         raise NotImplementedError
 
+    def explain(
+        self,
+        new_bytes: float,
+        old_remaining: Sequence[float],
+        max_concurrent: int,
+        params: ContentionParams,
+    ) -> Optional[dict]:
+        """The terms ``should_start`` evaluated, for the observability audit
+        log (``ObsConfig(audit=True)``).  Purely diagnostic: never consulted
+        by the engine's gating loop, so a policy without an override simply
+        audits as decision-only (``None``)."""
+        return None
+
 
 class SrsfN(CommPolicy):
     """SRSF(n): accept at most n-way contention, blindly (paper baselines)."""
@@ -103,6 +117,13 @@ class SrsfN(CommPolicy):
     def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
         return srsf_n_should_start(max_concurrent, self.n)
 
+    def explain(self, new_bytes, old_remaining, max_concurrent, params):
+        return {
+            "rule": "max_concurrent + 1 <= n",
+            "max_concurrent": max_concurrent,
+            "n": self.n,
+        }
+
 
 class AdaDual(CommPolicy):
     """The paper's AdaDUAL (Algorithm 2)."""
@@ -115,6 +136,17 @@ class AdaDual(CommPolicy):
 
     def should_start(self, new_bytes, old_remaining, max_concurrent, params) -> bool:
         return adadual_should_start(new_bytes, old_remaining, max_concurrent, params)
+
+    def explain(self, new_bytes, old_remaining, max_concurrent, params):
+        min_old = min(old_remaining) if old_remaining else float("inf")
+        ratio = (new_bytes / min_old) if min_old > 0 else float("inf")
+        return {
+            "rule": "new/min(old) < threshold and k+1 <= 2",
+            "min_old_bytes": min_old,
+            "ratio": ratio,
+            "threshold": params.dual_threshold,
+            "cap_ok": max_concurrent + 1 <= 2,
+        }
 
 
 class KWayAdaDual(CommPolicy):
@@ -131,6 +163,24 @@ class KWayAdaDual(CommPolicy):
         return kway_adadual_should_start(
             new_bytes, old_remaining, params, max_ways=self.max_ways
         )
+
+    def explain(self, new_bytes, old_remaining, max_concurrent, params):
+        olds = [m for m in old_remaining if m > 0]
+        k = len(olds)
+        terms = {
+            "rule": "avg(start now) < avg(wait for first old)",
+            "k_in_flight": k,
+            "max_ways": self.max_ways,
+        }
+        if k == 0:
+            terms["clean_link"] = True
+        elif k + 1 > self.max_ways:
+            terms["ways_capped"] = True
+        else:
+            avg_a, avg_b = kway_lookahead_costs(new_bytes, olds, params)
+            terms["t_contend_avg"] = avg_a
+            terms["t_wait_avg"] = avg_b
+        return terms
 
 
 def comm_policy_from_name(comm: str) -> CommPolicy:

@@ -102,6 +102,7 @@ def simulate(
     max_time: float = math.inf,
     gating: Optional[str] = None,
     profile_phases: bool = False,
+    observe: Optional[object] = None,
 ) -> SimResult:
     """One-call simulation with string-configured policies.
 
@@ -114,6 +115,11 @@ def simulate(
     bit-exact event streams either way, see core/engine.py.
     profile_phases=True records per-phase wall-clock totals in
     ``SimResult.phase_seconds``.
+    observe (a ``repro.obs.ObsConfig`` or None) arms the contention
+    observability layer — JCT decomposition, per-domain timelines, the
+    gating audit log, and Perfetto span export — in ``SimResult.obs``.
+    None (or an all-off config) keeps every hook cold: the run is
+    bit-exact with, and as fast as, an unobserved one.
 
     comm: 'ada' (AdaDUAL), 'srsf1'/'srsf2'/'srsf3', or 'kway2'/'kway3'/'kway4'.
     placement: 'rand' | 'ff' | 'ls' | 'lwf' | 'lwf_rack'.
@@ -165,5 +171,6 @@ def simulate(
         chaos=chaos,
         gating=gating,
         profile_phases=profile_phases,
+        observe=observe,
     )
     return sim.run(max_time=max_time)

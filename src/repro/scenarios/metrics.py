@@ -45,6 +45,9 @@ CSV_FIELDS = (
     "p99_jct",
     "goodput",
     "wall_s",
+    "peak_calendar",
+    "stretch_frac",
+    "gating_frac",
 )
 
 
@@ -85,12 +88,26 @@ class RunMetrics:
     work_lost: int = 0
     p99_jct: float = math.nan
     goodput: float = 0.0
+    #: event-calendar high-water mark (O(cluster) bound check; 0 = fluid
+    #: backend or pre-obs record)
+    peak_calendar: int = 0
+    #: observability-layer JCT decomposition aggregates (repro.obs): mean
+    #: fraction of a finished job's JCT lost to contention stretch /
+    #: gating wait.  NaN when the run was not observed
+    #: (``observe=None``) — absent data, not zero.
+    stretch_frac: float = math.nan
+    gating_frac: float = math.nan
 
     def as_csv_row(self) -> str:
         vals = []
         for f in CSV_FIELDS:
             v = getattr(self, f)
-            vals.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+            if isinstance(v, float):
+                # fractions are small (often < 0.01): two decimals would
+                # round every cell to 0.00
+                vals.append(f"{v:.4f}" if f.endswith("_frac") else f"{v:.2f}")
+            else:
+                vals.append(str(v))
         return ",".join(vals)
 
     @staticmethod
@@ -121,6 +138,9 @@ def from_jcts(
     work_lost: int = 0,
     p99_jct: Optional[float] = None,
     goodput: float = 0.0,
+    peak_calendar: int = 0,
+    stretch_frac: float = math.nan,
+    gating_frac: float = math.nan,
 ) -> RunMetrics:
     jcts = [float(x) for x in jcts]
     n_fin = len(jcts)
@@ -149,6 +169,9 @@ def from_jcts(
         work_lost=work_lost,
         p99_jct=percentile(jcts, 0.99) if p99_jct is None else float(p99_jct),
         goodput=goodput,
+        peak_calendar=peak_calendar,
+        stretch_frac=stretch_frac,
+        gating_frac=gating_frac,
     )
 
 
@@ -182,6 +205,13 @@ def from_event_result(
         work_lost=res.work_lost_samples,
         p99_jct=res.p99_jct(),
         goodput=res.goodput,
+        peak_calendar=res.peak_calendar,
+        stretch_frac=(
+            res.obs.mean_stretch_frac() if res.obs is not None else math.nan
+        ),
+        gating_frac=(
+            res.obs.mean_gating_frac() if res.obs is not None else math.nan
+        ),
     )
 
 
@@ -203,6 +233,10 @@ def replay_summary(
         events=float(res.events_processed),
         peak_calendar=float(res.peak_calendar),
     )
+    if res.phase_seconds:
+        # profile_phases=True: where the simulator's own wall-clock went
+        # (comm integration / event dispatch / gating / GPU scheduling)
+        out.update({f"phase_{k}_s": float(v) for k, v in res.phase_seconds.items()})
     return out
 
 

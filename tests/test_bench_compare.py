@@ -1,0 +1,58 @@
+"""``benchmarks/compare.py`` gate behavior: regression detection, the
+vanished-key warning (a renamed bench cell must not silently detach from
+the gate), and the --max-wall absolute bound."""
+
+import json
+
+import pytest
+
+from benchmarks.compare import compare_pair, main, throughput_keys, vanished_keys
+
+
+def write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+class TestComparePair:
+    def test_detects_regression_and_pass(self, tmp_path):
+        base = write(tmp_path, "b.json", {"events_per_sec": 100.0})
+        ok = write(tmp_path, "ok.json", {"events_per_sec": 95.0})
+        bad = write(tmp_path, "bad.json", {"events_per_sec": 50.0})
+        _, regs, warns = compare_pair(base, ok, threshold=0.2)
+        assert regs == [] and warns == []
+        _, regs, _ = compare_pair(base, bad, threshold=0.2)
+        assert len(regs) == 1 and "events_per_sec" in regs[0]
+
+    def test_vanished_key_warns_but_does_not_fail(self, tmp_path):
+        base = write(
+            tmp_path, "b.json",
+            {"events_per_sec": 100.0, "stress_events_per_sec": 40.0},
+        )
+        cur = write(tmp_path, "c.json", {"events_per_sec": 100.0})
+        lines, regs, warns = compare_pair(base, cur, threshold=0.2)
+        assert regs == []
+        assert len(warns) == 1 and "stress_events_per_sec" in warns[0]
+        assert any("MISSING" in ln for ln in lines)
+        # exit code stays 0: a warning, not a gate failure
+        assert main([base, cur]) == 0
+
+    def test_key_helpers(self):
+        base = {"a_per_sec": 1.0, "b_per_sec": 2.0, "wall_s": 9.0, "note": "x"}
+        cur = {"a_per_sec": 1.1, "b_per_sec": "broken"}
+        assert throughput_keys(base, cur) == ["a_per_sec"]
+        assert vanished_keys(base, cur) == ["b_per_sec"]
+
+    def test_regression_exits_nonzero(self, tmp_path):
+        base = write(tmp_path, "b.json", {"events_per_sec": 100.0})
+        bad = write(tmp_path, "bad.json", {"events_per_sec": 10.0})
+        assert main([base, bad]) == 1
+
+    def test_max_wall_bound(self, tmp_path):
+        base = write(tmp_path, "b.json", {"events_per_sec": 1.0, "wall_s": 5.0})
+        cur = write(tmp_path, "c.json", {"events_per_sec": 1.0, "wall_s": 7.0})
+        assert main([base, cur, "--max-wall", "wall_s=10"]) == 0
+        assert main([base, cur, "--max-wall", "wall_s=6"]) == 1
+        # absent bound key fails too (rename must not disarm the bound)
+        assert main([base, cur, "--max-wall", "gone_s=6"]) == 1

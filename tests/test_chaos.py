@@ -318,6 +318,39 @@ class TestCensoredUnderFaults:
         assert res.cancelled == 0
         assert res.jct == base.jct
 
+    def test_cancelled_job_trace_ends_with_cancel_marker(self):
+        """``record_trace=True`` through a cancellation: the victim's
+        records stop at the cancel instant, a ``cancel`` marker closes its
+        trace, and the bystander's trace stays a full clean incarnation."""
+        jobs = [
+            JobSpec(0, 0.0, 2, 500, RESNET),  # doomed long job
+            JobSpec(1, 0.0, 2, 3, RESNET),  # finishes before the cancel
+        ]
+        chaos = ChaosSpec(seed=5, cancel_prob=0.5, cancel_after_s=2.0)
+        res = run_static(jobs, chaos=chaos, record_trace=True, fuse_fb=False)
+        assert res.cancelled >= 1 and res.work_lost_samples > 0
+        cancelled = [r[0] for r in res.task_trace if r[2] == "cancel"]
+        assert len(cancelled) == res.cancelled
+        for jid in cancelled:
+            recs = [r for r in res.task_trace if r[0] == jid]
+            t_cancel = recs[-1][4]
+            assert recs[-1][2] == "cancel", "cancel marker must close the trace"
+            for (_, _, kind, _, t0, t1) in recs[:-1]:
+                # nothing is scheduled after the cancel; records may END
+                # past it only as the planned end of the in-flight work
+                # the cancel killed (compute records carry the end they
+                # were scheduled with; an in-flight all-reduce stays
+                # tombstoned with an open end)
+                assert t0 <= t_cancel + 1e-9
+                if t1 is None:
+                    assert kind.startswith("c")
+        survivors = set(res.jct)
+        assert survivors, "the short bystander should have finished"
+        for jid in survivors:
+            recs, markers = job_records(res.task_trace, jid)
+            spec = jobs[jid]
+            validate_preempted_job_trace(spec, recs, markers)
+
 
 # ---------------------------------------------------------------------------
 # Stragglers + NIC degradation (directed)

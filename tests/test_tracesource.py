@@ -79,6 +79,70 @@ class TestStreamingEquivalence:
             simulate(Duped(), n_servers=4, gpus_per_server=4)
 
 
+class TestStreamingTraceRecords:
+    """``record_trace=True`` through the streaming path — previously the
+    task-trace recorder was only exercised with materialized job lists
+    (and only fault-free)."""
+
+    def test_streaming_trace_identical_under_preemption_and_chaos(self):
+        """Streaming mode emits the bit-identical task trace, including
+        the preempt markers of chaos teardowns and the re-executed
+        (aborted-incarnation) iterations behind them."""
+        from repro.core.chaos import ChaosSpec
+
+        jobs = small_trace(n_jobs=30)
+        # failure instants deliberately off any round number: the event
+        # calendar breaks exactly-coincident timestamps by insertion
+        # order, which streaming (lazy arrival pushes) permutes — a
+        # failure landing exactly on a quantum tick resolves differently
+        # per mode.  Both resolutions are valid simulations; bit-equality
+        # is only promised for non-coincident event times.
+        chaos = ChaosSpec(
+            seed=3, scripted_failures=((0, 4.0314, 6.0272), (1, 9.0718, 10.0281))
+        )
+        kw = dict(
+            comm="ada", sched="preemptive_srsf", n_servers=4,
+            gpus_per_server=4, record_trace=True, fuse_fb=False,
+            chaos=chaos, checkpoint_cost=0.02,
+        )
+        lst = simulate(jobs, **kw)
+        stream = simulate(ListTraceSource(jobs), **kw)
+        assert lst.preemptions > 0  # the cell actually tears gangs down
+        assert lst.work_lost_samples > 0
+        assert stream.task_trace == lst.task_trace
+        assert stream.finish == lst.finish
+        markers = [r for r in lst.task_trace if r[2] == "preempt"]
+        assert markers, "no preempt markers in the recorded trace"
+
+    def test_censored_stream_trace_stops_at_horizon(self):
+        """Cutting a streamed, traced run at ``max_time``: every record
+        *starts* inside the horizon, only censored jobs' in-flight work
+        may end past it (compute records carry their planned end from
+        schedule time), in-flight comm records are tombstoned (open end),
+        and censored jobs leave partial records rather than vanishing."""
+        jobs = small_trace()
+        # cut mid-first-iteration of a late arrival so at least one seen
+        # job is provably in flight at the horizon
+        cut = jobs[40].arrival + 0.01
+        res = simulate(
+            ListTraceSource(jobs), comm="ada", n_servers=4,
+            gpus_per_server=4, record_trace=True, fuse_fb=False,
+            max_time=cut,
+        )
+        assert res.censored > 0
+        finished = set(res.jct)
+        for (jid, _it, kind, _w, t0, t1) in res.task_trace:
+            assert t0 <= cut + 1e-9  # nothing is scheduled past the cut
+            if t1 is None:  # comm in flight at the cut: never patched
+                assert kind.startswith("c")
+                assert jid not in finished
+            elif t1 > cut + 1e-9:
+                # planned end past the horizon: only censored in-flight work
+                assert jid not in finished
+        traced = {r[0] for r in res.task_trace}
+        assert traced - finished, "censored jobs left no trace records"
+
+
 class TestSyntheticSource:
     def test_deterministic_and_restartable(self):
         src = SyntheticTraceSource(n_jobs=50, seed=3)
